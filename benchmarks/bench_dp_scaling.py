@@ -1,0 +1,64 @@
+"""Thm 4.5 / 5.2 complexity table: DP preprocessing wall-time scaling in
+n (nodes), |V| (support) and the skip variant's extra factor n, plus the
+Pallas bellman_backup kernel (interpret mode) for the fused path."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.line_dp import solve_line
+from repro.core.markov import MarkovChain
+from repro.core.skip_dp import edge_costs_skip_free, solve_skip
+from repro.core.support import Support
+from repro.core.traces import random_instance
+
+
+def _mk(rng, n, k):
+    p0, trans, costs, grid = random_instance(rng, n, k)
+    g = jnp.asarray(grid, jnp.float32)
+    sup = Support(grid=g, edges=(g[1:] + g[:-1]) / 2)
+    chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                        trans=jnp.asarray(trans, jnp.float32))
+    return chain, jnp.asarray(costs, jnp.float32), sup
+
+
+def _time(f, reps=3):
+    f()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(1)
+    rows = []
+    base = None
+    for n, k in [(8, 32), (16, 32), (32, 32), (16, 64), (16, 128)]:
+        chain, costs, sup = _mk(rng, n, k)
+        us = _time(lambda: solve_line(chain, costs, sup).value)
+        if base is None:
+            base = us
+        rows.append({"name": f"line_dp_n={n}_K={k}", "us_per_call": us,
+                     "derived": f"vs_base={us / base:.2f}x"})
+    for n, k in [(8, 16), (16, 16), (32, 16)]:
+        chain, costs, sup = _mk(rng, n, k)
+        ec = edge_costs_skip_free(np.asarray(costs))
+        us = _time(lambda: solve_skip(chain, ec, sup).value, reps=1)
+        rows.append({"name": f"skip_dp_n={n}_K={k}", "us_per_call": us,
+                     "derived": "O(n^2 K^2) preprocessing (Thm 5.2)"})
+    # fused kernel path
+    chain, costs, sup = _mk(rng, 16, 126)
+    us_j = _time(lambda: solve_line(chain, costs, sup).value)
+    us_k = _time(lambda: solve_line(chain, costs, sup,
+                                    use_kernel=True).value, reps=1)
+    rows.append({"name": "line_dp_K=126_jnp", "us_per_call": us_j,
+                 "derived": "gather+matmul unfused"})
+    rows.append({"name": "line_dp_K=126_pallas_interp", "us_per_call": us_k,
+                 "derived": "bellman_backup kernel (interpret; TPU target "
+                            "fuses min-gather into MXU matmul)"})
+    return rows

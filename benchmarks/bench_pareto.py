@@ -1,0 +1,57 @@
+"""Figs. 4-5 analogue: accuracy-latency Pareto frontiers on early-exit
+workloads (recall-index vs confidence thresholds vs oracle), swept over
+lambda.  Traces come from the synthetic EE workload generator (offline
+container; DESIGN.md §6) — the same pipeline accepts traces exported from
+a trained checkpoint via examples/train_ee.py.
+
+Emits benchmarks/results/pareto_points.csv and reports the headline
+trade-off (latency at <=2% / <=7% error sacrifice, cf. paper Fig. 4a
+"latency to 45% at <7% accuracy loss")."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import pareto, traces
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def run() -> list[dict]:
+    os.makedirs(RESULTS, exist_ok=True)
+    rng = np.random.default_rng(4)
+    losses, correct, flops = traces.ee_like_traces(rng, 24_000, 8,
+                                                   overthink_prob=0.2)
+    lambdas = np.concatenate([np.linspace(0.05, 0.95, 10),
+                              [0.98, 0.995, 0.999]])
+    t0 = time.perf_counter()
+    pts = pareto.sweep(losses, correct, flops, lambdas, k=32)
+    us = (time.perf_counter() - t0) * 1e6
+
+    with open(os.path.join(RESULTS, "pareto_points.csv"), "w") as f:
+        f.write("policy,lambda,error,latency,objective,mean_probed\n")
+        for p in pts:
+            f.write(f"{p.policy},{p.lam},{p.error},{p.latency},"
+                    f"{p.objective},{p.mean_probed}\n")
+
+    rows = []
+    full_err = min(p.error for p in pts if p.policy == "always_last")
+    for fam, prefix in [("recall_index", "recall_index"),
+                        ("norecall_thr", "norecall_thr"),
+                        ("oracle", "oracle")]:
+        front = pareto.pareto_filter(pts, prefix)
+        # latency needed to stay within +2% / +7% error of the backbone
+        def lat_at(slack):
+            ok = [p.latency for p in front if p.error <= full_err + slack]
+            return min(ok) if ok else 1.0
+        rows.append({
+            "name": f"pareto_{fam}",
+            "us_per_call": us / 3,
+            "derived": (f"lat@+2%err={lat_at(0.02):.2f} "
+                        f"lat@+7%err={lat_at(0.07):.2f} "
+                        f"points={len(front)}"),
+        })
+    return rows

@@ -1,0 +1,47 @@
+"""Thm 4.5 inference-cost table: the recall-index policy is an O(1)/node
+table lookup — per-sample decision latency vs n and batch size (jit'd,
+vectorized), the number the serving engine pays per segment."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies
+from repro.core.line_dp import solve_line
+from repro.core.markov import MarkovChain, sample_chain
+from repro.core.support import Support
+from repro.core.traces import random_instance
+
+
+def run() -> list[dict]:
+    rng = np.random.default_rng(2)
+    rows = []
+    for n, t in [(6, 4096), (12, 4096), (24, 4096), (12, 65_536)]:
+        p0, trans, costs, grid = random_instance(rng, n, 32)
+        g = jnp.asarray(grid, jnp.float32)
+        sup = Support(grid=g, edges=(g[1:] + g[:-1]) / 2)
+        chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                            trans=jnp.asarray(trans, jnp.float32))
+        cj = jnp.asarray(costs, jnp.float32)
+        tables = solve_line(chain, cj, sup)
+        bins = sample_chain(chain, jax.random.PRNGKey(0), t)
+        losses = g[bins]
+
+        fn = jax.jit(lambda l, b: policies.recall_index(
+            tables, l, b, cj).served_node)
+        fn(losses, bins).block_until_ready()
+        t0 = time.perf_counter()
+        reps = 10
+        for _ in range(reps):
+            fn(losses, bins).block_until_ready()
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({
+            "name": f"policy_lookup_n={n}_batch={t}",
+            "us_per_call": us,
+            "derived": f"ns_per_sample_per_node={us * 1e3 / (t * n):.1f}",
+        })
+    return rows

@@ -1,0 +1,84 @@
+"""§Roofline table (deliverable g): per (arch x shape x mesh), the three
+roofline terms derived from the compiled dry-run artifacts, the dominant
+bottleneck, and the useful-compute ratio.
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective term = wire_bytes / (chips x 50 GB/s ICI per link)
+
+HLO_FLOPs / bytes / wire_bytes are PER-DEVICE numbers from the trip-count
+-aware HLO walker (launch/hlo_cost.py), so the division by chips is
+already folded in — terms are seconds for one step.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun);
+writes benchmarks/results/roofline.csv.  Combos whose dry-run hasn't been
+executed yet are skipped with a note.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def load_all() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def terms(rec: dict) -> dict:
+    t_c = rec["flops_per_device"] / PEAK_FLOPS
+    t_m = rec["hbm_bytes_per_device"] / HBM_BW
+    t_x = rec["wire_bytes_per_device"] / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    total_flops = rec["flops_per_device"] * rec["devices"]
+    ratio = rec["model_flops"] / total_flops if total_flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom, "useful_ratio": ratio,
+            "roofline_frac": t_c / bound if bound else 0.0}
+
+
+def run() -> list[dict]:
+    rows = []
+    recs = load_all()
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.csv"), "w") as f:
+        f.write("arch,shape,mesh,rules,t_compute_s,t_memory_s,"
+                "t_collective_s,dominant,useful_ratio,roofline_frac,"
+                "temp_gib\n")
+        for rec in recs:
+            t = terms(rec)
+            f.write(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+                    f"{rec['rules']},{t['t_compute']:.4g},"
+                    f"{t['t_memory']:.4g},{t['t_collective']:.4g},"
+                    f"{t['dominant']},{t['useful_ratio']:.3f},"
+                    f"{t['roofline_frac']:.3f},"
+                    f"{rec['memory']['temp_bytes'] / 2**30:.2f}\n")
+            if rec["rules"] == "baseline" and rec["mesh"] == "pod16x16":
+                rows.append({
+                    "name": f"roofline_{rec['arch']}_{rec['shape']}",
+                    "us_per_call": t["t_compute"] * 1e6,
+                    "derived": (f"dom={t['dominant']} "
+                                f"mem_s={t['t_memory']:.3g} "
+                                f"coll_s={t['t_collective']:.3g} "
+                                f"useful={t['useful_ratio']:.2f} "
+                                f"frac={t['roofline_frac']:.2f}"),
+                })
+    if not rows:
+        rows.append({"name": "roofline", "us_per_call": 0.0,
+                     "derived": "no dryrun artifacts yet — run "
+                                "python -m repro.launch.dryrun --all"})
+    return rows

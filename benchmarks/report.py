@@ -1,0 +1,46 @@
+"""Render EXPERIMENTS.md §Roofline / §Dry-run tables from the dry-run
+JSONs.  Usage: PYTHONPATH=src python -m benchmarks.report [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.bench_roofline import load_all, terms
+
+SUGGEST = {
+    ("compute",): "raise arithmetic intensity (fuse attention via the "
+                  "Pallas kernel; larger microbatch)",
+    ("memory",): "cut HBM round-trips: fuse attention scores (flash), "
+                 "bf16 caches, avoid f32 converts of logits",
+    ("collective",): "reshard: fewer weight all-gathers (cache across "
+                     "microbatches), reduce-scatter grads, 2D logit "
+                     "sharding",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--rules", default=None)
+    args = ap.parse_args()
+    recs = load_all()
+    if args.mesh:
+        recs = [r for r in recs if r["mesh"] == args.mesh]
+    if args.rules:
+        recs = [r for r in recs if r["rules"] == args.rules]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"], r["rules"]))
+    print("| arch | shape | mesh | rules | compute s | memory s | "
+          "collective s | dominant | useful | temp GiB |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        t = terms(r)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['rules']} "
+              f"| {t['t_compute']:.3g} | {t['t_memory']:.3g} "
+              f"| {t['t_collective']:.3g} | {t['dominant']} "
+              f"| {t['useful_ratio']:.2f} "
+              f"| {r['memory']['temp_bytes'] / 2**30:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point (deliverable d): one module per paper
+table/figure.  Prints ``name,us_per_call,derived`` CSV.
+
+  python -m benchmarks.run [--only impossibility,pareto,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "impossibility",   # Thm 3.4 ratio table
+    "dp_scaling",      # Thm 4.5 / 5.2 preprocessing complexity
+    "policy_latency",  # Thm 4.5 O(1)/node inference cost
+    "ifstop",          # Fig. 8 if-stop matrices (synthetic)
+    "pareto",          # Figs. 4-5 accuracy-latency frontiers
+    "dag",             # §5 skip/tree value + optimality-gap
+    "serving",         # engine-level EE savings (§6 serving analogue)
+    "roofline",        # EXPERIMENTS.md §Roofline (reads dryrun JSONs)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    todo = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in todo:
+        try:
+            mod = importlib.import_module(f"benchmarks.bench_{mod_name}")
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}",
+                      flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"bench_{mod_name},-1,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

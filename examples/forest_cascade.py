@@ -1,0 +1,76 @@
+"""Forest / multi-line cascade (§5.1, Thm C.7): the serving platform
+holds TWO independent cascades for the same task — a fast 2-stage line
+and an accurate 3-stage line — and T-Tamer's generalized dynamic index
+decides, query by query, which branch to probe next and when to stop
+(probing can interleave between branches!).
+
+  PYTHONPATH=src python examples/forest_cascade.py
+"""
+
+import numpy as np
+
+from repro.core import tree_dp
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    k = 8
+    grid = np.linspace(0.05, 1.0, k)
+
+    # Branch A: cheap 2-stage cascade (fast, mediocre).
+    # Branch B: expensive 3-stage cascade (slow, accurate).
+    def line_dists(qualities, sharp):
+        """Per-node conditional loss dists: better nodes put mass low."""
+        p0 = np.exp(-sharp * np.abs(grid - qualities[0]))
+        p0 /= p0.sum()
+        trans = []
+        for q in qualities[1:]:
+            t = np.zeros((k, k))
+            for s in range(k):
+                center = 0.6 * grid[s] + 0.4 * q   # correlated w/ parent
+                row = np.exp(-sharp * np.abs(grid - center))
+                t[s] = row / row.sum()
+            trans.append(np.asarray(t))
+        return p0, trans
+
+    p0a, ta = line_dists([0.55, 0.40], sharp=6.0)
+    p0b, tb = line_dists([0.50, 0.30, 0.12], sharp=6.0)
+    lam = 0.75
+    costs_a = (1 - lam) * np.array([0.08, 0.20])
+    costs_b = (1 - lam) * np.array([0.10, 0.30, 0.55])
+
+    forest = tree_dp.forest_from_lines([
+        (p0a, ta, costs_a, grid), (p0b, tb, costs_b, grid)])
+
+    opt = tree_dp.solve_forest_exact(forest)
+    pol = tree_dp.index_policy_value(forest)
+    print(f"expectimax optimum: {lam * 0 + opt:.4f}")
+    print(f"dynamic-index policy (Thm C.7): {pol:.4f} "
+          f"(gap {abs(pol - opt):.2e} — provably 0)")
+
+    # simulate on sampled realizations
+    t = 4000
+    bins = np.zeros((t, forest.n), np.int64)
+    bins[:, 0] = rng.choice(k, size=t, p=p0a)
+    for i, tr in enumerate(ta):
+        for s in range(k):
+            m = bins[:, i] == s
+            bins[m, i + 1] = rng.choice(k, size=m.sum(), p=tr[s])
+    base = len(costs_a)
+    bins[:, base] = rng.choice(k, size=t, p=p0b)
+    for i, tr in enumerate(tb):
+        for s in range(k):
+            m = bins[:, base + i] == s
+            bins[m, base + i + 1] = rng.choice(k, size=m.sum(), p=tr[s])
+
+    served, spent, nprobe = tree_dp.simulate_forest(forest, bins)
+    print(f"\nsimulated objective: {(served + spent).mean():.4f} "
+          f"(mean nodes probed {nprobe.mean():.2f} of {forest.n})")
+    print("interpretation: the index policy starts with the cheaper "
+          "branch and escalates to the accurate cascade only for queries "
+          "whose early losses stay high — interleaving two cascades "
+          "without any hand-written routing rule.")
+
+
+if __name__ == "__main__":
+    main()

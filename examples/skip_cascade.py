@@ -1,0 +1,106 @@
+"""Inter-model cascade with SKIPS (§5.2): three decoders of increasing
+size form the transitive closure of a line — the policy may jump straight
+from the small model to the large one, skipping the middle, based on the
+calibrated Markov structure of their losses.
+
+  PYTHONPATH=src python examples/skip_cascade.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import dense_decoder
+from repro.core import skip_dp
+from repro.core.markov import estimate_chain
+from repro.core.support import build_support, quantize
+from repro.models import model as M
+from repro.models.param import count_params, materialize
+
+
+def make_family():
+    """Small / medium / large single-exit decoders."""
+    sizes = [(2, 96), (2, 192), (4, 256)]
+    cfgs = []
+    for i, (layers, d) in enumerate(sizes):
+        c = dense_decoder(f"cascade-{i}", n_layers=layers, d_model=d,
+                          n_heads=4, n_kv_heads=4, head_dim=d // 4,
+                          d_ff=2 * d, vocab=512, n_segments=1, act="gelu")
+        cfgs.append(c)
+    return cfgs
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    cfgs = make_family()
+    models = []
+    for cfg in cfgs:
+        defs = M.model_defs(cfg)
+        models.append((cfg, materialize(defs, key)))
+        print(f"{cfg.name}: {count_params(defs) / 1e6:.2f}M params")
+
+    # 1. Collect per-model loss traces on a shared query stream.
+    t, seq = 2_000, 24
+    toks = jax.random.randint(key, (t, seq), 0, 512)
+    losses = []
+    for cfg, params in models:
+        _, _, node_losses, _ = M.prefill(params, cfg, {"tokens": toks},
+                                         cache_len=seq + 8)
+        losses.append(np.asarray(node_losses)[:, -1])   # final node proxy
+    losses = np.stack(losses, axis=1)                   # (T, 3)
+
+    # Random-init models are equally (un)confident, which collapses the
+    # cascade; emulate trained checkpoints by shaping: each model solves
+    # queries up to its capacity, larger models extend the range.  (With
+    # real trained checkpoints — examples/train_ee.py — drop this block.)
+    rng = np.random.default_rng(0)
+    hardness = rng.uniform(0, 1, size=(losses.shape[0], 1))
+    capacity = np.array([[0.35, 0.65, 0.95]])
+    solved = hardness <= capacity
+    # unsolved loss grows with hardness, so the small model's loss REVEALS
+    # how hard the query is — exactly the signal that makes jumping
+    # straight to the large model optimal for the hardest band.
+    losses = np.where(solved, 0.05 * losses + 0.02,
+                      0.25 + 0.65 * hardness + 0.05 * losses) \
+        + rng.normal(0, 0.01, losses.shape)
+    losses = np.clip(losses, 1e-3, 1.0)
+
+    # 2. Costs proportional to model FLOPs; skipping the middle model
+    #    avoids its cost entirely (edge_costs_skip_free).
+    lam = 0.75
+    rel = np.array([count_params(M.model_defs(c)) for c in cfgs],
+                   np.float64)
+    rel = rel / rel.sum()
+    scaled = lam * losses
+    costs = (1 - lam) * rel
+
+    fit, ev = scaled[:t // 2], scaled[t // 2:]
+    support = build_support(fit, 24)
+    chain = estimate_chain(quantize(support, jnp.asarray(fit)), 24)
+
+    ec = skip_dp.edge_costs_skip_free(costs)
+    tables = skip_dp.solve_skip(chain, ec, support)
+    print(f"\nskip-cascade online-optimal objective: "
+          f"{float(tables.value):.4f}")
+
+    bins = np.asarray(quantize(support, jnp.asarray(ev)))
+    served, spent, probed = skip_dp.simulate_skip(tables, ev, bins, ec)
+    print(f"policy on eval traces: objective "
+          f"{float((served + spent).mean()):.4f}, "
+          f"mean models probed {probed.sum(1).mean():.2f}")
+    hist = probed.mean(0)
+    print(f"probe rates per model: small {hist[0]:.2f} "
+          f"medium {hist[1]:.2f} large {hist[2]:.2f}")
+    skipped_middle = float(((probed[:, 0]) & (~probed[:, 1])
+                            & (probed[:, 2])).mean())
+    print(f"fraction skipping straight small->large: {skipped_middle:.2f}")
+
+    # strict-line comparison (no skips): cumulative edge costs
+    ec_line = skip_dp.edge_costs_cumulative(costs)
+    t_line = skip_dp.solve_skip(chain, ec_line, support)
+    print(f"strict-line objective (no skip benefit): "
+          f"{float(t_line.value):.4f}")
+
+
+if __name__ == "__main__":
+    main()

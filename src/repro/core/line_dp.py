@@ -1,0 +1,180 @@
+"""Dynamic-index DP for the directed line (paper §4, Alg. 2, Thm 4.5).
+
+State ``(X, R_{i-1}, i)``: running-min loss X, previous node's binned loss s,
+next candidate node i.  Bellman recursion (§4.2):
+
+    Phi(X, s, i) = min{ X,  c_i + E_{R_i | R_{i-1}=s}[ Phi(min(X, R_i), R_i, i+1) ] }
+
+with base case ``Phi(X, *, n) = X`` (after the last node one must stop and,
+with recall, serve the argmin ramp).
+
+Discretization.  Losses live on the common support ``grid`` (K bins).  The
+running-min X additionally takes two sentinel values: ``0`` (an anchor used
+only for exact off-grid index interpolation — unreachable at runtime) and
+``+inf`` (Alg. 1 initializes X <- inf).  The X axis therefore has K+2
+entries: ``xvals = [0, v_1..v_K, INF]``; a loss bin b maps to X-index b+1.
+
+The backward pass is a sequence of (K x K) @ (K x (K+2)) matmuls over a
+min-gathered table — the exact shape the ``bellman_backup`` Pallas kernel
+fuses on TPU (gather never materialized in HBM).
+
+Exact dynamic index.  Between adjacent X-grid points the continuation value
+``cont(x)`` is *linear* in x (the recursion only branches at support
+values), so the indifference point sigma of Def. 4.4 is recovered exactly
+by linear interpolation at the stop/continue flip — this off-grid sigma is
+what the multi-line / tree index policies compare across branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.markov import MarkovChain
+from repro.core.support import Support
+
+__all__ = ["LineTables", "solve_line", "x_index_of_bin", "INF_SENTINEL_MULT"]
+
+INF_SENTINEL_MULT = 1e4  # sentinel = grid[-1]*MULT + MULT (finite "+inf")
+
+
+def x_values(grid: jax.Array) -> jax.Array:
+    """(K+2,) X axis: [0, v_1..v_K, INF-sentinel]."""
+    big = grid[-1] * INF_SENTINEL_MULT + INF_SENTINEL_MULT
+    zero = jnp.zeros((1,), grid.dtype)
+    return jnp.concatenate([zero, grid, jnp.array([big], grid.dtype)])
+
+
+def x_index_of_bin(bins: jax.Array) -> jax.Array:
+    """Map a loss bin (0..K-1) to its X-axis index (1..K)."""
+    return bins + 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LineTables:
+    cont: jax.Array    # (n, K, K+2) float — continuation values [i, s, x]
+    stop: jax.Array    # (n, K, K+2) bool  — True => stop before probing i
+    phi: jax.Array     # (n+1, K, K+2) float — equivalent-loss tables
+    sigma: jax.Array   # (n, K) float — exact dynamic index sigma(s, i)
+    value: jax.Array   # () float — online-optimal expected total loss
+
+    @property
+    def n(self) -> int:
+        return int(self.cont.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.cont.shape[1])
+
+    @property
+    def inf_x(self) -> int:
+        return self.k + 1
+
+
+def _min_index_matrix(grid: jax.Array) -> jax.Array:
+    """mi[x, y] = X-axis index of min(xvals[x], grid[y])."""
+    k = grid.shape[0]
+    xv = x_values(grid)
+    grid_as_x = jnp.arange(1, k + 1)
+    le = xv[:, None] <= grid[None, :]               # (K+2, K)
+    return jnp.where(le, jnp.arange(k + 2)[:, None], grid_as_x[None, :])
+
+
+def _backup(phi_next, trans_row, cost, xvals, mi, *, use_kernel=False):
+    """cont[s, x] = c + sum_y trans[s, y] * phi_next[y, mi[x, y]]."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        cont = kops.bellman_backup(phi_next, trans_row, cost, mi.T)
+    else:
+        m = jnp.take_along_axis(phi_next, mi.T, axis=1)  # (K, K+2): [y, x]
+        cont = cost + trans_row @ m                      # (K, K+2): [s, x]
+    phi = jnp.minimum(xvals[None, :], cont)
+    return cont, phi
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _solve(p0, trans, costs, grid, *, use_kernel: bool = False):
+    k = p0.shape[0]
+    xvals = x_values(grid)
+    mi = _min_index_matrix(grid)
+    # Node 0 has no predecessor; its "transition row" is p0 for every s.
+    trans_full = jnp.concatenate(
+        [jnp.tile(p0[None, :], (k, 1))[None], trans], axis=0)  # (n, K, K)
+    base = jnp.tile(xvals[None, :], (k, 1))                    # (K, K+2)
+
+    def step(phi_next, inp):
+        tr, c = inp
+        cont, phi = _backup(phi_next, tr, c, xvals, mi, use_kernel=use_kernel)
+        return phi, (cont, phi)
+
+    _, (cont, phi_hist) = jax.lax.scan(
+        step, base, (trans_full[::-1], costs[::-1]))
+    cont = cont[::-1]
+    phi = jnp.concatenate([phi_hist[::-1], base[None]], axis=0)
+
+    # Ties break toward stopping ("smallest solution", Def. 4.4).
+    stop = xvals[None, None, :] <= cont
+
+    # ---- exact sigma via linear interpolation at the flip point ----------
+    # H(x) = cont(x) - x is non-increasing (Lem. B.1); stop region is the
+    # low-x prefix.  Find last stop index q along the X axis, interpolate
+    # between (xvals[q], cont[q]) and (xvals[q+1], cont[q+1]) for cont(x)=x.
+    nx = k + 2
+    stop_f = stop.astype(jnp.float32)
+    q = jnp.sum(stop_f, axis=-1).astype(jnp.int32) - 1   # last stop idx
+    q = jnp.clip(q, 0, nx - 2)
+    x0 = xvals[q]
+    x1 = xvals[q + 1]
+    c0 = jnp.take_along_axis(cont, q[..., None], axis=-1)[..., 0]
+    c1 = jnp.take_along_axis(cont, (q + 1)[..., None], axis=-1)[..., 0]
+    denom = (x1 - x0) - (c1 - c0)
+    sigma = jnp.where(jnp.abs(denom) > 1e-12,
+                      x0 + (c0 - x0) * (x1 - x0) / jnp.maximum(denom, 1e-12),
+                      x0)
+    # If the policy never stops on-grid for this (i, s) (q clipped at 0 but
+    # stop[...,0] False) sigma interpolates on [0, v_1] which is still exact.
+    sigma = jnp.clip(sigma, 0.0, xvals[-1])
+    value = cont[0, 0, nx - 1]  # start: X = inf sentinel, s irrelevant
+    return cont, stop, phi, sigma, value
+
+
+def solve_line(chain: MarkovChain, costs: jax.Array, support: Support,
+               *, use_kernel: bool = False) -> LineTables:
+    """Solve the with-recall line problem (Prob. 4.1) exactly.
+
+    Args:
+      chain: fitted Markov chain over the binned losses (n nodes).
+      costs: (n,) strictly-positive inspection costs c_i (edge costs folded
+        into the destination node, App. C notations / Fig. 6a).
+      support: the common discrete support V.
+      use_kernel: route the Bellman backup through the Pallas kernel.
+    """
+    costs = jnp.asarray(costs, jnp.float32)
+    if costs.shape != (chain.n,):
+        raise ValueError(f"costs shape {costs.shape} != ({chain.n},)")
+    cont, stop, phi, sigma, value = _solve(
+        chain.p0, chain.trans, costs, support.grid, use_kernel=use_kernel)
+    return LineTables(cont=cont, stop=stop, phi=phi, sigma=sigma, value=value)
+
+
+def suffix_tables(chain: MarkovChain, costs: np.ndarray, support: Support,
+                  start: int) -> LineTables:
+    """Tables for the line suffix [start..n) — used by multi-line/tree
+    indices, where a branch's index is computed on its remaining nodes."""
+    if start == 0:
+        return solve_line(chain, costs, support)
+    sub = MarkovChain(p0=chain.p0 @ _chain_prod(chain, 0, start),
+                      trans=chain.trans[start:])
+    return solve_line(sub, jnp.asarray(costs)[start:], support)
+
+
+def _chain_prod(chain: MarkovChain, i: int, j: int) -> jax.Array:
+    acc = jnp.eye(chain.k, dtype=chain.p0.dtype)
+    for t in range(i, j):
+        acc = acc @ chain.trans[t]
+    return acc

@@ -1,0 +1,125 @@
+"""Markov-chain model of per-ramp losses (Problem 2.4's distributional input).
+
+The DP consumes:
+  * ``p0``    — (K,) PMF of the first node's binned loss R_1,
+  * ``trans`` — (n-1, K, K) row-stochastic transition matrices,
+                ``trans[i][s, y] = Pr[R_{i+2} = v_y | R_{i+1} = v_s]``.
+
+Estimation is plain Laplace-smoothed counting over calibration traces
+(T x n binned losses), which is the ``O(n |V|^2 T)`` preprocessing term in
+Thm 4.5 — fitting the tables dominates, the Bellman backward pass is
+``O(n |V|^2)`` matmuls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.support import Support, build_support, quantize
+
+__all__ = ["MarkovChain", "estimate_chain", "sample_chain", "marginals"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MarkovChain:
+    """Discrete Markov chain over a common support of size K with n nodes."""
+
+    p0: jax.Array      # (K,)
+    trans: jax.Array   # (n-1, K, K), row-stochastic
+
+    @property
+    def n(self) -> int:
+        return int(self.trans.shape[0]) + 1
+
+    @property
+    def k(self) -> int:
+        return int(self.p0.shape[0])
+
+
+def estimate_chain(bins: jax.Array, k: int, alpha: float = 0.5) -> MarkovChain:
+    """Fit a MarkovChain from binned calibration traces.
+
+    Args:
+      bins: (T, n) int array of binned losses per sample per node.
+      k: support size.
+      alpha: Laplace smoothing pseudo-count.
+    """
+    bins = jnp.asarray(bins)
+    t, n = bins.shape
+    p0 = jnp.bincount(bins[:, 0], length=k) + alpha
+    p0 = p0 / p0.sum()
+
+    def fit_step(i):
+        # counts[s, y] = #{rows with bins[:,i]==s and bins[:,i+1]==y}
+        idx = bins[:, i] * k + bins[:, i + 1]
+        counts = jnp.bincount(idx, length=k * k).reshape(k, k) + alpha
+        return counts / counts.sum(axis=1, keepdims=True)
+
+    trans = jnp.stack([fit_step(i) for i in range(n - 1)]) if n > 1 else \
+        jnp.zeros((0, k, k), p0.dtype)
+    return MarkovChain(p0=p0.astype(jnp.float32), trans=trans.astype(jnp.float32))
+
+
+def estimate_from_losses(losses: np.ndarray, k: int,
+                         alpha: float = 0.5) -> tuple[MarkovChain, Support]:
+    """Convenience: build support + chain straight from raw loss traces."""
+    support = build_support(losses, k)
+    bins = quantize(support, jnp.asarray(losses))
+    return estimate_chain(bins, k, alpha), support
+
+
+def marginals(chain: MarkovChain) -> jax.Array:
+    """(n, K) marginal PMFs p_i (Chapman-Kolmogorov forward pass)."""
+    out = [chain.p0]
+    p = chain.p0
+    for i in range(chain.n - 1):
+        p = p @ chain.trans[i]
+        out.append(p)
+    return jnp.stack(out)
+
+
+def cumulative_transitions(chain: MarkovChain) -> jax.Array:
+    """(n, n, K, K) products P^{(i->j)} for i<j (identity on diagonal).
+
+    Used by the transitive-closure DP (§5.2): skipping from node i straight
+    to node j needs the j-step-ahead conditional ``Pr[R_j | R_i]``, the
+    product of intermediate transition matrices.
+    Only entries with j > i are meaningful.
+    """
+    n, k = chain.n, chain.k
+    eye = jnp.eye(k, dtype=chain.p0.dtype)
+    out = np.empty((n, n), dtype=object)
+    mats = [[None] * n for _ in range(n)]
+    for i in range(n):
+        acc = eye
+        mats[i][i] = acc
+        for j in range(i + 1, n):
+            acc = acc @ chain.trans[j - 1]
+            mats[i][j] = acc
+    del out
+    return jnp.stack([jnp.stack([mats[i][j] if mats[i][j] is not None else eye
+                                 for j in range(n)]) for i in range(n)])
+
+
+def sample_chain(chain: MarkovChain, key: jax.Array, t: int) -> jax.Array:
+    """Sample (t, n) bin trajectories from the chain (for simulation tests)."""
+    k0, kr = jax.random.split(key)
+    first = jax.random.categorical(k0, jnp.log(chain.p0)[None, :].repeat(t, 0))
+
+    if chain.n == 1:
+        return first[:, None]
+
+    def step(prev, inp):
+        tr, kk = inp
+        logits = jnp.log(tr[prev] + 1e-30)
+        nxt = jax.random.categorical(kk, logits)
+        return nxt, nxt
+
+    keys = jax.random.split(kr, chain.n - 1)
+    _, rest = jax.lax.scan(step, first, (chain.trans, keys))
+    return jnp.concatenate([first[:, None], rest.T], axis=1)

@@ -1,0 +1,113 @@
+"""Accuracy-latency Pareto frontier sweeps (paper §6, Figs. 4-5).
+
+Given per-ramp calibration traces of an EE workload —
+  losses  (T, n): proxy loss per ramp (1 - confidence),
+  correct (T, n): does ramp i's label match the backbone's,
+  flops   (n,):  incremental cost of segment i (normalized so sum == 1) —
+we sweep the trade-off parameter lambda (Def. D.1 latency-aware loss
+``theta = lambda * l_j + (1 - lambda) * sum_k c_k``; the paper swaps
+lambda's role between §1.2 and Def. D.1 — we fix lambda as the *accuracy*
+weight) and, per lambda:
+
+  1. split traces into fit/eval halves,
+  2. build the support + Markov chain on the fit half,
+  3. solve the line DP, and
+  4. run every policy on the eval half, recording
+     (error vs backbone, normalized latency).
+
+Error = 1 - Acc where Acc is agreement with the backbone output (§6
+Metrics); latency is normalized against always running the full backbone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies
+from repro.core.line_dp import solve_line
+from repro.core.markov import estimate_chain
+from repro.core.support import build_support, quantize
+
+__all__ = ["FrontierPoint", "sweep", "pareto_filter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierPoint:
+    policy: str
+    lam: float
+    error: float          # 1 - agreement with backbone
+    latency: float        # normalized expected latency (1.0 = full model)
+    objective: float      # mean theta_lambda achieved
+    mean_probed: float
+
+
+def _metrics(name, lam, res, correct, n) -> FrontierPoint:
+    served = np.asarray(res.served_node)
+    t = served.shape[0]
+    agree = correct[np.arange(t), served]
+    # explore_cost carries the (1-lam) objective weight; normalized
+    # latency divides it back out (flops sum to 1 => latency in (0, 1]).
+    denom = max(1.0 - lam, 1e-9)
+    return FrontierPoint(
+        policy=name,
+        lam=float(lam),
+        error=float(1.0 - agree.mean()),
+        latency=float(np.asarray(res.explore_cost).mean()) / denom,
+        objective=float(np.asarray(res.total).mean()),
+        mean_probed=float(np.asarray(res.n_probed).mean()),
+    )
+
+
+def sweep(losses: np.ndarray, correct: np.ndarray, flops: np.ndarray,
+          lambdas, k: int = 32,
+          thresholds=(0.02, 0.05, 0.1, 0.2, 0.3, 0.5)) -> list[FrontierPoint]:
+    """Run the full policy comparison across the lambda grid."""
+    t, n = losses.shape
+    half = t // 2
+    fit_l, ev_l = losses[:half], losses[half:]
+    ev_c = correct[half:]
+    out: list[FrontierPoint] = []
+    for lam in lambdas:
+        lam = float(lam)
+        scaled_fit = lam * fit_l
+        scaled_ev = jnp.asarray(lam * ev_l)
+        costs = jnp.asarray((1.0 - lam) * flops, jnp.float32)
+        support = build_support(scaled_fit, k)
+        bins_fit = quantize(support, jnp.asarray(scaled_fit))
+        chain = estimate_chain(bins_fit, k)
+        # Guard: DP needs strictly positive costs (Assumption 2.1).
+        costs = jnp.maximum(costs, 1e-6)
+        tables = solve_line(chain, costs, support)
+        bins_ev = quantize(support, scaled_ev)
+
+        res = policies.recall_index(tables, scaled_ev, bins_ev, costs)
+        out.append(_metrics("recall_index", lam, res, ev_c, n))
+        for thr in thresholds:
+            thr_vec = jnp.full((n,), lam * thr, jnp.float32)
+            res = policies.norecall_threshold(scaled_ev, costs, thr_vec)
+            out.append(_metrics(f"norecall_thr={thr}", lam, res, ev_c, n))
+            res = policies.recall_threshold(scaled_ev, costs, thr_vec)
+            out.append(_metrics(f"recall_thr={thr}", lam, res, ev_c, n))
+        res = policies.oracle(scaled_ev, costs)
+        out.append(_metrics("oracle", lam, res, ev_c, n))
+        res = policies.always_last(scaled_ev, costs)
+        out.append(_metrics("always_last", lam, res, ev_c, n))
+    return out
+
+
+def pareto_filter(points: list[FrontierPoint],
+                  by_policy_prefix: str | None = None) -> list[FrontierPoint]:
+    """Non-dominated (error, latency) subset, optionally per policy family."""
+    pts = [p for p in points
+           if by_policy_prefix is None or p.policy.startswith(by_policy_prefix)]
+    pts = sorted(pts, key=lambda p: (p.latency, p.error))
+    front: list[FrontierPoint] = []
+    best_err = np.inf
+    for p in pts:
+        if p.error < best_err - 1e-12:
+            front.append(p)
+            best_err = p.error
+    return front

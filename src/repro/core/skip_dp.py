@@ -1,0 +1,155 @@
+"""Dynamic indexing over the transitive closure of a directed line (§5.2).
+
+After probing node i the policy may jump to ANY later node j > i (skipping
+intermediates), paying edge cost ``C[i+1, j+1]``; the conditional loss
+distribution across the skip is the Chapman-Kolmogorov product
+``P^{(i->j)} = prod_t trans[t]``.  Bellman recursion (App. C.3):
+
+    Phi(X, s, i) = min{ X, min_{j > i} [ C(i,j) + E_{R_j|R_i=s} Phi(min(X,R_j), R_j, j) ] }
+
+Enumerating successors costs an extra factor n over the single line
+(Thm 5.2: O(n^2 |V|^2 T) preprocessing), inference stays O(1)/node via the
+precomputed NEXT table (stop / which node to probe).
+
+X-axis conventions follow ``line_dp`` (K+2 entries: 0, grid, +inf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import line_dp
+from repro.core.markov import MarkovChain
+from repro.core.support import Support
+
+__all__ = ["SkipTables", "solve_skip", "edge_costs_skip_free",
+           "edge_costs_cumulative"]
+
+STOP = -1  # NEXT-table entry meaning "stop and serve the argmin"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SkipTables:
+    value_tab: jax.Array  # (n+1, K, K+2) — V[l+1][s, x]; row 0 = dummy root
+    nxt: jax.Array        # (n+1, K, K+2) int32 — STOP or next node to probe
+    value: jax.Array      # () — online-optimal expected loss from the root
+
+    @property
+    def n(self) -> int:
+        return int(self.value_tab.shape[0]) - 1
+
+    @property
+    def k(self) -> int:
+        return int(self.value_tab.shape[1])
+
+
+def edge_costs_skip_free(costs: np.ndarray) -> np.ndarray:
+    """C[i, j] = c_{j-1}: skipping avoids intermediate costs entirely
+    (inter-model cascades: skipped models are simply never run)."""
+    n = len(costs)
+    c = np.zeros((n + 1, n + 1), np.float32)
+    for j in range(1, n + 1):
+        c[:j, j] = costs[j - 1]
+    return c
+
+
+def edge_costs_cumulative(costs: np.ndarray) -> np.ndarray:
+    """C[i, j] = sum_{t in (i..j]} c_t: skipping still pays the backbone
+    compute of intermediate segments, only their ramp heads are saved
+    (intra-model early exit: you cannot skip backbone layers)."""
+    n = len(costs)
+    pref = np.concatenate([[0.0], np.cumsum(costs)])
+    c = np.zeros((n + 1, n + 1), np.float32)
+    for i in range(n + 1):
+        for j in range(i + 1, n + 1):
+            c[i, j] = pref[j] - pref[i]
+    return c.astype(np.float32)
+
+
+def solve_skip(chain: MarkovChain, edge_costs: np.ndarray,
+               support: Support) -> SkipTables:
+    """Exact DP for the skip (transitive-closure) setting.
+
+    Args:
+      chain: Markov chain over binned losses, n nodes.
+      edge_costs: (n+1, n+1) matrix; [i+1, j+1] = cost of probing j right
+        after i, row/col 0 = dummy root.  Use the constructors above.
+      support: common discrete support V.
+    """
+    n, k = chain.n, chain.k
+    grid = support.grid
+    xvals = line_dp.x_values(grid)
+    mi = line_dp._min_index_matrix(grid)          # (K+2, K)
+    ec = jnp.asarray(edge_costs, jnp.float32)
+
+    # cumulative conditionals cum[i][j] = P^{(i->j)}, python-managed.
+    cum: list[list[jax.Array | None]] = [[None] * n for _ in range(n)]
+    for i in range(n):
+        acc = jnp.eye(k, dtype=jnp.float32)
+        cum[i][i] = acc
+        for j in range(i + 1, n):
+            acc = acc @ chain.trans[j - 1]
+            cum[i][j] = acc
+
+    stop_val = jnp.tile(xvals[None, :], (k, 1))   # (K, K+2)
+    v: list[jax.Array] = [None] * (n + 1)         # v[l+1] indexed by last=l
+    nxt: list[jax.Array] = [None] * (n + 1)
+
+    for last in range(n - 1, -2, -1):
+        best = stop_val
+        best_j = jnp.full((k, k + 2), STOP, jnp.int32)
+        for j in range(last + 1, n):
+            if last < 0:
+                row_mat = jnp.tile((chain.p0 @ cum[0][j])[None, :], (k, 1))
+            else:
+                row_mat = cum[last][j]            # (K, K) Pr[R_j=y | R_last=s]
+            m = jnp.take_along_axis(v[j + 1], mi.T, axis=1)  # (K, K+2)
+            cont = ec[last + 1, j + 1] + row_mat @ m
+            take = cont < best
+            best_j = jnp.where(take, j, best_j)
+            best = jnp.minimum(best, cont)
+        if last < 0:
+            root_v, root_nxt = best, best_j
+        else:
+            v[last + 1] = best
+            nxt[last + 1] = best_j
+    v[0], nxt[0] = root_v, root_nxt
+
+    value_tab = jnp.stack(v)
+    nxt_tab = jnp.stack(nxt)
+    value = value_tab[0, 0, k + 1]
+    return SkipTables(value_tab=value_tab, nxt=nxt_tab, value=value)
+
+
+def simulate_skip(tables: SkipTables, losses: np.ndarray, bins: np.ndarray,
+                  edge_costs: np.ndarray):
+    """Run the skip policy on traces; returns (served_loss, explore_cost,
+    probed_mask) per sample.  Numpy reference implementation."""
+    t, n = bins.shape
+    k = tables.k
+    nxt = np.asarray(jax.device_get(tables.nxt))
+    served = np.zeros(t, np.float32)
+    spent = np.zeros(t, np.float32)
+    probed = np.zeros((t, n), bool)
+    for r in range(t):
+        last, s, x_idx = -1, 0, k + 1
+        best = np.inf
+        while True:
+            j = int(nxt[last + 1, s, x_idx])
+            if j == STOP:
+                break
+            spent[r] += edge_costs[last + 1, j + 1]
+            probed[r, j] = True
+            best = min(best, float(losses[r, j]))
+            s = int(bins[r, j])
+            x_idx = min(x_idx, s + 1)
+            last = j
+            if last == n - 1:
+                break
+        served[r] = best
+    return served, spent, probed

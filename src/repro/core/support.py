@@ -1,0 +1,93 @@
+"""Discrete loss support & quantizer.
+
+The paper's DP (§4.2) assumes every ramp loss R_i takes values on a common
+finite support ``V = {v_1 < ... < v_K}``.  Real losses are continuous, so we
+expose the quantile quantizer that produces V from calibration traces
+("Such discretization is standard in practice", §4.1).
+
+Index conventions used throughout ``repro.core``:
+
+* bins ``0..K-1`` map to grid values ``grid[0..K-1]`` (ascending, > 0 per
+  Assumption 2.1 — losses are strictly positive).
+* a *sentinel* bin ``K`` denotes ``X = +inf`` (the running-min before any
+  node was inspected; Alg. 1 initializes ``X <- inf``).  DP tables carry
+  ``K+1`` rows along the X axis for this reason.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Support", "build_support", "quantize"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Support:
+    """A common finite loss support V.
+
+    Attributes:
+      grid: (K,) ascending strictly-positive grid values v_1..v_K.
+      edges: (K-1,) bucket edges; value x maps to bin ``searchsorted(edges, x)``.
+    """
+
+    grid: jax.Array
+    edges: jax.Array
+
+    @property
+    def size(self) -> int:
+        return int(self.grid.shape[0])
+
+    @property
+    def inf_bin(self) -> int:
+        """Sentinel bin index representing X = +inf."""
+        return self.size
+
+    def values_with_inf(self) -> jax.Array:
+        """(K+1,) grid extended with a large-but-finite sentinel for X=inf.
+
+        The sentinel only ever appears as a *stopping value before any node
+        was probed*, which the optimal policy never chooses (it must serve
+        some model), so any value strictly above ``grid[-1] + sum(costs)``
+        is equivalent to +inf.  We use a large multiple of the top grid
+        value to stay finite in float32 arithmetic.
+        """
+        big = self.grid[-1] * 1e4 + 1e4
+        return jnp.concatenate([self.grid, jnp.array([big], self.grid.dtype)])
+
+
+def build_support(samples: np.ndarray | jax.Array, k: int) -> Support:
+    """Quantile-based support over pooled calibration losses.
+
+    Args:
+      samples: any-shape array of observed losses (pooled over ramps/inputs).
+      k: support size |V|.
+    """
+    flat = np.asarray(jax.device_get(samples), dtype=np.float64).reshape(-1)
+    flat = flat[np.isfinite(flat)]
+    if flat.size == 0:
+        raise ValueError("no finite calibration samples")
+    lo = float(np.min(flat))
+    # Assumption 2.1: strictly positive losses.  Shift if violated.
+    shift = 0.0 if lo > 0 else (1e-6 - lo)
+    flat = flat + shift
+    qs = np.linspace(0.0, 1.0, k)
+    grid = np.quantile(flat, qs)
+    # De-duplicate (heavy ties collapse quantiles); enforce strict ascent.
+    grid = np.maximum.accumulate(grid)
+    eps = max(1e-9, 1e-9 * float(grid[-1]))
+    for i in range(1, grid.size):
+        if grid[i] <= grid[i - 1]:
+            grid[i] = grid[i - 1] + eps
+    edges = (grid[1:] + grid[:-1]) / 2.0
+    return Support(grid=jnp.asarray(grid, jnp.float32),
+                   edges=jnp.asarray(edges, jnp.float32))
+
+
+def quantize(support: Support, x: jax.Array) -> jax.Array:
+    """Map loss values to bin indices in [0, K)."""
+    return jnp.searchsorted(support.edges, x.astype(support.edges.dtype))

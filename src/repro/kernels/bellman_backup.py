@@ -1,0 +1,59 @@
+"""T-Tamer Bellman backup — Pallas TPU kernel (the DP preprocessing
+hot-spot, Thm 4.5 / Alg. 2).
+
+One backward step computes, for every state (s, x):
+
+    cont[s, x] = c_i + sum_y P_i[s, y] * Phi_{i+1}[y, min_idx(x, y)]
+
+TPU mapping (DESIGN.md §3): the min-gather M[y, x] = Phi[y, mi[y, x]] is
+built in VMEM from the Phi tile and immediately consumed by the MXU
+matmul P @ M — M never round-trips to HBM, which is the point of fusing
+(the jnp path materializes it).  Grid tiles the X axis; each program
+holds the full (K x K) transition tile and (K x X_blk) Phi tile in VMEM —
+K is padded to a multiple of 128 by ops.py for MXU alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bellman_backup_kernel"]
+
+
+def _kernel(phi_ref, trans_ref, mi_ref, cost_ref, out_ref):
+    phi = phi_ref[...]                              # (K, X) f32
+    mi = mi_ref[...]                                # (K, Xblk) i32
+    m = jnp.take_along_axis(phi, mi, axis=1)        # (K, Xblk) — in VMEM
+    trans = trans_ref[...]                          # (K, K)
+    out_ref[...] = cost_ref[0, 0] + jax.lax.dot_general(
+        trans, m, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_x", "interpret"))
+def bellman_backup_kernel(phi_next, trans, cost, mi_t, *,
+                          block_x: int = 128, interpret: bool = False):
+    """phi_next (K, X) f32; trans (K, K) f32; cost scalar; mi_t (K, X)
+    int32 (mi_t[y, x] = X-index of min(xvals[x], grid[y])).
+    X % block_x == 0 (ops pads).  Returns cont (K, X) f32."""
+    k, x = phi_next.shape
+    grid = (x // block_x,)
+    cost_arr = jnp.asarray(cost, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, x), lambda i: (0, 0)),          # full Phi
+            pl.BlockSpec((k, k), lambda i: (0, 0)),          # full P_i
+            pl.BlockSpec((k, block_x), lambda i: (0, i)),    # mi tile
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # cost scalar
+        ],
+        out_specs=pl.BlockSpec((k, block_x), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, x), jnp.float32),
+        interpret=interpret,
+    )(phi_next.astype(jnp.float32), trans.astype(jnp.float32),
+      mi_t, cost_arr)

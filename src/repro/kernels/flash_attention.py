@@ -1,0 +1,126 @@
+"""Blockwise (flash) causal GQA attention — Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §3): online-softmax attention tiled for VMEM.
+Grid (B*H, n_q, n_kv) with the kv axis innermost; running max / sum /
+accumulator live in VMEM scratch across kv steps (never spilled to HBM),
+so HBM traffic is O(S*hd) instead of O(S^2).  Causal + sliding-window
+blocks that lie entirely outside the mask are skipped with pl.when — for
+a window w only O(S*w) work is executed.
+
+Block shapes: (block_q x head_dim) and (block_kv x head_dim) tiles with
+head_dim padded to a multiple of 128 by ops.py (MXU lane alignment); the
+q/kv block defaults of 128 keep the score tile (128 x 128) MXU-shaped.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_kv: int, seq: int,
+            window: int | None):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # causal: skip blocks fully above the diagonal; window: skip blocks
+    # fully left of the window.
+    in_range = k_start <= q_start + block_q - 1
+    if window is not None:
+        in_range &= (k_start + block_kv - 1) > (q_start - window)
+
+    @pl.when(in_range)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention_kernel(q, k, v, *, scale: float, causal: bool = True,
+                           window: int | None = None, block_q: int = 128,
+                           block_kv: int = 128, interpret: bool = False):
+    """q (B,H,S,hd), k/v (B,Hkv,S,hd); S % block == 0, hd % 128 == 0
+    (ops.flash_attention pads).  Returns (B,H,S,hd)."""
+    assert causal, "only causal attention is exposed"
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    n_q = s // block_q
+    n_kv = s // block_kv
+
+    grid = (b * h, n_q, n_kv)
+    kernel = functools.partial(_kernel, scale=scale, block_q=block_q,
+                               block_kv=block_kv, seq=s, window=window)
+    qf = q.reshape(b * h, s, hd)
+    kf = k.reshape(b * hkv, s, hd)
+    vf = v.reshape(b * hkv, s, hd)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd),
+                         lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_kv, hd),
+                         lambda bh, qi, ki, g=g: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, hd)

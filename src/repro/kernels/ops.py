@@ -1,0 +1,95 @@
+"""jit'd public wrappers around the Pallas kernels: shape padding to tile
+boundaries, dtype plumbing, and CPU dispatch (interpret=True executes the
+kernel bodies in Python on CPU for correctness validation; on TPU the
+same calls compile to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (bellman_backup as _bb, flash_attention as _fa,
+                           ramp_exit as _re, ssd_chunk as _sc)
+
+__all__ = ["flash_attention", "bellman_backup", "ssd_chunk", "ramp_exit",
+           "on_cpu"]
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis, mult, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool | None = None):
+    """q (B,S,H,hd), k/v (B,S,Hkv,hd) — model layout; returns same.
+
+    Pads hd to 128 and S to the block size (padded kv is masked out by
+    the causal mask since padded queries/keys sit at the tail)."""
+    interpret = on_cpu() if interpret is None else interpret
+    b, s, h, hd = q.shape
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 3, 128)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 3, 128)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 3, 128)
+    s_pad = max(block_q, block_kv)
+    qt = _pad_to(qt, 2, s_pad)
+    kt = _pad_to(kt, 2, s_pad)
+    vt = _pad_to(vt, 2, s_pad)
+    out = _fa.flash_attention_kernel(qt, kt, vt, scale=scale, causal=causal,
+                                     window=window, block_q=block_q,
+                                     block_kv=block_kv, interpret=interpret)
+    return out[:, :, :s, :hd].transpose(0, 2, 1, 3)
+
+
+def bellman_backup(phi_next, trans, cost, mi_t, *,
+                   interpret: bool | None = None):
+    """Drop-in for line_dp._backup's fused path: returns cont (K, X)."""
+    interpret = on_cpu() if interpret is None else interpret
+    k, x = phi_next.shape
+    # pad X to 128 with repeats of the last column (harmless: extra states)
+    xp = (-x) % 128
+    if xp:
+        phi_next = jnp.pad(phi_next, ((0, 0), (0, xp)), mode="edge")
+        mi_t = jnp.pad(mi_t, ((0, 0), (0, xp)), mode="edge")
+    cont = _bb.bellman_backup_kernel(phi_next, trans, cost, mi_t,
+                                     interpret=interpret)
+    return cont[:, :x]
+
+
+def ssd_chunk(xh, dt, da, bb, cc, *, interpret: bool | None = None):
+    """Within-chunk SSD; see ssd_chunk.py.  Shapes pass through."""
+    interpret = on_cpu() if interpret is None else interpret
+    y, s = _sc.ssd_chunk_kernel(xh, dt, da, bb, cc, interpret=interpret)
+    return y.astype(xh.dtype), s.astype(xh.dtype)
+
+
+def ramp_exit(logits, edges, stop_table, s_bin, x_idx, *, lam: float,
+              interpret: bool | None = None):
+    """Fused exit decision; logits (B, V).  Returns (loss, bin, new_x,
+    stop) per lane."""
+    interpret = on_cpu() if interpret is None else interpret
+    b, v = logits.shape
+    logits_p = _pad_to(logits, 1, 2048, value=-1e30)
+    bb_pad = (-b) % 8
+    if bb_pad:
+        logits_p = jnp.pad(logits_p, ((0, bb_pad), (0, 0)),
+                           constant_values=-1e30)
+        s_bin = jnp.pad(s_bin, (0, bb_pad))
+        x_idx = jnp.pad(x_idx, (0, bb_pad))
+    loss, bins, newx, stop = _re.ramp_exit_kernel(
+        logits_p, edges, stop_table, s_bin, x_idx, lam=lam,
+        interpret=interpret)
+    return loss[:b], bins[:b], newx[:b], stop[:b]

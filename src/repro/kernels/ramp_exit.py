@@ -1,0 +1,110 @@
+"""Fused T-Tamer exit decision — Pallas TPU kernel (serving hot path).
+
+After a ramp head produces logits, the engine needs
+    conf  = max softmax(logits)        (one number per lane)
+    loss  = lam * (1 - conf)
+    bin   = bucket of loss on the calibrated support
+    stop  = if-stop table[bin, min(x_idx, bin+1)]
+The naive path materializes the (B, V) softmax in HBM.  This kernel
+streams the vocab in VMEM tiles with a running (max, sumexp) pair —
+one pass over the logits, no softmax materialization — and performs the
+bin search + table gather in the same program (the table is a few KiB of
+VMEM).  O(1) decision per lane on top of the unavoidable logits read,
+matching the Thm 4.5 inference bound.
+
+Grid: (B_tiles, V_tiles), vocab innermost; scratch carries (max, sumexp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ramp_exit_kernel"]
+
+NEG_INF = -1e30
+
+
+def _kernel(logits_ref, edges_ref, table_ref, s_ref, x_ref,
+            loss_ref, bin_ref, newx_ref, stop_ref,
+            m_scr, l_scr, *, lam: float, n_edges: int):
+    vi = pl.program_id(1)
+    n_v = pl.num_programs(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    tile = logits_ref[...].astype(jnp.float32)       # (bB, bV)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, tile.max(axis=1))
+    l_scr[...] = l_scr[...] * jnp.exp(m_prev - m_new) \
+        + jnp.exp(tile - m_new[:, None]).sum(axis=1)
+    m_scr[...] = m_new
+
+    @pl.when(vi == n_v - 1)
+    def _decide():
+        conf = 1.0 / jnp.maximum(l_scr[...], 1e-30)  # exp(m - lse)
+        loss = lam * (1.0 - conf)
+        edges = edges_ref[0]                          # (n_edges,)
+        # bin = #edges < loss  (searchsorted on the tiny support)
+        b = jnp.sum(edges[None, :] < loss[:, None],
+                    axis=1).astype(jnp.int32)
+        x_idx = x_ref[...]
+        new_x = jnp.minimum(x_idx, b + 1)
+        tab = table_ref[...]                          # (K, K+2) i8? i32
+        stop = tab[b, new_x]
+        loss_ref[...] = loss
+        bin_ref[...] = b
+        newx_ref[...] = new_x
+        stop_ref[...] = stop
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "block_b", "block_v",
+                                             "interpret"))
+def ramp_exit_kernel(logits, edges, stop_table, s_bin, x_idx, *,
+                     lam: float, block_b: int = 8, block_v: int = 2048,
+                     interpret: bool = False):
+    """logits (B, V); edges (E,) f32; stop_table (K, K+2) int32;
+    s_bin/x_idx (B,) int32.  B % block_b == 0, V % block_v == 0 (ops
+    pads; pad logits with -inf).  Returns (loss, bin, new_x, stop)."""
+    bsz, v = logits.shape
+    n_edges = edges.shape[0]
+    k, xdim = stop_table.shape
+    grid = (bsz // block_b, v // block_v)
+    kernel = functools.partial(_kernel, lam=lam, n_edges=n_edges)
+    loss, bins, newx, stop = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda bi, vi: (bi, vi)),
+            pl.BlockSpec((1, n_edges), lambda bi, vi: (0, 0)),
+            pl.BlockSpec((k, xdim), lambda bi, vi: (0, 0)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+            pl.BlockSpec((block_b,), lambda bi, vi: (bi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz,), jnp.float32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b,), jnp.float32),
+            pltpu.VMEM((block_b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, edges[None, :], stop_table.astype(jnp.int32),
+      s_bin, x_idx)
+    return loss, bins, newx, stop > 0

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function mirrors its kernel's EXACT contract (shapes, dtypes,
+masking, accumulation order is allowed to differ within float tolerance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "bellman_backup_ref", "ssd_chunk_ref",
+           "ramp_exit_ref"]
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                        window: int | None = None):
+    """q (B,H,S,hd), k/v (B,Hkv,S,hd), H = G*Hkv.  Returns (B,H,S,hd)."""
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, s, hd)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def bellman_backup_ref(phi_next, trans, cost, mi_t):
+    """T-Tamer Bellman backup (line_dp._backup contract).
+
+    phi_next (K, X), trans (K, K), cost scalar, mi_t (K, X) int32 with
+    mi_t[y, x] = X-axis index of min(xvals[x], grid[y]).
+    Returns cont (K, X): cost + trans @ M, M[y,x] = phi_next[y, mi_t[y,x]].
+    """
+    m = jnp.take_along_axis(phi_next, mi_t, axis=1)
+    return cost + trans @ m
+
+
+def ssd_chunk_ref(xh, dt, da, bb, cc):
+    """Within-chunk SSD (ssm.ssd_chunked inner term).
+
+    xh (B,C,Q,H,P), dt/da (B,C,Q,H), bb/cc (B,C,Q,H,N).
+    Returns (y_diag (B,C,Q,H,P), states (B,C,H,P,N)).
+    """
+    seg_a = da.swapaxes(-1, -2)                       # (B,C,H,Q)
+    cs = jnp.cumsum(seg_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    q = da.shape[2]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", cc, bb)
+    m = scores * l * dt.swapaxes(-1, -2)[..., None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", m, xh)
+    cum = jnp.cumsum(da, axis=2)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    w = decay_to_end * dt
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, bb, xh)
+    return y_diag, states
+
+
+def ramp_exit_ref(logits, edges, stop_table, s_bin, x_idx, lam: float):
+    """Fused T-Tamer exit decision (serving hot path).
+
+    logits (B, V); edges (K-1,) support bucket edges; stop_table
+    (K, K+2) int8 (1 = stop); s_bin/x_idx (B,) current policy state.
+
+    Computes: conf = max softmax(logits); loss = lam * (1 - conf);
+    bin = searchsorted(edges, loss); new_x = min(x_idx, bin + 1);
+    stop = stop_table[bin, new_x].
+
+    Returns (loss (B,), bin (B,) int32, new_x (B,) int32, stop (B,) bool).
+    """
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    mx = logits.astype(jnp.float32).max(axis=-1)
+    conf = jnp.exp(mx - lse)
+    loss = lam * (1.0 - conf)
+    b = jnp.searchsorted(edges, loss).astype(jnp.int32)
+    new_x = jnp.minimum(x_idx, b + 1)
+    stop = stop_table[b, new_x] > 0
+    return loss, b, new_x, stop

@@ -1,0 +1,86 @@
+"""Mamba2 SSD within-chunk kernel — Pallas TPU.
+
+Computes, per (batch, chunk, head) grid cell, the quadratic "dual form"
+of the chunk (the MXU-heavy part of SSD) plus the chunk's contribution to
+the inter-chunk state:
+
+    seg     = cumsum(dA)                       (Q,)
+    L[i,j]  = exp(seg_i - seg_j) * [i >= j]    (Q, Q)
+    Y       = ((C B^T) * L * dt_j) X           (Q, P)
+    S_chunk = (exp(seg_Q - seg) * dt * B)^T X  (N, P) -> stored (P, N)
+
+All Q x Q intermediates live in VMEM; HBM sees only the (Q, P) output and
+the (P, N) state.  The inter-chunk recurrence (a tiny scan over nc) stays
+in jnp — it's O(nc * P * N) and bandwidth-trivial.
+
+VMEM budget per program: Q=256, N=128, P=64 f32 -> L (256 KiB) +
+CB (256 KiB) + operands (~320 KiB) — comfortably under 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk_kernel"]
+
+
+def _kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, s_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    da = da_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    bb = b_ref[0, 0, :, 0, :].astype(jnp.float32)   # (Q, N)
+    cc = c_ref[0, 0, :, 0, :].astype(jnp.float32)   # (Q, N)
+    q = x.shape[0]
+
+    seg = jnp.cumsum(da)
+    diff = seg[:, None] - seg[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    l = jnp.where(ii >= jj, jnp.exp(diff), 0.0)     # (Q, Q) in VMEM
+
+    cb = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    m = cb * l * dt[None, :]
+    y_ref[0, 0, :, 0, :] = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    w = jnp.exp(seg[-1] - seg) * dt                 # (Q,)
+    wb = bb * w[:, None]                            # (Q, N)
+    state = jax.lax.dot_general(x, wb, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s_ref[0, 0, 0, :, :] = state.astype(s_ref.dtype)  # (P, N)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_kernel(xh, dt, da, bb, cc, *, interpret: bool = False):
+    """xh (B,C,Q,H,P); dt/da (B,C,Q,H); bb/cc (B,C,Q,H,N).
+    Returns (y_diag (B,C,Q,H,P) f32, states (B,C,H,P,N) f32)."""
+    b, c, q, h, p = xh.shape
+    n = bb.shape[-1]
+    grid = (b, c, h)
+    y, s = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, ci, hi: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, q, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xh, dt, da, bb, cc)
+    return y, s

@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Hillclimb diagnostics: lower one (arch x shape) combo and print the
+# top-traffic instructions and collectives with their trip-multiplied
+# cost (launch/hlo_cost.py cost model).
+#
+#   PYTHONPATH=src python -m repro.launch.diagnose --arch qwen3-14b \
+#       --shape prefill_32k [--multi-pod] [--top 25]
+
+import argparse  # noqa: E402
+import re        # noqa: E402
+
+import jax       # noqa: E402
+
+from repro.launch import hlo_cost                      # noqa: E402
+from repro.launch.dryrun import build_lowerable        # noqa: E402
+from repro.launch.mesh import make_production_mesh     # noqa: E402
+from repro.launch.shapes import SHAPES                 # noqa: E402
+from repro.sharding.ctx import activation_sharding     # noqa: E402
+from repro.sharding.rules import BASELINE_RULES        # noqa: E402
+from repro.launch.dryrun import spec_for               # noqa: E402
+
+
+def top_traffic(hlo: str, top: int = 25):
+    """Approximate per-instruction traffic x trip count."""
+    comps = hlo_cost._parse(hlo)
+    entry = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo).group(1)
+
+    # compute trip multiplier per computation by walking call graph
+    mult = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        name = order.pop()
+        m = mult[name]
+        for inst in comps.get(name, []):
+            sub = hlo_cost._CALL_ATTR_RE.search(inst.rest)
+            if not sub or sub.group(1) not in comps:
+                continue
+            trips = 1.0
+            if inst.op == "while":
+                mc = hlo_cost._COND_ATTR_RE.search(inst.rest)
+                if mc and mc.group(1) in comps:
+                    trips = hlo_cost._trip_count(comps[mc.group(1)])
+            sname = sub.group(1)
+            mult[sname] = max(mult.get(sname, 0.0), m * trips)
+            if sname not in seen:
+                seen.add(sname)
+                order.append(sname)
+
+    rows = []
+    for name, instrs in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        table = {i.name: i.result for i in instrs}
+        for inst in instrs:
+            if inst.op in hlo_cost._NO_TRAFFIC:
+                continue
+            b = hlo_cost._size(inst.result) + sum(
+                hlo_cost._size(table.get(o, ""))
+                for o in hlo_cost._operands(inst.rest))
+            rows.append((b * m, m, inst.op, inst.result[:60],
+                         inst.name[:46]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, fargs = build_lowerable(args.arch, args.shape, mesh, BASELINE_RULES)
+    shape = SHAPES[args.shape]
+    bspec = spec_for(mesh, BASELINE_RULES, (shape.global_batch,), ("batch",))
+    entry = bspec[0] if len(bspec) else None
+    axes = entry if isinstance(entry, tuple) else ((entry,) if entry else None)
+    with mesh, activation_sharding(axes):
+        compiled = jax.jit(fn).lower(*fargs).compile()
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)
+    print(f"flops/dev {cost.flops:.3g}  hbm {cost.hbm_bytes / 2**30:.1f} GiB"
+          f"  wire {cost.wire_bytes / 2**30:.2f} GiB")
+    print(f"{'GiB*trips':>10} {'trips':>6}  op / shape / name")
+    for b, m, op, res, name in top_traffic(hlo, args.top):
+        print(f"{b / 2**30:10.2f} {m:6.0f}  {op:14s} {res:60s} {name}")
+
+
+if __name__ == "__main__":
+    main()

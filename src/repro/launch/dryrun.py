@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run driver (deliverable e).  Lowers + compiles every
+# (architecture x input-shape x mesh) combination against the production
+# mesh with ShapeDtypeStruct inputs only (no allocation), records
+# memory_analysis / cost_analysis / collective schedule to JSON, and
+# fails loudly on sharding bugs.  Usage:
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+#       --shape decode_32k [--multi-pod] [--rules baseline] [--force]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+#
+# The XLA_FLAGS line above MUST run before any jax import: jax locks the
+# device count at first init.  Smoke tests / benches never import this
+# module, so they keep seeing 1 device.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ASSIGNED, get_config               # noqa: E402
+from repro.launch import flops as flops_lib                  # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch.shapes import (SHAPES, cache_len_for,      # noqa: E402
+                                 cache_specs_sharded, input_specs,
+                                 resolve_config)
+from repro.models import model as M                          # noqa: E402
+from repro.models.param import ParamDef                      # noqa: E402
+from repro.sharding.rules import (BASELINE_RULES, FSDP_TRAIN_RULES,  # noqa: E402
+                                  RuleSet, spec_for)
+from repro.training.loop import make_train_step              # noqa: E402
+from repro.training.optimizer import AdamWConfig             # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+          "u64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# wire-byte factor per result byte (ring estimates; DESIGN/EXPERIMENTS note)
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective in optimized HLO."""
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            tok = f" {c}("
+            tok_start = f" {c}-start("
+            if tok in line or tok_start in line:
+                lhs = line.split(f"= ", 1)
+                shape_part = lhs[1].split(c, 1)[0] if len(lhs) == 2 else line
+                out[c]["count"] += 1
+                out[c]["bytes"] += _shape_bytes(shape_part)
+                break
+            if f" {c}-done(" in line:
+                break
+    out["wire_bytes"] = sum(v["bytes"] * _WIRE_FACTOR[c]
+                            for c, v in out.items() if c in _WIRE_FACTOR)
+    return out
+
+
+def abstract_params(defs, mesh, rules: RuleSet, dtype):
+    def one(d: ParamDef):
+        sh = NamedSharding(mesh, spec_for(mesh, rules, d.shape, d.axes))
+        return jax.ShapeDtypeStruct(d.shape, dtype, sharding=sh)
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, rules: RuleSet,
+                    num_microbatches: int = 16):
+    """Returns (fn, abstract_args) ready for jax.jit(fn).lower(*args)."""
+    shape = SHAPES[shape_name]
+    cfg = resolve_config(get_config(arch), shape)
+    defs = M.model_defs(cfg)
+    batch = input_specs(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        # f32 master weights + moments need 2-D (fsdp x tp) sharding
+        if rules is BASELINE_RULES:
+            rules = FSDP_TRAIN_RULES
+        params = abstract_params(defs, mesh, rules, jnp.float32)
+        opt = {"mu": abstract_params(defs, mesh, rules, jnp.float32),
+               "nu": abstract_params(defs, mesh, rules, jnp.float32),
+               "step": jax.ShapeDtypeStruct(
+                   (), jnp.int32, sharding=NamedSharding(mesh, P()))}
+        mb = num_microbatches if shape.global_batch % num_microbatches == 0 \
+            else 1
+        step = make_train_step(cfg, AdamWConfig(), num_microbatches=mb)
+        return step, (params, opt, batch)
+
+    params = abstract_params(defs, mesh, rules, jnp.bfloat16)
+    cache_len = cache_len_for(cfg, shape)
+    if shape.kind == "prefill":
+        def fn(p, b):
+            return M.prefill(p, cfg, b, cache_len)
+        return fn, (params, batch)
+
+    caches = cache_specs_sharded(cfg, shape, mesh, rules)
+    bspec = spec_for(mesh, rules, (shape.global_batch,), ("batch",))
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                               sharding=NamedSharding(mesh, bspec))
+
+    def fn(p, b, c, q):
+        return M.decode_step(p, cfg, b, c, q)
+    return fn, (params, batch, caches, pos)
+
+
+def _variant_ctx(variant: str):
+    """Perf-variant context managers (EXPERIMENTS.md §Perf).
+
+    baseline       — chunked full-kv attention, scanned decode layers
+    banded_attn    — causal/window kv banding in prefill attention
+    decode_unroll  — unrolled decode layers (no stacked-weight slicing)
+    opt            — all beyond-paper optimizations together
+    """
+    import contextlib
+
+    from repro.models.attention import attention_impl
+    from repro.models.model import decode_unroll
+
+    stack = contextlib.ExitStack()
+    if variant == "baseline":
+        stack.enter_context(attention_impl("chunked"))
+    elif variant == "banded_attn":
+        stack.enter_context(attention_impl("banded"))
+    elif variant == "decode_unroll":
+        stack.enter_context(attention_impl("chunked"))
+        stack.enter_context(decode_unroll(True))
+    elif variant == "opt":
+        stack.enter_context(attention_impl("banded"))
+        stack.enter_context(decode_unroll(True))
+    elif variant == "int8_cache":
+        from repro.models.quant import cache_int8
+        stack.enter_context(attention_impl("banded"))
+        stack.enter_context(decode_unroll(True))
+        stack.enter_context(cache_int8(True))
+    elif variant in ("gqa_mesh", "gqa_opt"):
+        stack.enter_context(attention_impl(
+            "banded" if variant == "gqa_opt" else "chunked"))
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return stack
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            rules: RuleSet = BASELINE_RULES, rules_name: str = "baseline",
+            force: bool = False, save: bool = True,
+            variant: str = "baseline") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = rules_name if variant == "baseline" else f"{rules_name}+{variant}"
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}__{tag}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    if variant.startswith("gqa"):
+        from repro.sharding.rules import GQA_RULES
+        rules = GQA_RULES
+        mesh = make_production_mesh(multi_pod=multi_pod, layout="gqa")
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    # batch mesh axes for the activation-sharding anchors
+    shape = SHAPES[shape_name]
+    bspec = spec_for(mesh, rules, (shape.global_batch,), ("batch",))
+    entry = bspec[0] if len(bspec) else None
+    axes = entry if isinstance(entry, tuple) else (
+        (entry,) if entry else None)
+    from repro.sharding.ctx import activation_sharding
+    # NOTE: 32 microbatches (vs 16) was tried for the train shapes and
+    # REFUTED — temp unchanged (the live-set floor is grads + opt state +
+    # gathered weights, not per-microbatch activations) while HBM/wire
+    # traffic doubled with the extra trips (EXPERIMENTS.md §Perf).
+    with _variant_ctx(variant):
+        fn, args = build_lowerable(arch, shape_name, mesh, rules)
+        with mesh, activation_sharding(axes):
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # Trip-count-aware re-analysis (XLA cost_analysis counts while bodies
+    # once — launch/hlo_cost.py docstring).
+    from repro.launch import hlo_cost
+    cost = hlo_cost.analyze(hlo, pod_stride=256 if multi_pod else None)
+
+    shape = SHAPES[shape_name]
+    cfg = resolve_config(get_config(arch), shape)
+    useful = flops_lib.model_flops(cfg, kind=shape.kind,
+                                   global_batch=shape.global_batch,
+                                   seq_len=shape.seq_len)
+    n_dev = mesh.size
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "rules": tag, "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": cost.flops,
+        "hbm_bytes_per_device": cost.hbm_bytes,
+        "xla_flops_per_device_noloop": xla_cost.get("flops", -1.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", -1),
+        },
+        "collectives": cost.collectives,
+        "wire_bytes_per_device": cost.wire_bytes,
+        "pod_wire_bytes_per_device": cost.pod_wire_bytes,
+        "model_flops": useful,
+        "hlo_bytes": len(hlo),
+    }
+    if save:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+    temp = result["memory"]["temp_bytes"]
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ({rules_name}): "
+          f"compile {t_compile:.1f}s, flops/dev {cost.flops:.3g}, "
+          f"temp {temp / 2**30:.2f} GiB, "
+          f"wire {cost.wire_bytes / 2**30:.3f} GiB", flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all 10 archs x 4 shapes")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "banded_attn", "decode_unroll",
+                             "opt", "gqa_mesh", "gqa_opt", "int8_cache"])
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, mp, force=args.force,
+                            variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape} "
+                          f"multi_pod={mp}: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all requested combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Analytic MODEL_FLOPS for the roofline's useful-compute ratio
+(EXPERIMENTS.md §Roofline).
+
+Convention: MODEL_FLOPS = 6*N*D for training and 2*N_active*D for
+inference, where N(_active) counts matmul parameters actually touched per
+token (MoE: shared + top_k routed experts; embedding lookups excluded,
+the unembedding included) and D = tokens processed.  The quadratic
+attention term 2*S*ctx per layer per head-dim is added separately so long
+-context shapes aren't unfairly penalized in the ratio.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.models.config import BlockConfig, ModelConfig
+from repro.models.param import count_params
+from repro.models import model as M
+
+__all__ = ["active_matmul_params", "model_flops"]
+
+
+def _block_active_params(b: BlockConfig, d: int) -> int:
+    n = 0
+    if b.mixer in ("attn", "hybrid"):
+        a = b.attn
+        if a.mla:
+            m = a.mla
+            qd = a.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+            n += d * qd if not m.q_lora_rank else (
+                d * m.q_lora_rank + m.q_lora_rank * qd)
+            n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            n += m.kv_lora_rank * a.n_heads * (m.qk_nope_head_dim
+                                               + m.v_head_dim)
+            n += a.n_heads * m.v_head_dim * d
+        else:
+            n += d * a.n_heads * a.head_dim * 2            # wq, wo
+            n += d * a.n_kv_heads * a.head_dim * 2         # wk, wv
+    if b.mixer in ("ssm", "hybrid"):
+        s = b.ssm
+        di = s.d_inner(d)
+        gn = s.n_groups * s.d_state
+        n += d * (2 * di + 2 * gn + s.n_heads(d))          # in_proj
+        n += di * d                                        # out_proj
+    if b.mlp == "dense":
+        mult = 3 if b.act == "swiglu" else 2
+        n += mult * d * b.d_ff
+    elif b.mlp == "moe":
+        mo = b.moe
+        mult = 3 if b.act == "swiglu" else 2
+        n += mo.top_k * mult * d * mo.d_ff_expert          # routed (active)
+        if mo.num_shared:
+            ff = mo.d_ff_shared or mo.num_shared * mo.d_ff_expert
+            n += mult * d * ff
+        n += d * mo.num_experts                            # router
+    return n
+
+
+def active_matmul_params(cfg: ModelConfig) -> int:
+    n = sum(_block_active_params(s.block, cfg.d_model) * s.n_layers
+            for s in cfg.segments)
+    n += cfg.d_model * cfg.vocab                           # unembed
+    return n
+
+
+def total_params(cfg: ModelConfig) -> int:
+    return count_params(M.model_defs(cfg))
+
+
+def _attn_flops_per_layer(b: BlockConfig, d: int, tokens: int,
+                          ctx: int, absorbed: bool = False) -> float:
+    """Quadratic attention term: 2 * (qk + av) = 4 * tokens * ctx * h * hd.
+
+    MLA decode runs ABSORBED in the kv_lora latent space (DESIGN.md §4):
+    per (token, position) it pays 2*(lora + rope) [scores] + 2*lora
+    [context] per head — a deliberate compute-for-memory trade."""
+    if b.mixer not in ("attn", "hybrid"):
+        return 0.0
+    a = b.attn
+    eff_ctx = min(ctx, a.window) if a.window else ctx
+    if a.mla:
+        m = a.mla
+        if absorbed:
+            hd = 2 * m.kv_lora_rank + m.qk_rope_head_dim
+        else:
+            hd = m.qk_nope_head_dim + m.qk_rope_head_dim + m.v_head_dim
+    else:
+        hd = 2 * a.head_dim
+    return 2.0 * tokens * eff_ctx * a.n_heads * hd
+
+
+def model_flops(cfg: ModelConfig, *, kind: str, global_batch: int,
+                seq_len: int) -> float:
+    """Analytic useful FLOPs for one step of the given shape."""
+    n_act = active_matmul_params(cfg)
+    if kind == "train":
+        tokens = global_batch * seq_len
+        base = 6.0 * n_act * tokens
+        ctx = seq_len / 2  # average causal context
+        mult = 3.0         # fwd + bwd
+    elif kind == "prefill":
+        tokens = global_batch * seq_len
+        base = 2.0 * n_act * tokens
+        ctx = seq_len / 2
+        mult = 1.0
+    elif kind == "decode":
+        tokens = global_batch
+        base = 2.0 * n_act * tokens
+        ctx = seq_len
+        mult = 1.0
+    else:
+        raise ValueError(kind)
+    attn = mult * sum(
+        _attn_flops_per_layer(s.block, cfg.d_model, tokens, ctx,
+                              absorbed=(kind == "decode"))
+        * s.n_layers for s in cfg.segments)
+    # ramp heads: train computes ramp CE on every token (fwd+bwd); serving
+    # paths evaluate ramp confidence on the current/last token only.
+    ramp_tokens = tokens if kind == "train" else global_batch
+    ramps = (6.0 if kind == "train" else 2.0) \
+        * cfg.n_ramps * cfg.d_model * cfg.vocab * ramp_tokens
+    return base + attn + ramps

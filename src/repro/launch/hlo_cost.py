@@ -1,0 +1,261 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE —
+with scan-over-layers and microbatch accumulation that undercounts FLOPs,
+HBM bytes and collective bytes by 1-2 orders of magnitude (verified:
+scan(10 matmuls) reports 1 matmul of FLOPs).  This module re-derives the
+three roofline terms by walking the optimized HLO:
+
+  * computations are parsed into instruction lists; a per-computation
+    symbol table (name -> result shape) resolves operand shapes,
+  * ``while`` trip counts are recovered from the loop condition (largest
+    integer constant — jax scans compare iv < N counting from 0),
+  * ``fusion``/``while``/``call`` costs recurse into their called
+    computations, multiplied by trip count,
+  * FLOPs: dot = 2 * prod(result) * prod(lhs contracting dims); conv
+    = 2 * prod(result) * prod(window) (depthwise approx); other
+    arithmetic ops = 1 flop / output element; pure data movement
+    (slice/copy/transpose/dus/...) contributes bytes, not flops,
+  * HBM bytes: for every top-level (non-fused-internal) instruction,
+    operand bytes + result bytes — the perfect-fusion traffic model,
+  * collectives: result bytes x ring factor x trip multiplier, split by
+    kind; the pod-crossing subset is identified from replica groups.
+
+This is the "profile" the §Perf hillclimb iterates on (no real TPU in the
+container — DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze", "HloCost"]
+
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "bf16": 2,
+          "f16": 2, "s16": 2, "u16": 2, "f32": 4, "s32": 4, "u32": 4,
+          "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+          "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(
+    r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[a-z][\w\[\]{},]*)\s+"
+    r"([\w\-]+)\((.*)$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_NO_TRAFFIC = {"parameter", "tuple", "get-tuple-element", "bitcast",
+               "constant", "after-all", "partition-id", "replica-id",
+               "opt-barrier", "optimization-barrier"}
+# data movement: bytes yes, flops no
+_NO_FLOPS = {"copy", "transpose", "reshape", "broadcast", "slice",
+             "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+             "gather", "scatter", "iota", "convert", "reverse", "rng",
+             "rng-bit-generator", "copy-start", "copy-done", "send", "recv",
+             "custom-call", "while", "conditional", "call", "fusion",
+             "reduce", "sort"} | _NO_TRAFFIC
+
+
+def _size(shape_text: str, elems: bool = False) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n if elems else n * _BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collectives: dict
+    wire_bytes: float
+    pod_wire_bytes: float
+
+
+def _parse(hlo: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        hm = _HEADER_RE.match(line)
+        if hm:
+            cur = []
+            comps[hm.group(1)] = cur
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(Instr(*m.groups()))
+    return comps
+
+
+def _operands(rest: str) -> list[str]:
+    """Operand instruction names = %refs inside the first (...) group."""
+    depth = 0
+    out = []
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth < 0:
+                out.append(rest[:i])
+                break
+    head = out[0] if out else rest
+    return _OPERAND_RE.findall(head)
+
+
+def _trip_count(cond_instrs: list[Instr]) -> int:
+    best = 1
+    for i in cond_instrs:
+        if i.op == "constant":
+            m = re.search(r"^\s*(\d+)\s*\)", i.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(inst: Instr, table: dict[str, str]) -> float:
+    out = _size(inst.result, elems=True)
+    ops = _operands(inst.rest)
+    k = 1
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.rest)
+    if mdims and ops:
+        lhs_shape = table.get(ops[0], "")
+        m = _SHAPE_RE.search(lhs_shape)
+        if m:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            for ci in mdims.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out * k
+
+
+def _conv_flops(inst: Instr) -> float:
+    out = _size(inst.result, elems=True)
+    mwin = re.search(r"window=\{size=([0-9x]+)", inst.rest)
+    k = 1
+    if mwin:
+        for d in mwin.group(1).split("x"):
+            k *= int(d)
+    return 2.0 * out * k
+
+
+def _crosses_pod(rest: str, pod_stride: int) -> bool:
+    m = re.search(r"replica_groups=\{\{([^=]*?)\}\}", rest)
+    if not m:
+        return True
+    for grp in m.group(1).split("},{"):
+        ids = [int(x) for x in grp.split(",") if x.strip().isdigit()]
+        if ids and (min(ids) < pod_stride <= max(ids)):
+            return True
+    return False
+
+
+def analyze(hlo: str, entry: str | None = None,
+            pod_stride: int | None = None) -> HloCost:
+    comps = _parse(hlo)
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1).rstrip() if m else next(iter(comps))
+
+    memo: dict[str, tuple] = {}
+
+    def comp_cost(name: str, fused: bool) -> tuple:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        memo[key] = (0.0, 0.0, {}, 0.0, 0.0)
+        table = {i.name: i.result for i in comps.get(name, [])}
+        flops = hbm = wire = pod_wire = 0.0
+        colls: dict[str, dict] = {}
+        for inst in comps.get(name, []):
+            base = inst.op.replace("-start", "")
+            if base in COLLECTIVES and not inst.op.endswith("-done"):
+                b = _size(inst.result)
+                c = colls.setdefault(base, {"count": 0, "bytes": 0.0})
+                c["count"] += 1
+                c["bytes"] += b
+                w = b * _WIRE_FACTOR[base]
+                wire += w
+                if pod_stride and _crosses_pod(inst.rest, pod_stride):
+                    pod_wire += w
+                if not fused:
+                    hbm += b + sum(_size(table.get(o, ""))
+                                   for o in _operands(inst.rest))
+                continue
+
+            trips = 1.0
+            sub = None
+            if inst.op == "while":
+                mb = _CALL_ATTR_RE.search(inst.rest)
+                mc = _COND_ATTR_RE.search(inst.rest)
+                if mb:
+                    sub = mb.group(1)
+                if mc and mc.group(1) in comps:
+                    trips = float(_trip_count(comps[mc.group(1)]))
+            elif inst.op in ("fusion", "call", "conditional", "map",
+                             "reduce", "reduce-window", "scatter", "sort",
+                             "reduce-scatter", "custom-call",
+                             "select-and-scatter"):
+                mb = _CALL_ATTR_RE.search(inst.rest)
+                if mb and mb.group(1) in comps:
+                    sub = mb.group(1)
+
+            if inst.op == "dot":
+                flops += _dot_flops(inst, table)
+            elif inst.op == "convolution":
+                flops += _conv_flops(inst)
+            elif inst.op not in _NO_FLOPS:
+                flops += _size(inst.result, elems=True)
+
+            if sub is not None:
+                sub_fused = inst.op in ("fusion", "map", "reduce",
+                                        "reduce-window", "scatter", "sort",
+                                        "select-and-scatter", "custom-call")
+                sf, sh, sc, sw, spw = comp_cost(sub, sub_fused or fused)
+                flops += trips * sf
+                if not sub_fused:
+                    hbm += trips * sh
+                wire += trips * sw
+                pod_wire += trips * spw
+                for k, v in sc.items():
+                    c = colls.setdefault(k, {"count": 0, "bytes": 0.0})
+                    c["count"] += int(trips * v["count"])
+                    c["bytes"] += trips * v["bytes"]
+
+            if not fused and inst.op not in _NO_TRAFFIC:
+                hbm += _size(inst.result) + sum(
+                    _size(table.get(o, "")) for o in _operands(inst.rest))
+        memo[key] = (flops, hbm, colls, wire, pod_wire)
+        return memo[key]
+
+    f, h, c, w, pw = comp_cost(entry, False)
+    return HloCost(flops=f, hbm_bytes=h, collectives=c, wire_bytes=w,
+                   pod_wire_bytes=pw)

@@ -1,0 +1,53 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def _mesh(shape, axes):
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devs)} — the "
+            f"dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=512 before any jax import")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False, layout: str = "2d"):
+    """TPU v5e target: 16x16 = 256 chips/pod; 2 pods = 512 chips.
+
+    Axes: "data" shards the batch, "model" shards tensor/expert dims,
+    "pod" (multi-pod only) is an outer data axis whose collectives cross
+    the inter-pod links.
+
+    layout="gqa" factorizes the model axis 16 -> ("model"=8, "model2"=2)
+    so GQA geometries with 8 kv heads shard cleanly: attention uses
+    "model" only (no padded heads, no partial-score all-reduces), while
+    MLP/vocab dims span both factors (EXPERIMENTS.md §Perf, qwen3-14b).
+    """
+    if layout == "gqa":
+        shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+        axes = (("pod", "data", "model", "model2") if multi_pod
+                else ("data", "model", "model2"))
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests)."""
+    return _mesh((data, model), ("data", "model"))

@@ -1,0 +1,154 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs (deliverables
+e/f).  No device allocation anywhere — everything here is abstract.
+
+Shapes (assigned):
+  train_4k     seq=4096    global_batch=256   -> train_step
+  prefill_32k  seq=32768   global_batch=32    -> serve_prefill
+  decode_32k   seq=32768   global_batch=128   -> serve_decode (1 token,
+                                                 KV cache of seq_len)
+  long_500k    seq=524288  global_batch=1     -> serve_decode; requires a
+               sub-quadratic mixer — SSM/hybrid/windowed run natively,
+               full-attention archs use the sliding-window variant
+               (cfg.with_window), DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.sharding.rules import RuleSet, spec_for
+
+__all__ = ["SHAPES", "ShapeSpec", "resolve_config", "input_specs",
+           "cache_len_for", "batch_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str               # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def resolve_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Apply the long-context sliding-window override when needed."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        assert cfg.long_context_window, \
+            f"{cfg.name}: full attention cannot serve 500k decode"
+        return cfg.with_window(cfg.long_context_window)
+    return cfg
+
+
+def _min_window(cfg: ModelConfig) -> int | None:
+    ws = [s.block.attn.window for s in cfg.segments
+          if s.block.mixer in ("attn", "hybrid") and s.block.attn
+          and s.block.attn.window]
+    return max(ws) if ws else None
+
+
+def cache_len_for(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    w = _min_window(cfg)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_axes(mesh: Mesh, rules: RuleSet, batch: int):
+    """Mesh axes used for the batch dim (divisibility-gated)."""
+    return spec_for(mesh, rules, (batch,), ("batch",))
+
+
+def _batch_spec(mesh, rules, batch, extra_dims):
+    bspec = batch_axes(mesh, rules, batch)
+    entry = bspec[0] if len(bspec) else None
+    return P(*((entry,) + (None,) * extra_dims))
+
+
+_CACHE_AXES = {
+    # key -> axes chooser given (shape tuple, model-axis size)
+    "k": lambda s, m: ("layers", "batch", None, "kv_heads", None)
+    if s[3] % m == 0 else ("layers", "batch", "kv_len", None, None),
+    "v": lambda s, m: ("layers", "batch", None, "kv_heads", None)
+    if s[3] % m == 0 else ("layers", "batch", "kv_len", None, None),
+    "pos": lambda s, m: ("layers", "batch", None),
+    "c_kv": lambda s, m: ("layers", "batch", "kv_len", None)
+    if s[2] % m == 0 else ("layers", "batch", None, None),
+    "k_rope": lambda s, m: ("layers", "batch", "kv_len", None)
+    if s[2] % m == 0 else ("layers", "batch", None, None),
+    "k_s": lambda s, m: ("layers", "batch", None, "kv_heads")
+    if s[3] % m == 0 else ("layers", "batch", "kv_len", None),
+    "v_s": lambda s, m: ("layers", "batch", None, "kv_heads")
+    if s[3] % m == 0 else ("layers", "batch", "kv_len", None),
+    "c_kv_s": lambda s, m: ("layers", "batch", "kv_len")
+    if s[2] % m == 0 else ("layers", "batch", None),
+    "k_rope_s": lambda s, m: ("layers", "batch", "kv_len")
+    if s[2] % m == 0 else ("layers", "batch", None),
+    "conv": lambda s, m: ("layers", "batch", None, "conv_dim"),
+    "ssm": lambda s, m: ("layers", "batch", None, None, None),
+}
+
+
+def cache_specs_sharded(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                        rules: RuleSet):
+    """Abstract decode-cache tree with shardings attached."""
+    cache_len = cache_len_for(cfg, shape)
+    specs = M.cache_specs(cfg, shape.global_batch, cache_len)
+    model_size = mesh.shape.get("model", 1)
+
+    def walk(node, key=None):
+        if isinstance(node, tuple) and len(node) == 2 \
+                and isinstance(node[0], tuple):
+            shp, dt = node
+            axes = _CACHE_AXES[key](shp, model_size)
+            return _sds(shp, dt, mesh, spec_for(mesh, rules, shp, axes))
+        return {k: walk(v, k) for k, v in node.items()}
+
+    return [walk(seg) for seg in specs]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                rules: RuleSet) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            out["tokens"] = _sds((b, s), jnp.int32, mesh,
+                                 _batch_spec(mesh, rules, b, 1))
+        elif cfg.input_mode == "embeds":
+            out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16, mesh,
+                                 _batch_spec(mesh, rules, b, 2))
+        else:  # multimodal: stubbed patch embeddings + text tokens
+            n_img = cfg.image_tokens
+            out["tokens"] = _sds((b, s - n_img), jnp.int32, mesh,
+                                 _batch_spec(mesh, rules, b, 1))
+            out["image_embeds"] = _sds((b, n_img, cfg.d_model), jnp.bfloat16,
+                                       mesh, _batch_spec(mesh, rules, b, 2))
+        if shape.kind == "train":
+            out["labels"] = _sds((b, s), jnp.int32, mesh,
+                                 _batch_spec(mesh, rules, b, 1))
+    else:  # decode: ONE new token against a full cache
+        if cfg.input_mode in ("tokens", "multimodal"):
+            out["tokens"] = _sds((b,), jnp.int32, mesh,
+                                 _batch_spec(mesh, rules, b, 0))
+        else:
+            out["embeds"] = _sds((b, cfg.d_model), jnp.bfloat16, mesh,
+                                 _batch_spec(mesh, rules, b, 1))
+    return out

@@ -1,0 +1,102 @@
+import os
+
+if "XLA_FLAGS" not in os.environ and os.environ.get("REPRO_FAKE_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_FAKE_DEVICES"])
+
+# Production training launcher: builds the mesh, shards params/optimizer
+# with the 2-D fsdp x tp rules, and runs the EE multi-ramp training loop
+# on the synthetic pipeline.  On this CPU container it is exercised with
+# small configs (examples/train_ee.py) or with REPRO_FAKE_DEVICES for
+# sharding verification; on a real TPU slice the same entry point drives
+# the production mesh.
+#
+#   PYTHONPATH=src python -m repro.launch.train --arch paper-ee-100m \
+#       --steps 200 --batch 8 --seq 256 [--smoke] [--mesh 1x1]
+
+import argparse      # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+
+from repro.configs import get_config                     # noqa: E402
+from repro.data.pipeline import DataConfig, batches      # noqa: E402
+from repro.launch.mesh import make_local_mesh            # noqa: E402
+from repro.models import model as M                      # noqa: E402
+from repro.models.param import materialize               # noqa: E402
+from repro.sharding.ctx import activation_sharding       # noqa: E402
+from repro.sharding.rules import FSDP_TRAIN_RULES, spec_for  # noqa: E402
+from repro.training import checkpoint                    # noqa: E402
+from repro.training.loop import make_train_step          # noqa: E402
+from repro.training.optimizer import (AdamWConfig,       # noqa: E402
+                                      init_opt_state)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-ee-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="1x1",
+                    help="dataxmodel, e.g. 4x2 (needs that many devices)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_local_mesh(d, m)
+    rules = FSDP_TRAIN_RULES
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 1))
+
+    key = jax.random.PRNGKey(0)
+    defs = M.model_defs(cfg)
+    params = materialize(defs, key)
+    opt_state = init_opt_state(params)
+
+    step_fn = make_train_step(cfg, opt_cfg,
+                              num_microbatches=args.microbatches)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq + 1,
+                          global_batch=args.batch)
+    it = batches(data_cfg)
+
+    if mesh.size > 1:
+        shard = lambda tree_defs, tree: jax.tree.map(
+            lambda df, x: jax.device_put(x, NamedSharding(
+                mesh, spec_for(mesh, rules, df.shape, df.axes))),
+            tree_defs, tree,
+            is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"))
+        params = shard(defs, params)
+        opt_state = {"mu": shard(defs, opt_state["mu"]),
+                     "nu": shard(defs, opt_state["nu"]),
+                     "step": opt_state["step"]}
+    batch_axes = ("data",) if args.batch % d == 0 and d > 1 else None
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    t0 = time.time()
+    with mesh, activation_sharding(batch_axes):
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                mm = {k: float(v) for k, v in metrics.items()}
+                print(f"step {step:5d} loss {mm['loss']:.4f} "
+                      f"ce_final {mm['ce_final']:.4f} "
+                      f"lr {mm['lr']:.2e} "
+                      f"({(time.time() - t0):.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % 100 == 0:
+                checkpoint.save(
+                    f"{args.ckpt_dir}/state_{step + 1}.ckpt",
+                    {"params": params}, step + 1)
+    print("done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: composable JAX decoder blocks (GQA/MLA attention, dense &
+MoE MLPs, Mamba2 SSD, Hymba hybrid) assembled into early-exit segmented
+models — every segment boundary is a T-Tamer node."""
+
+from repro.models.config import (AttnConfig, BlockConfig, MLAConfig,
+                                 ModelConfig, MoEConfig, Segment, SSMConfig)
+from repro.models import model, param
+
+__all__ = ["AttnConfig", "BlockConfig", "MLAConfig", "ModelConfig",
+           "MoEConfig", "Segment", "SSMConfig", "model", "param"]

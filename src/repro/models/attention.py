@@ -1,0 +1,433 @@
+"""Attention mixers: GQA (with qk-norm / sliding window) and MLA
+(DeepSeek-V2 Multi-head Latent Attention), each with a training/prefill
+path and a single-token decode path against a ring-buffer KV cache.
+
+Cache layout (fixed shapes — TPU-friendly, see DESIGN.md §3):
+  GQA:  k, v: (B, C, Hkv, hd); pos: (B, C) absolute positions (-1 empty).
+  MLA:  c_kv: (B, C, lora); k_rope: (B, C, rope_dim); pos: (B, C).
+C = min(seq_len, window) — sliding windows bound the decode cache.
+
+The einsum/jnp path is what the multi-pod dry-run lowers (XLA fuses it and
+GSPMD shards it); the Pallas flash kernel (repro.kernels.flash_attention)
+is the TPU hot-path for prefill, validated against `kernels.ref` in
+interpret mode and enabled via ``use_flash=True``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import causal_mask, rms_norm, rope, rope_cos_sin
+from repro.models.config import AttnConfig
+from repro.models.param import ParamDef
+
+__all__ = ["attn_defs", "attn_forward", "attn_decode", "init_cache_defs"]
+
+
+# --------------------------------------------------------------------------
+# Parameter definitions
+# --------------------------------------------------------------------------
+
+def attn_defs(cfg: AttnConfig, d_model: int) -> dict:
+    if cfg.mla is not None:
+        m = cfg.mla
+        h = cfg.n_heads
+        defs = {
+            "wq": ParamDef((d_model, h * (m.qk_nope_head_dim
+                                          + m.qk_rope_head_dim)),
+                           ("embed", "heads")),
+            "w_dkv": ParamDef((d_model, m.kv_lora_rank + m.qk_rope_head_dim),
+                              ("embed", None)),
+            "kv_norm": ParamDef((m.kv_lora_rank,), (None,), init="ones"),
+            "w_uk": ParamDef((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                             (None, "heads")),
+            "w_uv": ParamDef((m.kv_lora_rank, h * m.v_head_dim),
+                             (None, "heads")),
+            "wo": ParamDef((h * m.v_head_dim, d_model), ("heads", "embed")),
+        }
+        if m.q_lora_rank:
+            defs["w_dq"] = ParamDef((d_model, m.q_lora_rank), ("embed", None))
+            defs["q_norm"] = ParamDef((m.q_lora_rank,), (None,), init="ones")
+            defs["wq"] = ParamDef(
+                (m.q_lora_rank, h * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+                (None, "heads"))
+        return defs
+
+    defs = {
+        "wq": ParamDef((d_model, cfg.n_heads * cfg.head_dim),
+                       ("embed", "heads")),
+        "wk": ParamDef((d_model, cfg.n_kv_heads * cfg.head_dim),
+                       ("embed", "kv_heads")),
+        "wv": ParamDef((d_model, cfg.n_kv_heads * cfg.head_dim),
+                       ("embed", "kv_heads")),
+        "wo": ParamDef((cfg.n_heads * cfg.head_dim, d_model),
+                       ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((cfg.head_dim,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((cfg.head_dim,), (None,), init="ones")
+    return defs
+
+
+def init_cache_defs(cfg: AttnConfig, batch: int, cache_len: int) -> dict:
+    """ShapeDtypeStruct-compatible cache spec (used by input_specs).
+
+    Under the `cache_int8` context the K/V (or MLA latent) tensors are
+    int8 with per-(position, head) bf16 scales — models.quant."""
+    from repro.models.quant import int8_enabled
+    i8 = int8_enabled()
+    kv_dt = jnp.int8 if i8 else jnp.bfloat16
+    if cfg.mla is not None:
+        m = cfg.mla
+        out = {
+            "c_kv": ((batch, cache_len, m.kv_lora_rank), kv_dt),
+            "k_rope": ((batch, cache_len, m.qk_rope_head_dim), kv_dt),
+            "pos": ((batch, cache_len), jnp.int32),
+        }
+        if i8:
+            out["c_kv_s"] = ((batch, cache_len), jnp.bfloat16)
+            out["k_rope_s"] = ((batch, cache_len), jnp.bfloat16)
+        return out
+    out = {
+        "k": ((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), kv_dt),
+        "v": ((batch, cache_len, cfg.n_kv_heads, cfg.head_dim), kv_dt),
+        "pos": ((batch, cache_len), jnp.int32),
+    }
+    if i8:
+        out["k_s"] = ((batch, cache_len, cfg.n_kv_heads), jnp.bfloat16)
+        out["v_s"] = ((batch, cache_len, cfg.n_kv_heads), jnp.bfloat16)
+    return out
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(*x.shape[:-1], n_heads, head_dim)
+
+
+_CHUNK_THRESHOLD = 16_384  # chunk queries above this seq len
+_Q_CHUNK = 2_048
+
+# Prefill attention implementation (perf hillclimb lever, EXPERIMENTS.md
+# §Perf): "chunked" = lax.map over query chunks with FULL kv columns
+# (paper-faithful baseline); "banded" = per-chunk kv slicing — causal
+# chunks only read kv[0 : chunk_end], windowed chunks only the
+# [chunk_start - window, chunk_end) band, cutting score traffic ~2x
+# (causal) to ~S/(Qc+w) (windowed).
+import contextlib
+import contextvars
+
+_ATTN_IMPL = contextvars.ContextVar("repro_attn_impl", default="banded")
+
+
+@contextlib.contextmanager
+def attention_impl(name: str):
+    assert name in ("chunked", "banded")
+    tok = _ATTN_IMPL.set(name)
+    try:
+        yield
+    finally:
+        _ATTN_IMPL.reset(tok)
+
+
+def _sdpa_chunked(q, k, v, q_pos, kv_pos, window, scale):
+    """Query-chunked attention: never materializes the (S, S) score matrix
+    — the XLA-level analogue of flash attention, used for long prefill
+    (the Pallas kernel is the TPU hot path; this keeps the dry-run's
+    memory_analysis honest).  q (B,S,H,hd); k,v (B,T,Hkv,*)."""
+    if _ATTN_IMPL.get() == "banded":
+        return _sdpa_banded(q, k, v, q_pos, kv_pos, window, scale)
+    b, s, h, hd = q.shape
+    nc = s // _Q_CHUNK
+    assert s % _Q_CHUNK == 0, "caller pads to the chunk size"
+    qc = q.reshape(b, nc, _Q_CHUNK, h, hd).swapaxes(0, 1)
+    pc = q_pos.reshape(b, nc, _Q_CHUNK).swapaxes(0, 1)
+
+    def one(args):
+        q_i, p_i = args
+        mask = causal_mask(p_i, kv_pos, window)
+        return _sdpa(q_i, k, v, mask, scale)
+
+    out = jax.lax.map(one, (qc, pc))
+    return out.swapaxes(0, 1).reshape(b, s, h, -1)
+
+
+_CAUSAL_GROUPS = 4  # causal banding: unroll factor (bounds live buffers)
+
+
+def _sdpa_banded(q, k, v, q_pos, kv_pos, window, scale):
+    """Banded chunked attention (EXPERIMENTS.md §Perf): each query chunk
+    reads only the kv it can attend to, with bounded live memory.
+
+    * windowed: constant-size band (window rounded up to a chunk + one
+      chunk), gathered with lax.dynamic_slice inside lax.map — buffers are
+      reused across chunks, traffic/FLOPs drop ~S/(w+Qc).
+    * causal: chunks are processed in _CAUSAL_GROUPS groups; group g's
+      chunks run under one lax.map against kv[: group_end] — ~1.6x
+      traffic/FLOPs cut at unroll factor 4 (limit 2x), no 16x live set.
+
+    Assumes the standard prefill layout (q_pos == kv_pos, contiguous)."""
+    b, s, h, hd = q.shape
+    qc = _Q_CHUNK
+    nc = s // qc
+
+    if window is not None:
+        band = ((window + qc - 1) // qc + 1) * qc      # static band size
+        band = min(band, s)
+        kp = jnp.pad(k, ((0, 0), (band - qc, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (band - qc, 0), (0, 0), (0, 0)))
+        # padded kv position j corresponds to absolute j - (band - qc)
+        pad_pos = jnp.pad(kv_pos, ((0, 0), (band - qc, 0)),
+                          constant_values=-1)
+        qg = q.reshape(b, nc, qc, h, hd).swapaxes(0, 1)
+        pg = q_pos.reshape(b, nc, qc).swapaxes(0, 1)
+        idx = jnp.arange(nc)
+
+        def one(args):
+            q_i, p_i, i = args
+            start = i * qc  # band ends at chunk end in padded coords
+            k_i = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+            kp_i = jax.lax.dynamic_slice_in_dim(pad_pos, start, band,
+                                                axis=1)
+            mask = causal_mask(p_i, kp_i, window) & (kp_i >= 0)[:, None, :]
+            return _sdpa(q_i, k_i, v_i, mask, scale)
+
+        out = jax.lax.map(one, (qg, pg, idx))
+        return out.swapaxes(0, 1).reshape(b, s, h, -1)
+
+    # causal: grouped prefix banding
+    groups = min(_CAUSAL_GROUPS, nc)
+    assert nc % groups == 0
+    per = nc // groups
+    outs = []
+    for g in range(groups):
+        lo, hi = g * per * qc, (g + 1) * per * qc
+        qg = q[:, lo:hi].reshape(b, per, qc, h, hd).swapaxes(0, 1)
+        pg = q_pos[:, lo:hi].reshape(b, per, qc).swapaxes(0, 1)
+        k_g, v_g = k[:, :hi], v[:, :hi]
+        kp_g = kv_pos[:, :hi]
+
+        def one(args, k_g=k_g, v_g=v_g, kp_g=kp_g):
+            q_i, p_i = args
+            mask = causal_mask(p_i, kp_g, None)
+            return _sdpa(q_i, k_g, v_g, mask, scale)
+
+        og = jax.lax.map(one, (qg, pg))
+        outs.append(og.swapaxes(0, 1).reshape(b, hi - lo, h, -1))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,S,H,hd), k (B,T,Hkv,hd), v (B,T,Hkv,vd) with H = G*Hkv
+    (vd may differ from hd, e.g. MLA).  mask (B,S,T) or (S,T)."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    g = h // hkv
+    q = q.reshape(b, s, hkv, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, vd)
+
+
+def attn_forward(p: dict, x: jax.Array, positions: jax.Array,
+                 cfg: AttnConfig, eps: float = 1e-5,
+                 use_flash: bool = False):
+    """Full self-attention (train / prefill).
+
+    Returns (y, cache_entries) where cache_entries holds what decode needs.
+    """
+    if cfg.mla is not None:
+        return _mla_forward(p, x, positions, cfg, eps)
+    b, s, d = x.shape
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm({"scale": p["q_norm"]}, q, eps)
+        k = rms_norm({"scale": p["k_norm"]}, k, eps)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, scale=scale, causal=True,
+                                   window=cfg.window)
+    elif s >= _CHUNK_THRESHOLD and s % _Q_CHUNK == 0:
+        out = _sdpa_chunked(q, k, v, positions, positions, cfg.window, scale)
+    else:
+        mask = causal_mask(positions, positions, cfg.window)
+        out = _sdpa(q, k, v, mask, scale)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                cfg: AttnConfig, eps: float = 1e-5):
+    """One-token decode against the ring-buffer cache.
+
+    Args:
+      x: (B, 1, D) current token activations.
+      cache: {"k","v": (B,C,Hkv,hd), "pos": (B,C)}.
+      pos: (B,) absolute position of the new token.
+
+    Returns (y, new_cache).
+    """
+    if cfg.mla is not None:
+        return _mla_decode(p, x, cache, pos, cfg, eps)
+    b, _, d = x.shape
+    c = cache["k"].shape[1]
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm({"scale": p["q_norm"]}, q, eps)
+        k = rms_norm({"scale": p["k_norm"]}, k, eps)
+    cos, sin = rope_cos_sin(pos[:, None], cfg.head_dim, cfg.rope_theta)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+
+    slot = (pos % c).astype(jnp.int32)                       # ring write
+    bidx = jnp.arange(b)
+    new_cache = dict(cache)
+    if "k_s" in cache:  # int8 cache path (models.quant)
+        from repro.models.quant import dequantize_rows, quantize_rows
+        kq, ks = quantize_rows(k[:, 0])
+        vq, vs = quantize_rows(v[:, 0])
+        new_cache["k"] = cache["k"].at[bidx, slot].set(kq)
+        new_cache["v"] = cache["v"].at[bidx, slot].set(vq)
+        new_cache["k_s"] = cache["k_s"].at[bidx, slot].set(ks)
+        new_cache["v_s"] = cache["v_s"].at[bidx, slot].set(vs)
+        k_full = dequantize_rows(new_cache["k"], new_cache["k_s"], q.dtype)
+        v_full = dequantize_rows(new_cache["v"], new_cache["v_s"], q.dtype)
+    else:
+        new_cache["k"] = cache["k"].at[bidx, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[bidx, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
+        k_full = new_cache["k"].astype(q.dtype)
+        v_full = new_cache["v"].astype(q.dtype)
+    new_pos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    new_cache["pos"] = new_pos
+
+    mask = causal_mask(pos[:, None], new_pos, cfg.window)    # (B,1,C)
+    mask &= new_pos[:, None, :] >= 0
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    out = _sdpa(q, k_full, v_full, mask, scale)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# --------------------------------------------------------------------------
+
+def _mla_q(p, x, cfg: AttnConfig, eps):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = rms_norm({"scale": p["q_norm"]}, x @ p["w_dq"], eps)
+        q = cq @ p["wq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(*x.shape[:-1], cfg.n_heads,
+                  m.qk_nope_head_dim + m.qk_rope_head_dim)
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def _mla_forward(p, x, positions, cfg: AttnConfig, eps):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, eps)
+    dkv = x @ p["w_dkv"]
+    c_kv = rms_norm({"scale": p["kv_norm"]}, dkv[..., :m.kv_lora_rank], eps)
+    k_rope = dkv[..., m.kv_lora_rank:]                       # (B,S,rope)
+    cos, sin = rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = rope(q_rope, cos, sin)
+    k_rope = rope(k_rope[..., None, :], cos, sin)            # (B,S,1,rope)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(
+        m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if s >= _CHUNK_THRESHOLD and s % _Q_CHUNK == 0:
+        out = _sdpa_chunked(q, k, v, positions, positions, cfg.window, scale)
+    else:
+        mask = causal_mask(positions, positions, cfg.window)
+        out = _sdpa(q, k, v, mask, scale)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
+
+
+def _mla_decode(p, x, cache, pos, cfg: AttnConfig, eps):
+    """Absorbed-matmul MLA decode: attention runs in the compressed
+    kv_lora space — the cache stays (B, C, lora + rope), which is the
+    whole point of MLA (DESIGN.md §4)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    c = cache["c_kv"].shape[1]
+    q_nope, q_rope = _mla_q(p, x, cfg, eps)                  # (B,1,H,*)
+    dkv = x @ p["w_dkv"]
+    c_new = rms_norm({"scale": p["kv_norm"]}, dkv[..., :m.kv_lora_rank], eps)
+    k_rope_new = dkv[..., m.kv_lora_rank:]
+    cos, sin = rope_cos_sin(pos[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = rope(q_rope, cos, sin)
+    k_rope_new = rope(k_rope_new[..., None, :], cos, sin)[..., 0, :]
+
+    slot = (pos % c).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    new_cache = dict(cache)
+    if "c_kv_s" in cache:  # int8 latent cache (models.quant)
+        from repro.models.quant import dequantize_rows, quantize_rows
+        cq, cs = quantize_rows(c_new[:, 0])
+        rq, rs = quantize_rows(k_rope_new[:, 0])
+        new_cache["c_kv"] = cache["c_kv"].at[bidx, slot].set(cq)
+        new_cache["c_kv_s"] = cache["c_kv_s"].at[bidx, slot].set(cs)
+        new_cache["k_rope"] = cache["k_rope"].at[bidx, slot].set(rq)
+        new_cache["k_rope_s"] = cache["k_rope_s"].at[bidx, slot].set(rs)
+        ckv = dequantize_rows(new_cache["c_kv"], new_cache["c_kv_s"])
+        krope = dequantize_rows(new_cache["k_rope"], new_cache["k_rope_s"])
+    else:
+        ckv = cache["c_kv"].at[bidx, slot].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        krope = cache["k_rope"].at[bidx, slot].set(
+            k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+        new_cache["c_kv"] = ckv
+        new_cache["k_rope"] = krope
+    new_pos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    new_cache["pos"] = new_pos
+
+    # Absorb W_uk into q: q_c[b,h,r] = sum_n q_nope[b,h,n] W_uk[r, h, n]
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    scores = jnp.einsum("bhr,btr->bht", q_c, ckv.astype(q_c.dtype))
+    scores += jnp.einsum("bhe,bte->bht", q_rope[:, 0],
+                         krope.astype(q_rope.dtype))
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(
+        m.qk_nope_head_dim + m.qk_rope_head_dim)
+    mask = causal_mask(pos[:, None], new_pos, cfg.window)[:, 0]  # (B,C)
+    mask &= new_pos >= 0
+    logits = jnp.where(mask[:, None, :], scores.astype(jnp.float32) * scale,
+                       -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx_c = jnp.einsum("bht,btr->bhr", w, ckv.astype(w.dtype))  # (B,H,lora)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", ctx_c, w_uv)
+    y = out.reshape(b, 1, h * m.v_head_dim) @ p["wo"]
+    return y, new_cache

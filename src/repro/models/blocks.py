@@ -1,0 +1,152 @@
+"""Block assembly: pre-norm residual blocks for attn / ssm / hybrid mixers
+with dense or MoE MLPs, plus ring-cache construction after prefill."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, moe as moe_lib, mlp as mlp_lib, ssm as ssm_lib
+from repro.models.common import rms_norm, rms_norm_def
+from repro.models.config import BlockConfig
+from repro.models.param import ParamDef
+
+__all__ = ["block_defs", "block_forward", "block_decode", "cache_defs",
+           "build_ring_cache"]
+
+
+def block_defs(cfg: BlockConfig, d_model: int) -> dict:
+    defs: dict = {"norm1": rms_norm_def(d_model)}
+    if cfg.mixer in ("attn", "hybrid"):
+        defs["attn"] = attention.attn_defs(cfg.attn, d_model)
+    if cfg.mixer in ("ssm", "hybrid"):
+        defs["ssm"] = ssm_lib.ssm_defs(cfg.ssm, d_model)
+    if cfg.mixer == "hybrid":
+        # Hymba: per-branch output norms, fused by averaging (DESIGN.md §4).
+        defs["attn_out_norm"] = rms_norm_def(d_model)
+        defs["ssm_out_norm"] = rms_norm_def(d_model)
+    if cfg.mlp == "dense":
+        defs["norm2"] = rms_norm_def(d_model)
+        defs["mlp"] = mlp_lib.mlp_defs(d_model, cfg.d_ff, cfg.act)
+    elif cfg.mlp == "moe":
+        defs["norm2"] = rms_norm_def(d_model)
+        defs["moe"] = moe_lib.moe_defs(cfg.moe, d_model, cfg.act)
+    return defs
+
+
+def cache_defs(cfg: BlockConfig, d_model: int, batch: int,
+               cache_len: int) -> dict:
+    """(shape, dtype) spec tree for one block's decode cache."""
+    out: dict = {}
+    if cfg.mixer in ("attn", "hybrid"):
+        out["attn"] = attention.init_cache_defs(cfg.attn, batch, cache_len)
+    if cfg.mixer in ("ssm", "hybrid"):
+        out["ssm"] = ssm_lib.ssm_state_defs(cfg.ssm, d_model, batch)
+    return out
+
+
+def _mixer_full(p, xn, positions, cfg: BlockConfig, eps, use_flash,
+                use_ssd_kernel):
+    """Full-sequence mixer.  Returns (y, cache_entry)."""
+    if cfg.mixer == "attn":
+        y, kv = attention.attn_forward(p["attn"], xn, positions, cfg.attn,
+                                       eps, use_flash)
+        return y, {"attn_kv": kv}
+    if cfg.mixer == "ssm":
+        y, st = ssm_lib.ssm_forward(p["ssm"], xn, cfg.ssm, eps,
+                                    use_ssd_kernel)
+        return y, {"ssm": st}
+    # hybrid: parallel attention + SSD heads on the same normed input
+    ya, kv = attention.attn_forward(p["attn"], xn, positions, cfg.attn,
+                                    eps, use_flash)
+    ys, st = ssm_lib.ssm_forward(p["ssm"], xn, cfg.ssm, eps, use_ssd_kernel)
+    y = 0.5 * (rms_norm(p["attn_out_norm"], ya, eps)
+               + rms_norm(p["ssm_out_norm"], ys, eps))
+    return y, {"attn_kv": kv, "ssm": st}
+
+
+def block_forward(p: dict, x: jax.Array, positions: jax.Array,
+                  cfg: BlockConfig, eps: float = 1e-5,
+                  use_flash: bool = False, use_ssd_kernel: bool = False):
+    """Train/prefill pass.  Returns (y, cache_entry, aux)."""
+    aux: dict = {}
+    xn = rms_norm(p["norm1"], x, eps)
+    mix, cache = _mixer_full(p, xn, positions, cfg, eps, use_flash,
+                             use_ssd_kernel)
+    x = x + mix
+    if cfg.mlp == "dense":
+        x = x + mlp_lib.mlp_forward(p["mlp"], rms_norm(p["norm2"], x, eps),
+                                    cfg.act)
+    elif cfg.mlp == "moe":
+        y, aux = moe_lib.moe_forward(p["moe"], rms_norm(p["norm2"], x, eps),
+                                     cfg.moe, cfg.act)
+        x = x + y
+    return x, cache, aux
+
+
+def block_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                 cfg: BlockConfig, eps: float = 1e-5):
+    """One-token step.  x (B,1,D); returns (y, new_cache, aux)."""
+    aux: dict = {}
+    xn = rms_norm(p["norm1"], x, eps)
+    new_cache: dict = {}
+    if cfg.mixer == "attn":
+        mix, new_cache["attn"] = attention.attn_decode(
+            p["attn"], xn, cache["attn"], pos, cfg.attn, eps)
+    elif cfg.mixer == "ssm":
+        mix, new_cache["ssm"] = ssm_lib.ssm_decode(
+            p["ssm"], xn, cache["ssm"], cfg.ssm, eps)
+    else:
+        ya, new_cache["attn"] = attention.attn_decode(
+            p["attn"], xn, cache["attn"], pos, cfg.attn, eps)
+        ys, new_cache["ssm"] = ssm_lib.ssm_decode(
+            p["ssm"], xn, cache["ssm"], cfg.ssm, eps)
+        mix = 0.5 * (rms_norm(p["attn_out_norm"], ya, eps)
+                     + rms_norm(p["ssm_out_norm"], ys, eps))
+    x = x + mix
+    if cfg.mlp == "dense":
+        x = x + mlp_lib.mlp_forward(p["mlp"], rms_norm(p["norm2"], x, eps),
+                                    cfg.act)
+    elif cfg.mlp == "moe":
+        y, aux = moe_lib.moe_forward(p["moe"], rms_norm(p["norm2"], x, eps),
+                                     cfg.moe, cfg.act)
+        x = x + y
+    return x, new_cache, aux
+
+
+def build_ring_cache(cache_entry: dict, positions: jax.Array,
+                     cfg: BlockConfig, cache_len: int) -> dict:
+    """Convert prefill outputs into the fixed-size ring decode cache.
+
+    Takes the last `cache_len` positions and scatters them at slot
+    pos % cache_len — for full prefixes this is the identity layout, for
+    windowed attention it reproduces the steady-state ring.
+    """
+    out: dict = {}
+    if "attn_kv" in cache_entry:
+        kv = cache_entry["attn_kv"]
+        pos_tail = positions[:, -cache_len:]
+        slots = (pos_tail % cache_len).astype(jnp.int32)      # (B, C)
+        b = pos_tail.shape[0]
+        bidx = jnp.arange(b)[:, None]
+
+        def scatter(src):
+            tail = src[:, -cache_len:]
+            buf = jnp.zeros((b, cache_len) + tail.shape[2:],
+                            jnp.bfloat16)
+            return buf.at[bidx, slots].set(tail.astype(jnp.bfloat16))
+
+        entry = {k: scatter(v) for k, v in kv.items()}
+        from repro.models.quant import int8_enabled, quantize_rows
+        if int8_enabled():
+            for name in list(entry):
+                q, s = quantize_rows(entry[name])
+                entry[name] = q
+                entry[name + "_s"] = s
+        pos_buf = jnp.full((b, cache_len), -1, jnp.int32)
+        entry["pos"] = pos_buf.at[bidx, slots].set(
+            pos_tail.astype(jnp.int32))
+        out["attn"] = entry
+    if "ssm" in cache_entry:
+        out["ssm"] = cache_entry["ssm"]
+    return out

@@ -1,0 +1,61 @@
+"""Shared low-level layers: RMSNorm, RoPE, embeddings, masks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+__all__ = ["rms_norm", "rms_norm_def", "rope", "rope_cos_sin",
+           "causal_mask", "embed_def"]
+
+
+def rms_norm_def(dim: int, axis: str = "embed") -> dict:
+    return {"scale": ParamDef((dim,), (axis,), init="ones")}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_def(vocab: int, d_model: int) -> dict:
+    return {"table": ParamDef((vocab, d_model), ("vocab", "embed"),
+                              init="embed", scale=0.02)}
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int,
+                 theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Apply rotary embedding.  x: (..., seq, heads, head_dim);
+    cos/sin: (..., seq, head_dim//2) — broadcast over the heads axis."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def causal_mask(q_pos: jax.Array, kv_pos: jax.Array,
+                window: int | None = None) -> jax.Array:
+    """Boolean (..., q, kv) mask: True = attend.
+
+    q_pos (..., q), kv_pos (..., kv) are absolute positions; a sliding
+    window additionally requires kv_pos > q_pos - window.
+    """
+    m = kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= kv_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return m

@@ -1,0 +1,31 @@
+"""Dense MLPs (SwiGLU / GeLU), Megatron column->row parallel layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+__all__ = ["mlp_defs", "mlp_forward"]
+
+
+def mlp_defs(d_model: int, d_ff: int, act: str) -> dict:
+    defs = {
+        "w_up": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+    if act == "swiglu":
+        defs["w_gate"] = ParamDef((d_model, d_ff), ("embed", "mlp"))
+    return defs
+
+
+def mlp_forward(p: dict, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"]

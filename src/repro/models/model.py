@@ -1,0 +1,302 @@
+"""Model assembly: segments of scanned blocks with early-exit ramps.
+
+Public API (all pure functions over a params pytree):
+  * ``model_defs(cfg)``       — ParamDef tree (shapes + logical axes).
+  * ``forward_train(...)``    — full pass, EE multi-ramp loss (train_step).
+  * ``prefill(...)``          — full pass, builds ring KV caches + per-ramp
+                                confidences of the last position.
+  * ``decode_step(...)``      — one-token step over all segments.
+  * ``decode_segment(...)``   — one segment only (the serving engine's unit
+                                of work: run segment, consult T-Tamer
+                                if-stop table, maybe exit — DESIGN.md §2).
+
+Ramp heads are a per-ramp RMSNorm + the shared (tied) unembedding — the
+"logit lens" ramp, cheap in parameters; per-node cost c_i for T-Tamer is
+the segment's FLOPs (benchmarks/flops.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.common import embed_def, rms_norm, rms_norm_def
+from repro.models.config import ModelConfig, Segment
+from repro.models.param import ParamDef
+from repro.sharding.ctx import constrain_batch
+
+__all__ = ["model_defs", "forward_train", "prefill", "decode_step",
+           "decode_segment", "cache_specs", "unembed", "decode_unroll"]
+
+# Decode-layer execution (perf hillclimb lever, EXPERIMENTS.md §Perf):
+# scan (default) keeps HLO small; unrolled decode removes the per-step
+# dynamic-slice copies of the stacked layer weights — the standard
+# production choice for serving steps.
+import contextlib
+import contextvars
+
+_DECODE_UNROLL = contextvars.ContextVar("repro_decode_unroll", default=False)
+
+
+@contextlib.contextmanager
+def decode_unroll(on: bool = True):
+    tok = _DECODE_UNROLL.set(on)
+    try:
+        yield
+    finally:
+        _DECODE_UNROLL.reset(tok)
+
+
+# --------------------------------------------------------------------------
+# Parameter definitions
+# --------------------------------------------------------------------------
+
+def _stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      axes=("layers",) + d.axes,
+                                      fan_axis=d.fan_axis + 1),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    defs: dict = {}
+    if cfg.input_mode in ("tokens", "multimodal"):
+        defs["embed"] = embed_def(cfg.vocab, cfg.d_model)
+    elif cfg.tie_embeddings:
+        # embeds-in models still need the output table
+        defs["embed"] = embed_def(cfg.vocab, cfg.d_model)
+    segs = []
+    for seg in cfg.segments:
+        sd: dict = {"blocks": _stack_defs(
+            blocks.block_defs(seg.block, cfg.d_model), seg.n_layers)}
+        if seg.ramp:
+            sd["ramp"] = {"norm": rms_norm_def(cfg.d_model)}
+        segs.append(sd)
+    defs["segments"] = segs
+    defs["final_norm"] = rms_norm_def(cfg.d_model)
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"))
+    return defs
+
+
+def unembed(params: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["table"].T.astype(h.dtype)
+    return h @ params["unembed"].astype(h.dtype)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """Returns (x (B,S,D), positions (B,S))."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"]["table"][batch["tokens"]]
+    elif cfg.input_mode == "embeds":
+        x = batch["embeds"]
+    elif cfg.input_mode == "multimodal":
+        tok = params["embed"]["table"][batch["tokens"]]
+        x = jnp.concatenate([batch["image_embeds"].astype(tok.dtype), tok],
+                            axis=1)
+    else:
+        raise ValueError(cfg.input_mode)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return constrain_batch(x), positions
+
+
+def _merge_aux(total: dict, aux_stack: dict) -> dict:
+    for k, v in aux_stack.items():
+        total[k] = total.get(k, 0.0) + jnp.sum(v)
+    return total
+
+
+# --------------------------------------------------------------------------
+# Full-sequence passes
+# --------------------------------------------------------------------------
+
+def _run_segments(params, cfg: ModelConfig, x, positions, *,
+                  want_cache: bool, cache_len: int | None,
+                  remat: bool, use_flash: bool, use_ssd_kernel: bool):
+    """Returns (final_hidden, ramp_hiddens, caches, aux)."""
+    ramp_hiddens = []
+    caches = []
+    aux: dict = {}
+    for si, seg in enumerate(cfg.segments):
+        p_seg = params["segments"][si]["blocks"]
+
+        if want_cache:
+            def body(h, p_layer, seg=seg):
+                y, cache, a = blocks.block_forward(
+                    p_layer, h, positions, seg.block, cfg.norm_eps,
+                    use_flash, use_ssd_kernel)
+                ring = blocks.build_ring_cache(cache, positions, seg.block,
+                                               cache_len)
+                return y, (ring, a)
+        else:
+            def body(h, p_layer, seg=seg):
+                y, _, a = blocks.block_forward(
+                    p_layer, h, positions, seg.block, cfg.norm_eps,
+                    use_flash, use_ssd_kernel)
+                return y, a
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if want_cache:
+            x, (ring_stack, aux_stack) = jax.lax.scan(body, x, p_seg)
+            caches.append(ring_stack)
+        else:
+            x, aux_stack = jax.lax.scan(body, x, p_seg)
+        x = constrain_batch(x)  # re-anchor residual-stream sharding
+        aux = _merge_aux(aux, aux_stack)
+        if seg.ramp:
+            rp = params["segments"][si]["ramp"]
+            ramp_hiddens.append(rms_norm(rp["norm"], x, cfg.norm_eps))
+    return x, ramp_hiddens, caches, aux
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over valid (label >= 0) positions.  logits (B,S,V)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32),
+        jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = labels >= 0
+    ce = jnp.where(valid, lse - ll, 0.0)
+    return ce.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def forward_train(params, cfg: ModelConfig, batch: dict, *,
+                  ramp_loss_weight: float = 0.3, remat: bool = True,
+                  use_flash: bool = False, use_ssd_kernel: bool = False):
+    """EE training objective: CE(final) + w * mean_r CE(ramp_r) + MoE aux.
+
+    batch: {"tokens"/"embeds"/"image_embeds", "labels" (B, S_total)}.
+    Returns (loss, metrics dict).
+    """
+    x, positions = _embed_inputs(params, cfg, batch)
+    final, ramps, _, aux = _run_segments(
+        params, cfg, x, positions, want_cache=False, cache_len=None,
+        remat=remat, use_flash=use_flash, use_ssd_kernel=use_ssd_kernel)
+    final = rms_norm(params["final_norm"], final, cfg.norm_eps)
+    labels = batch["labels"]
+    loss = _xent(unembed(params, cfg, final), labels)
+    metrics = {"ce_final": loss}
+    if ramps:
+        ramp_ce = 0.0
+        for ri, h in enumerate(ramps):
+            ce = _xent(unembed(params, cfg, h), labels)
+            metrics[f"ce_ramp{ri}"] = ce
+            ramp_ce += ce
+        loss = loss + ramp_loss_weight * ramp_ce / len(ramps)
+    for k, v in aux.items():
+        metrics[k] = v
+        loss = loss + v
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _conf_last(params, cfg, h_last: jax.Array) -> jax.Array:
+    """1 - max softmax prob at the last position: the T-Tamer loss proxy
+    ell(x) = 1 - confidence (paper §6 / App. D.2).  h_last: (B, D)."""
+    logits = unembed(params, cfg, h_last[:, None, :])[:, 0]
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return 1.0 - p.max(axis=-1)
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache_len: int, *,
+            use_flash: bool = False, use_ssd_kernel: bool = False):
+    """Serving prefill: returns (last_logits (B,V), caches, ramp_losses
+    (B, n_nodes), next_pos (B,)).  n_nodes = ramps + final (the T-Tamer
+    line; the final head is the last node)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+    final, ramps, caches, _ = _run_segments(
+        params, cfg, x, positions, want_cache=True, cache_len=cache_len,
+        remat=False, use_flash=use_flash, use_ssd_kernel=use_ssd_kernel)
+    final = rms_norm(params["final_norm"], final, cfg.norm_eps)
+    logits = unembed(params, cfg, final[:, -1:, :])[:, 0]
+    node_losses = [_conf_last(params, cfg, h[:, -1, :]) for h in ramps]
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    node_losses.append(1.0 - p.max(axis=-1))
+    next_pos = positions[:, -1] + 1
+    return logits, caches, jnp.stack(node_losses, axis=1), next_pos
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def decode_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
+                   cache_seg, pos: jax.Array):
+    """Run segment `si` for one token.  x (B,1,D) -> (x', new_cache, loss
+    proxy (B,) or None if the segment has no ramp)."""
+    seg = cfg.segments[si]
+    p_seg = params["segments"][si]["blocks"]
+
+    if _DECODE_UNROLL.get():
+        layer_caches = []
+        for li in range(seg.n_layers):
+            p_layer = jax.tree.map(lambda a, li=li: a[li], p_seg)
+            cache_layer = jax.tree.map(lambda a, li=li: a[li], cache_seg)
+            x, nc, _ = blocks.block_decode(p_layer, x, cache_layer, pos,
+                                           seg.block, cfg.norm_eps)
+            layer_caches.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *layer_caches)
+    else:
+        def body(h, xs):
+            p_layer, cache_layer = xs
+            y, new_cache, _ = blocks.block_decode(
+                p_layer, h, cache_layer, pos, seg.block, cfg.norm_eps)
+            return y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (p_seg, cache_seg))
+    conf = None
+    if seg.ramp:
+        rp = params["segments"][si]["ramp"]
+        h = rms_norm(rp["norm"], x[:, 0, :], cfg.norm_eps)
+        conf = _conf_last(params, cfg, h)
+    return x, new_cache, conf
+
+
+def decode_step(params, cfg: ModelConfig, batch: dict, caches, pos):
+    """Full-depth one-token step (the dry-run `serve_step` for decode
+    shapes — worst case, no early exit).
+
+    batch: {"tokens": (B,)} or {"embeds": (B, D)}.
+    Returns (logits (B,V), new_caches, node_losses (B, n_nodes)).
+    """
+    if cfg.input_mode in ("tokens", "multimodal"):
+        x = params["embed"]["table"][batch["tokens"]][:, None, :]
+    else:
+        x = batch["embeds"][:, None, :]
+    x = constrain_batch(x)
+    new_caches = []
+    node_losses = []
+    for si in range(len(cfg.segments)):
+        x, nc, conf = decode_segment(params, cfg, si, x, caches[si], pos)
+        new_caches.append(nc)
+        if conf is not None:
+            node_losses.append(conf)
+    final = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params, cfg, final)[:, 0]
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    node_losses.append(1.0 - p.max(axis=-1))
+    return logits, new_caches, jnp.stack(node_losses, axis=1)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> list:
+    """(shape, dtype) spec tree for the whole decode cache (per segment,
+    stacked over the segment's layers)."""
+    out = []
+    for seg in cfg.segments:
+        cd = blocks.cache_defs(seg.block, cfg.d_model, batch, cache_len)
+        stacked = jax.tree.map(
+            lambda sd: ((seg.n_layers,) + sd[0], sd[1]),
+            cd, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple))
+        out.append(stacked)
+    return out

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer: top-k routing with GROUPED, capacity-bounded,
+sort-based dispatch; shared experts (DeepSeek-V2); load-balance + router-z
+aux losses.
+
+Why grouped + sort-based (DESIGN.md §3):
+  * GShard one-hot dispatch einsums inflate HLO FLOPs by ~E/k and would
+    wreck the roofline's useful-compute ratio — we never build them.
+  * A single global argsort over B*S*k assignments would force GSPMD to
+    emit a distributed sort; instead tokens are routed within GROUPS
+    (one group per sequence for full passes, one group for decode).  The
+    group axis shards on ("pod","data") so every sort/gather/scatter is
+    local to a data shard, and the expert axis of the batched matmuls
+    'gecd,edf->gecf' shards on "model" — expert parallelism with zero
+    GSPMD surprises.
+
+Pipeline per group:
+  router -> top-k -> stable sort by expert -> position-within-expert ->
+  capacity drop -> (E, C) token-id buffer -> gather (E, C, D) ->
+  per-expert matmuls -> weighted scatter-add back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import MoEConfig
+from repro.models.mlp import mlp_defs, mlp_forward
+from repro.models.param import ParamDef
+from repro.sharding.ctx import constrain_batch
+
+__all__ = ["moe_defs", "moe_forward"]
+
+
+def moe_defs(cfg: MoEConfig, d_model: int, act: str) -> dict:
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    defs = {
+        "router": ParamDef((d_model, e), ("embed", None), scale=0.1),
+        "w_up": ParamDef((e, d_model, f), ("experts", "embed", "mlp"),
+                         fan_axis=1),
+        "w_down": ParamDef((e, f, d_model), ("experts", "mlp", "embed"),
+                           fan_axis=1),
+    }
+    if act == "swiglu":
+        defs["w_gate"] = ParamDef((e, d_model, f),
+                                  ("experts", "embed", "mlp"), fan_axis=1)
+    if cfg.num_shared > 0:
+        shared_ff = cfg.d_ff_shared or cfg.num_shared * f
+        defs["shared"] = mlp_defs(d_model, shared_ff, act)
+    return defs
+
+
+def _group_shape(b: int, s: int) -> tuple[int, int]:
+    """One routing group per sequence for full passes; a single group for
+    decode (S == 1), so routing never crosses data shards on the batch."""
+    if s == 1:
+        return 1, b
+    return b, s
+
+
+def moe_forward(p: dict, x: jax.Array, cfg: MoEConfig, act: str):
+    """x: (B, S, D) -> (y, aux_losses dict)."""
+    b, s, d = x.shape
+    g, ng = _group_shape(b, s)
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(8, min(int(cfg.capacity_factor * k * ng / e), ng * k))
+    xg = x.reshape(g, ng, d)
+
+    logits = (xg @ p["router"]).astype(jnp.float32)          # (G, Ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, assign = jax.lax.top_k(probs, k)              # (G, Ng, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- grouped sort-based dispatch -----------------------------------
+    flat_e = assign.reshape(g, ng * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)        # (G, Ng*k)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # position within expert = rank - start-of-expert (per group)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(
+        sorted_e)                                            # (G, E)
+    rank = jnp.arange(ng * k, dtype=jnp.int32)[None, :]
+    pos = rank - jnp.take_along_axis(starts, sorted_e, axis=-1).astype(
+        jnp.int32)
+    keep = pos < cap
+    tok = (order // k).astype(jnp.int32)                     # source token
+    slot_gate = jnp.take_along_axis(gate_vals.reshape(g, ng * k), order,
+                                    axis=-1)
+
+    gidx = jnp.broadcast_to(jnp.arange(g)[:, None], (g, ng * k))
+    se = jnp.where(keep, sorted_e, e)                        # drop -> OOB
+    ps = jnp.where(keep, pos, 0)
+    buf_tok = jnp.full((g, e, cap), ng, jnp.int32)           # pad row = ng
+    buf_tok = buf_tok.at[gidx, se, ps].set(tok, mode="drop")
+    buf_gate = jnp.zeros((g, e, cap), x.dtype)
+    buf_gate = buf_gate.at[gidx, se, ps].set(slot_gate.astype(x.dtype),
+                                             mode="drop")
+
+    x_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(x_pad[:, :, None, :],
+                             buf_tok.reshape(g, -1, 1, 1), axis=1
+                             )[:, :, 0, :].reshape(g, e, cap, d)
+
+    # ---- expert-parallel batched matmuls --------------------------------
+    # anchor the group dim on the batch mesh axes (other dims replicated;
+    # GSPMD otherwise re-gathers G across data inside the expert einsums —
+    # explicitly co-sharding the expert dim was tried and REFUTED: Shardy
+    # lands on a worse fixed point, wire 5x)
+    # (EXPERIMENTS.md §Perf, phi3.5-moe prefill)
+    xe = constrain_batch(xe, batch_dim=0)
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = constrain_batch(h, batch_dim=0)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (G, E, C, D)
+    ye = constrain_batch(ye, batch_dim=0)
+
+    # ---- combine: weighted scatter-add ----------------------------------
+    # anchor the scatter OPERAND's group dim — otherwise the expert-partial
+    # all-reduce runs on the full unsharded (G, Ng, D) tensor
+    ye = ye * buf_gate[..., None]
+    y = constrain_batch(jnp.zeros((g, ng + 1, d), x.dtype), batch_dim=0)
+    gidx2 = jnp.broadcast_to(jnp.arange(g)[:, None], (g, e * cap))
+    y = y.at[gidx2, buf_tok.reshape(g, e * cap)].add(
+        ye.reshape(g, e * cap, d), mode="drop")
+    y = constrain_batch(y, batch_dim=0)
+    y = y[:, :ng].reshape(b, s, d)
+
+    if cfg.num_shared > 0:
+        y = y + mlp_forward(p["shared"], x, act)
+
+    # ---- aux losses (GShard load balance + router z) --------------------
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    one_hot = jax.nn.one_hot(assign, e, dtype=jnp.float32)
+    ce = one_hot.sum(axis=(0, 1, 2)) / (g * ng * k)
+    lb = e * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"moe_load_balance": cfg.router_aux_weight * lb,
+           "moe_router_z": cfg.router_z_weight * z}
+    return y, aux

@@ -1,0 +1,50 @@
+"""int8 KV-cache quantization (beyond-paper serving feature,
+EXPERIMENTS.md §Perf): decode is memory-bound on cache reads, so storing
+K/V (or MLA's c_kv latent) as int8 with per-(position, head) scales
+halves the dominant traffic term.  Dequantization happens at the
+attention consumer (fused on TPU).
+
+Enabled via the `cache_int8` context (dry-run `--variant int8_cache`);
+the default bf16 path is untouched.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cache_int8", "int8_enabled", "quantize_rows", "dequantize_rows"]
+
+_INT8 = contextvars.ContextVar("repro_cache_int8", default=False)
+
+
+@contextlib.contextmanager
+def cache_int8(on: bool = True):
+    tok = _INT8.set(on)
+    try:
+        yield
+    finally:
+        _INT8.reset(tok)
+
+
+def int8_enabled() -> bool:
+    return _INT8.get()
+
+
+def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 over the LAST axis: x (..., d) ->
+    (q (..., d) int8, scale (...) bf16)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)

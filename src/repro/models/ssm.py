@@ -1,0 +1,209 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked scan for train /
+prefill, O(1)-state recurrence for decode.
+
+Chunked SSD (arXiv:2405.21060 §6): the sequence is split into chunks of Q
+tokens; within a chunk the output is a masked attention-like quadratic
+form (the "dual" form — this is the MXU-friendly part the ``ssd_chunk``
+Pallas kernel tiles), while chunk-boundary states are propagated by a
+linear recurrence (lax.scan over chunks).  Decode carries
+(conv_state, ssm_state) explicitly — the cache is O(1) in sequence length,
+which is why `long_500k` runs natively on SSM architectures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rms_norm
+from repro.models.config import SSMConfig
+from repro.models.param import ParamDef
+
+__all__ = ["ssm_defs", "ssm_forward", "ssm_decode", "ssm_state_defs",
+           "ssd_chunked"]
+
+
+def _dims(cfg: SSMConfig, d_model: int):
+    di = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    conv_dim = di + 2 * gn
+    return di, h, gn, conv_dim
+
+
+def ssm_defs(cfg: SSMConfig, d_model: int) -> dict:
+    di, h, gn, conv_dim = _dims(cfg, d_model)
+    return {
+        "in_proj": ParamDef((d_model, 2 * di + 2 * gn + h),
+                            ("embed", "heads")),
+        "conv_w": ParamDef((cfg.d_conv, conv_dim), (None, "heads"),
+                           init="normal", scale=0.1),
+        "conv_b": ParamDef((conv_dim,), ("heads",), init="zeros"),
+        "a_log": ParamDef((h,), ("heads",), init="ones"),
+        "d_skip": ParamDef((h,), ("heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("heads",), init="zeros"),
+        "norm": ParamDef((di,), ("heads",), init="ones"),
+        "out_proj": ParamDef((di, d_model), ("heads", "embed")),
+    }
+
+
+def ssm_state_defs(cfg: SSMConfig, d_model: int, batch: int) -> dict:
+    di, h, gn, conv_dim = _dims(cfg, d_model)
+    return {
+        "conv": ((batch, cfg.d_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": ((batch, h, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x (B,S,C), w (K,C), b (C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., Q) -> (..., Q, Q) lower-tri segment sums:
+    out[i, j] = sum_{t=j+1..i} a_t for i >= j, -inf otherwise."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, bb, cc, chunk: int, *, use_kernel: bool = False):
+    """Chunked SSD core.
+
+    Args:
+      xh: (B, S, H, P) inputs per head.
+      dt: (B, S, H) positive step sizes (already softplus'ed).
+      a:  (H,) negative state decay rates.
+      bb: (B, S, H, N) input projections (groups already broadcast).
+      cc: (B, S, H, N) output projections.
+      chunk: chunk length Q (S % Q == 0 after padding by caller).
+
+    Returns: y (B, S, H, P), final_state (B, H, P, N).
+    """
+    b, s, h, p = xh.shape
+    n = bb.shape[-1]
+    q = chunk
+    nc = s // q
+    r = lambda t: t.reshape(b, nc, q, *t.shape[2:])
+    xh_, dt_, bb_, cc_ = r(xh), r(dt), r(bb), r(cc)
+    da = dt_ * a[None, None, None, :]                    # (B,nc,Q,H)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y_diag, states = kops.ssd_chunk(xh_, dt_, da, bb_, cc_)
+    else:
+        seg = _segsum(da.swapaxes(-1, -2))               # (B,nc,H,Q,Q)
+        l = jnp.exp(seg)
+        scores = jnp.einsum("bcqhn,bckhn->bchqk", cc_, bb_)
+        m = scores * l * dt_.swapaxes(-1, -2)[..., None, :]  # decay+step
+        y_diag = jnp.einsum("bchqk,bckhp->bcqhp", m, xh_)
+        # chunk states: sum_j exp(sum_{t>j} da) dt_j B_j x_j^T
+        cum = jnp.cumsum(da, axis=2)
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+        w = decay_to_end * dt_
+        states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w, bb_, xh_)
+
+    # inter-chunk recurrence
+    cum = jnp.cumsum(da, axis=2)                         # (B,nc,Q,H)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                    # (B,H,P,N),(B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                # emit PREV state
+
+    init = jnp.zeros((b, h, p, n), xh.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)             # (B,nc,H,P,N)
+
+    inner_decay = jnp.exp(cum)                           # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       cc_, prev_states, inner_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssm_forward(p: dict, x: jax.Array, cfg: SSMConfig,
+                eps: float = 1e-5, use_kernel: bool = False):
+    """Full-sequence SSD pass.  Returns (y, final_states dict)."""
+    b, s, d = x.shape
+    di, h, gn, conv_dim = _dims(cfg, d)
+    proj = x @ p["in_proj"]
+    z, xbc_pre, dt = jnp.split(proj, [di, di + di + 2 * gn], axis=-1)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xs, bb, cc = jnp.split(xbc, [di, di + gn], axis=-1)
+    xh = xs.reshape(b, s, h, cfg.head_dim)
+    rep = h // cfg.n_groups
+    bb = jnp.repeat(bb.reshape(b, s, cfg.n_groups, cfg.d_state), rep, axis=2)
+    cc = jnp.repeat(cc.reshape(b, s, cfg.n_groups, cfg.d_state), rep, axis=2)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32)).astype(x.dtype)
+
+    pad = (-s) % cfg.chunk
+    if pad:
+        padf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        xh, dt, bb, cc = padf(xh), padf(dt), padf(bb), padf(cc)
+    y, final = ssd_chunked(xh, dt, a, bb, cc, cfg.chunk,
+                           use_kernel=use_kernel)
+    y = y[:, :s]
+    y = y + xh[:, :s] * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rms_norm({"scale": p["norm"]}, y * jax.nn.silu(z), eps)
+    out = y @ p["out_proj"]
+    # decode conv-state = last d_conv-1 PRE-conv xBC rows
+    kc = cfg.d_conv - 1
+    tail = xbc_pre[:, -kc:, :]
+    if tail.shape[1] < kc:
+        tail = jnp.pad(tail, ((0, 0), (kc - tail.shape[1], 0), (0, 0)))
+    return out, {"conv": tail.astype(jnp.bfloat16),
+                 "ssm": final.astype(jnp.float32)}
+
+
+def ssm_decode(p: dict, x: jax.Array, state: dict, cfg: SSMConfig,
+               eps: float = 1e-5):
+    """Single-token recurrent step.  x (B,1,D); state {"conv","ssm"}."""
+    b, _, d = x.shape
+    di, h, gn, conv_dim = _dims(cfg, d)
+    proj = x[:, 0] @ p["in_proj"]                        # (B, ...)
+    z, xbc, dt = jnp.split(proj, [di, di + di + 2 * gn], axis=-1)
+    # conv over the stored window + current token
+    win = jnp.concatenate([state["conv"].astype(xbc.dtype),
+                           xbc[:, None, :]], axis=1)     # (B, d_conv, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:, :].astype(jnp.bfloat16)
+
+    xs, bb, cc = jnp.split(xbc, [di, di + gn], axis=-1)
+    xh = xs.reshape(b, h, cfg.head_dim)
+    rep = h // cfg.n_groups
+    bb = jnp.repeat(bb.reshape(b, cfg.n_groups, cfg.d_state), rep, axis=1)
+    cc = jnp.repeat(cc.reshape(b, cfg.n_groups, cfg.d_state), rep, axis=1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    ssm = state["ssm"]                                   # (B,H,P,N) f32
+    decay = jnp.exp(dt.astype(jnp.float32) * a[None, :]) # (B,H)
+    upd = (dt.astype(jnp.float32)[..., None, None]
+           * xh.astype(jnp.float32)[..., :, None]
+           * bb.astype(jnp.float32)[..., None, :])       # (B,H,P,N)
+    new_ssm = ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm,
+                   cc.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rms_norm({"scale": p["norm"]}, y * jax.nn.silu(z[:, None, :]), eps)
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,73 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher installs the batch mesh axes
+here and ``constrain_batch`` anchors the residual stream's sharding at
+segment boundaries (GSPMD propagation alone drops batch sharding after
+the vocab-sharded embedding gather — EXPERIMENTS.md §Dry-run).  Outside a
+launcher (CPU unit tests) the context is empty and everything no-ops.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["activation_sharding", "constrain_batch"]
+
+_BATCH_AXES: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_batch_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes):
+    """batch_axes: mesh-axis tuple for the batch dim, e.g. ("pod","data")."""
+    tok = _BATCH_AXES.set(tuple(batch_axes) if batch_axes else None)
+    try:
+        yield
+    finally:
+        _BATCH_AXES.reset(tok)
+
+
+def constrain_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Constrain dim `batch_dim` of x to the installed batch axes (no-op
+    when no context is installed or the dim doesn't divide)."""
+    axes = _BATCH_AXES.get()
+    if axes is None:
+        return x
+    # divisibility guard: decode-time groups/batches of 1 stay unsharded
+    mesh = getattr(jax.sharding, "get_abstract_mesh", lambda: None)()
+    if mesh is not None and getattr(mesh, "shape", None):
+        size = 1
+        for a in axes:
+            size *= mesh.shape.get(a, 1)
+        if size and x.shape[batch_dim] % size != 0:
+            return x
+    # NOTE: None dims force replication — the right anchor for the
+    # residual stream.  (P.UNCONSTRAINED was tried and REFUTED: GSPMD
+    # picked pathological shardings, wire 8x — EXPERIMENTS.md §Perf.)
+    entries = [None] * x.ndim
+    entries[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def constrain_expert(x: jax.Array, batch_dim: int = 0,
+                     expert_dim: int = 1) -> jax.Array:
+    """MoE dispatch/hidden/combine buffers: group dim on the batch axes,
+    expert dim on "model", everything else replicated."""
+    axes = _BATCH_AXES.get()
+    if axes is None:
+        return x
+    mesh = getattr(jax.sharding, "get_abstract_mesh", lambda: None)()
+    shape = getattr(mesh, "shape", None) or {}
+    bsz = 1
+    for a in axes:
+        bsz *= shape.get(a, 1)
+    entries: list = [None] * x.ndim
+    if bsz and x.shape[batch_dim] % bsz == 0:
+        entries[batch_dim] = axes if len(axes) > 1 else axes[0]
+    if x.shape[expert_dim] % shape.get("model", 1) == 0:
+        entries[expert_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*entries))

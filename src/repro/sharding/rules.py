@@ -1,0 +1,109 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Weights / activations declare *logical* axes ("batch", "heads", "mlp",
+"experts", "vocab", ...); a RuleSet lowers them to PartitionSpecs for a
+concrete mesh, gating every assignment on divisibility (non-divisible dims
+fall back to replication, e.g. granite's vocab=49155 on a 16-way model
+axis — see DESIGN.md §5).
+
+The BASELINE rules are Megatron-style tensor parallelism on the "model"
+axis + (pod, data) batch parallelism.  Alternative rule sets (the perf
+hillclimb's lever) are constructed by ``RuleSet.override``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["RuleSet", "BASELINE_RULES", "spec_for", "sharding_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    """Mapping logical axis -> tuple of mesh axes (in sharding order)."""
+    rules: dict
+
+    def override(self, **kw) -> "RuleSet":
+        r = dict(self.rules)
+        for k, v in kw.items():
+            r[k] = tuple(v) if v else ()
+        return RuleSet(rules=r)
+
+    def mesh_axes(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.rules.get(logical, ()))
+
+
+BASELINE_RULES = RuleSet(rules={
+    # data parallelism
+    "batch": ("pod", "data"),
+    # tensor parallelism (Megatron layout)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "conv_dim": ("model",),
+    # KV-cache sequence dim: sharded over "model" when kv-head sharding
+    # isn't divisible (context-parallel decode; see launch/shapes.py)
+    "kv_len": ("model",),
+    # replicated by default
+    "embed": (),
+    "layers": (),
+    "seq": (),
+})
+
+# Training shards weights 2-D: tensor-parallel on "model" AND fsdp-style on
+# "data" along the embed (fan-in) dim — f32 master params + AdamW moments
+# don't fit a 16 GiB chip under pure TP (EXPERIMENTS.md §Dry-run).
+FSDP_TRAIN_RULES = BASELINE_RULES.override(embed=("data",))
+
+# GQA-factorized mesh rules (mesh layout "gqa": model=8 x model2=2).
+# Attention dims shard on the kv-aligned 8-way factor only; everything
+# wide (FFN hidden, experts, vocab) spans both factors (16-way).
+GQA_RULES = BASELINE_RULES.override(
+    heads=("model",), kv_heads=("model",),
+    mlp=("model", "model2"), experts=("model", "model2"),
+    vocab=("model", "model2"), conv_dim=("model", "model2"))
+
+
+def _axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    size = 1
+    for n in names:
+        if n in mesh.shape:
+            size *= mesh.shape[n]
+    return size
+
+
+def spec_for(mesh: Mesh, rules: RuleSet, shape: tuple[int, ...],
+             axes: tuple[str | None, ...]) -> P:
+    """PartitionSpec for one array, with divisibility gating."""
+    entries = []
+    used: set[str] = set()
+    for dim, logical in zip(shape, axes):
+        names = tuple(n for n in rules.mesh_axes(logical)
+                      if n in mesh.shape and n not in used)
+        if names and dim % _axis_size(mesh, names) == 0:
+            entries.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_tree(mesh: Mesh, rules: RuleSet, defs):
+    """NamedSharding tree for a ParamDef tree."""
+    from repro.models.param import ParamDef
+
+    def one(d: ParamDef):
+        return NamedSharding(mesh, spec_for(mesh, rules, d.shape, d.axes))
+
+    return jax.tree.map(one, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))

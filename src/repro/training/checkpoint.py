@@ -1,0 +1,90 @@
+"""Msgpack + zstd checkpointing for params / optimizer / T-Tamer tables.
+
+Flat key-path encoding keeps the format trivially inspectable and
+framework-free; arrays are stored as (dtype, shape, raw bytes).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+__all__ = ["save", "load", "latest_step"]
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/#{i}"))
+    else:
+        out[prefix] = np.asarray(jax.device_get(tree))
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, val in flat.items():
+        keys = path.strip("/").split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.startswith("#") for k in node):
+            idx = sorted(node, key=lambda s: int(s[1:]))
+            return [rebuild(node[i]) for i in idx]
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save(path: str, tree, step: int | None = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    payload = {
+        "step": step,
+        "arrays": {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                       "data": v.tobytes()}
+                   for k, v in flat.items()},
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    with open(path, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    return path
+
+
+def load(path: str):
+    with open(path, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    flat = {}
+    for k, meta in payload["arrays"].items():
+        dt = meta["dtype"]
+        if dt == "bfloat16":
+            arr = np.frombuffer(meta["data"], np.uint16).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(meta["data"], np.dtype(dt))
+        flat[k] = arr.reshape(meta["shape"])
+    return _unflatten(flat), payload.get("step")
+
+
+def latest_step(ckpt_dir: str) -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    cks = [f for f in os.listdir(ckpt_dir) if f.endswith(".ckpt")]
+    if not cks:
+        return None
+    cks.sort(key=lambda f: int(f.split("_")[-1].split(".")[0]))
+    return os.path.join(ckpt_dir, cks[-1])

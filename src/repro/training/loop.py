@@ -1,0 +1,125 @@
+"""Training loop: EE multi-ramp objective, AdamW, sharded train_step.
+
+``make_train_step`` builds the pure step function used three ways:
+  * examples/train_ee.py      — real steps on CPU (small model),
+  * launch/train.py           — pjit-sharded production launcher,
+  * launch/dryrun.py          — .lower().compile() only (deliverable e).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training import checkpoint
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["make_train_step", "train"]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    ramp_loss_weight: float = 0.3, remat: bool = True,
+                    num_microbatches: int = 1,
+                    mixed_precision: bool = True) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).
+
+    ``num_microbatches`` > 1 enables gradient accumulation: the global
+    batch is split along dim 0 and scanned, bounding live activations to
+    one microbatch (the production activation-memory lever for train_4k
+    at 1M tokens/step — EXPERIMENTS.md §Dry-run).
+
+    ``mixed_precision`` keeps f32 master weights / moments but runs the
+    forward+backward in bf16 (weights cast at use; grads cast back to f32
+    and accumulated in f32)."""
+
+    def loss_fn(p, micro):
+        return M.forward_train(p, cfg, micro,
+                               ramp_loss_weight=ramp_loss_weight,
+                               remat=remat)
+
+    def _cast(p):
+        if not mixed_precision:
+            return p
+        return jax.tree.map(
+            lambda w: w.astype(jnp.bfloat16)
+            if w.dtype == jnp.float32 else w, p)
+
+    def train_step(params, opt_state, batch):
+        # bf16 cast OUTSIDE the microbatch scan: the fsdp weight
+        # all-gather is loop-invariant and gets hoisted — one gather per
+        # step instead of one per microbatch (EXPERIMENTS.md §Perf).
+        p_c = _cast(params)
+        if num_microbatches <= 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(p_c, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            m = num_microbatches
+            # Split the batch so the data-sharded factor stays leading in
+            # the reshape ((B,) -> (B/m, m) keeps dim-0 sharding local),
+            # then transpose to put the scanned microbatch axis first.
+            # Microbatch j = rows {i*m + j}; composition is irrelevant to
+            # the accumulated gradient.
+            micros = jax.tree.map(
+                lambda x: x.reshape(x.shape[0] // m, m,
+                                    *x.shape[1:]).swapaxes(0, 1), batch)
+
+            def accum(carry, micro):
+                g_acc, metr_acc = carry
+                (_, metr), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p_c, micro)
+                # accumulate in f32 regardless of compute dtype
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                metr_acc = jax.tree.map(jnp.add, metr_acc, metr)
+                return (g_acc, metr_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            metr0 = jax.tree.map(
+                lambda _: jnp.zeros((), jnp.float32),
+                jax.eval_shape(lambda: loss_fn(p_c, jax.tree.map(
+                    lambda x: x[0], micros))[1]))
+            (grads, metrics), _ = jax.lax.scan(accum, (g0, metr0), micros)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics = jax.tree.map(lambda v: v / m, metrics)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, opt_cfg: AdamWConfig, params, data_iter, *,
+          steps: int, log_every: int = 10, ckpt_dir: str | None = None,
+          ckpt_every: int = 200, jit: bool = True):
+    """Single-host training driver (examples / small scale)."""
+    step_fn = make_train_step(cfg, opt_cfg)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    opt_state = init_opt_state(params)
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall"] = time.time() - t0
+            history.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"ce_final {m['ce_final']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f}", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            checkpoint.save(f"{ckpt_dir}/state_{step + 1}.ckpt",
+                            {"params": params}, step + 1)
+    return params, opt_state, history

@@ -1,0 +1,97 @@
+"""Paper-claim validation: Thm 3.4 impossibility, recall vs no-recall
+Pareto dominance, Markov estimation consistency, quantizer invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import impossibility, pareto, policies, traces
+from repro.core.line_dp import solve_line
+from repro.core.markov import (MarkovChain, estimate_chain, marginals,
+                               sample_chain)
+from repro.core.support import build_support, quantize
+
+
+@pytest.mark.parametrize("alpha", [2.0, 5.0, 10.0, 50.0])
+def test_impossibility_ratio_grows_with_alpha(alpha):
+    """Thm 3.4: ALG/OPT == alpha exactly on the construction."""
+    inst = impossibility.make_instance(alpha)
+    alg = impossibility.best_norecall_value(inst)
+    opt = impossibility.offline_opt_value(inst)
+    assert alg == pytest.approx(1.0 / alpha**2, rel=1e-12)
+    assert opt == pytest.approx(1.0 / alpha**3, rel=1e-12)
+    assert alg / opt == pytest.approx(alpha, rel=1e-9)
+
+
+def test_impossibility_empirical():
+    inst = impossibility.make_instance(8.0)
+    rng = np.random.default_rng(0)
+    alg, opt, ratio = impossibility.empirical_ratio(inst, rng, t=400_000)
+    assert ratio == pytest.approx(8.0, rel=0.15)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 4))
+def test_markov_estimation_recovers_chain(seed, n, k):
+    rng = np.random.default_rng(seed)
+    p0 = rng.dirichlet(np.ones(k) * 5)
+    trans = rng.dirichlet(np.ones(k) * 5, size=(n - 1, k))
+    chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                        trans=jnp.asarray(trans, jnp.float32))
+    bins = sample_chain(chain, jax.random.PRNGKey(seed), 60_000)
+    est = estimate_chain(bins, k, alpha=0.1)
+    np.testing.assert_allclose(np.asarray(est.p0), p0, atol=0.02)
+    np.testing.assert_allclose(np.asarray(est.trans), trans, atol=0.06)
+    m = marginals(est)
+    np.testing.assert_allclose(np.asarray(m).sum(-1), 1.0, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 64))
+def test_quantizer_invariants(seed, k):
+    rng = np.random.default_rng(seed)
+    samples = rng.lognormal(size=5_000)
+    sup = build_support(samples, k)
+    grid = np.asarray(sup.grid)
+    assert (np.diff(grid) > 0).all(), "grid strictly ascending"
+    assert (grid > 0).all(), "Assumption 2.1: strictly positive support"
+    bins = np.asarray(quantize(sup, jnp.asarray(samples, jnp.float32)))
+    assert bins.min() >= 0 and bins.max() < k
+    # quantization maps each sample to the nearest grid value
+    recon = grid[bins]
+    err = np.abs(recon - samples)
+    alt = np.abs(grid[np.clip(bins + 1, 0, k - 1)] - samples)
+    alt2 = np.abs(grid[np.clip(bins - 1, 0, k - 1)] - samples)
+    assert (err <= np.minimum(alt, alt2) + 1e-5).all()
+
+
+def test_recall_pareto_dominates_norecall_on_ee_workload():
+    """§6 headline: recall-based indexing yields a frontier that dominates
+    confidence thresholding on EE-like traces with overthinking."""
+    rng = np.random.default_rng(42)
+    losses, correct, flops = traces.ee_like_traces(rng, 12_000, 8,
+                                                   overthink_prob=0.25)
+    lambdas = [0.3, 0.5, 0.7, 0.9]
+    pts = pareto.sweep(losses, correct, flops, lambdas, k=24)
+    ours = [p for p in pts if p.policy == "recall_index"]
+    thr = [p for p in pts if p.policy.startswith("norecall")]
+    # For each lambda, our objective (the quantity the DP optimizes) must
+    # be at least as good as every no-recall threshold's.
+    for lam in lambdas:
+        o = min(p.objective for p in ours if p.lam == lam)
+        b = min(p.objective for p in thr if p.lam == lam)
+        assert o <= b * 1.02 + 1e-4, (lam, o, b)
+
+
+def test_oracle_lower_bounds_everything():
+    rng = np.random.default_rng(1)
+    losses, _, flops = traces.ee_like_traces(rng, 4_000, 6)
+    lam = 0.6
+    ls = jnp.asarray(lam * losses)
+    cj = jnp.asarray((1 - lam) * flops, jnp.float32)
+    oracle = float(policies.oracle(ls, cj).mean_total())
+    for res in (policies.always_last(ls, cj), policies.always_first(ls, cj),
+                policies.norecall_threshold(ls, cj, jnp.full((6,), 0.1))):
+        assert oracle <= float(res.mean_total()) + 1e-6

@@ -1,0 +1,129 @@
+"""Skip (transitive closure, Thm 5.2) and tree (Thm 5.1) optimality tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import skip_dp, tree_dp
+from repro.core.brute_force import bf_forest, bf_line, bf_skip
+from repro.core.markov import MarkovChain
+from repro.core.support import Support
+from repro.core.traces import random_instance
+
+
+def make_support(grid):
+    grid = jnp.asarray(grid, jnp.float32)
+    return Support(grid=grid, edges=(grid[1:] + grid[:-1]) / 2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(2, 3),
+       st.booleans())
+def test_skip_dp_matches_bruteforce(seed, n, k, skip_free):
+    rng = np.random.default_rng(seed)
+    p0, trans, costs, grid = random_instance(rng, n, k)
+    ec = (skip_dp.edge_costs_skip_free(costs) if skip_free
+          else skip_dp.edge_costs_cumulative(costs))
+    chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                        trans=jnp.asarray(trans, jnp.float32))
+    tables = skip_dp.solve_skip(chain, ec, make_support(grid))
+    bf = bf_skip(p0, trans, ec, grid)
+    assert float(tables.value) == pytest.approx(bf, rel=2e-4, abs=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(2, 3))
+def test_skip_never_worse_than_line(seed, n, k):
+    """Allowing skips can only improve the optimum (more actions)."""
+    rng = np.random.default_rng(seed)
+    p0, trans, costs, grid = random_instance(rng, n, k)
+    line_val = bf_line(p0, trans, costs, grid)
+    chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                        trans=jnp.asarray(trans, jnp.float32))
+    ec = skip_dp.edge_costs_skip_free(costs)
+    skip_val = float(skip_dp.solve_skip(chain, ec, make_support(grid)).value)
+    assert skip_val <= line_val + 1e-5
+
+
+def random_forest(rng, n, k, max_children=2):
+    """Random Markovian forest instance with <= n nodes."""
+    grid = np.sort(rng.uniform(0.05, 1.0, size=k)) + np.arange(k) * 1e-6
+    parents, root_pmfs, trans = [], {}, {}
+    for v in range(n):
+        candidates = [-1] + [u for u in range(v)
+                             if sum(1 for p in parents if p == u) < max_children]
+        p = int(rng.choice(candidates))
+        parents.append(p)
+        if p < 0:
+            root_pmfs[v] = rng.dirichlet(np.ones(k))
+        else:
+            trans[v] = rng.dirichlet(np.ones(k), size=k)
+    costs = rng.uniform(0.01, 0.2, size=n)
+    return tree_dp.Forest(parents=tuple(parents), root_pmfs=root_pmfs,
+                          trans=trans, costs=costs, grid=grid)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(2, 3))
+def test_tree_index_policy_is_optimal(seed, n, k):
+    """Thm C.14: the dynamic-index policy attains the expectimax optimum."""
+    rng = np.random.default_rng(seed)
+    forest = random_forest(rng, n, k)
+    opt = tree_dp.solve_forest_exact(forest)
+    pol = tree_dp.index_policy_value(forest)
+    assert pol == pytest.approx(opt, rel=1e-5, abs=1e-7)
+    assert pol >= opt - 1e-9  # can never beat the optimum
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(2, 3))
+def test_multiline_forest_matches_bf(seed, n_per_line, k):
+    """Multi-line (§C.1) as a forest of paths: index policy == optimal."""
+    rng = np.random.default_rng(seed)
+    lines = []
+    for _ in range(2):
+        p0, trans, costs, grid0 = random_instance(rng, n_per_line, k)
+        lines.append((p0, trans, costs, None))
+    # shared support required
+    grid = np.sort(rng.uniform(0.05, 1.0, size=k)) + np.arange(k) * 1e-6
+    lines = [(p0, tr, cs, grid) for (p0, tr, cs, _) in lines]
+    forest = tree_dp.forest_from_lines(lines)
+    opt = tree_dp.solve_forest_exact(forest)
+    pol = tree_dp.index_policy_value(forest)
+    assert pol == pytest.approx(opt, rel=1e-5, abs=1e-7)
+    bf = bf_forest(list(forest.parents), forest.root_pmfs, forest.trans,
+                   forest.costs, forest.grid)
+    assert opt == pytest.approx(bf, rel=1e-9)
+
+
+def test_single_line_forest_matches_line_dp():
+    """Consistency: forest solver on one path == line DP == bf_line."""
+    rng = np.random.default_rng(7)
+    p0, trans, costs, grid = random_instance(rng, 3, 3)
+    forest = tree_dp.forest_from_lines([(p0, trans, costs, grid)])
+    opt = tree_dp.solve_forest_exact(forest)
+    assert opt == pytest.approx(bf_line(p0, trans, costs, grid), rel=1e-9)
+
+
+def test_simulate_skip_consistent_with_value():
+    """MC rollout of the skip policy converges to the DP value."""
+    rng = np.random.default_rng(3)
+    p0, trans, costs, grid = random_instance(rng, 4, 3)
+    chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                        trans=jnp.asarray(trans, jnp.float32))
+    ec = skip_dp.edge_costs_skip_free(costs)
+    tables = skip_dp.solve_skip(chain, ec, make_support(grid))
+    # sample full trajectories
+    t = 30_000
+    bins = np.zeros((t, 4), np.int64)
+    bins[:, 0] = rng.choice(3, size=t, p=p0)
+    for i in range(1, 4):
+        for s in range(3):
+            mask = bins[:, i - 1] == s
+            bins[mask, i] = rng.choice(3, size=mask.sum(), p=trans[i - 1][s])
+    losses = grid[bins]
+    served, spent, _ = skip_dp.simulate_skip(tables, losses, bins, ec)
+    mc = float((served + spent).mean())
+    assert mc == pytest.approx(float(tables.value), abs=0.01)

@@ -1,0 +1,152 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode execution vs
+the pure-jnp oracles in kernels/ref.py (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,hd,window", [
+    (1, 2, 2, 128, 64, None),
+    (2, 4, 2, 256, 128, None),
+    (1, 4, 1, 192, 80, None),          # ragged: padding path
+    (2, 2, 2, 256, 64, 96),            # sliding window
+])
+def test_flash_attention_matches_ref(b, h, hkv, s, hd, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (b, s, h, hd), dtype)
+    k = rand(ks[1], (b, s, hkv, hd), dtype)
+    v = rand(ks[2], (b, s, hkv, hd), dtype)
+    scale = 1.0 / np.sqrt(hd)
+    out = ops.flash_attention(q, k, v, scale=scale, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+    # oracle works in (B,H,S,hd) layout
+    r = ref.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3),
+                                scale=scale, window=window)
+    r = r.transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# bellman backup
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [8, 32, 64, 128])
+def test_bellman_backup_matches_ref(k):
+    rng = np.random.default_rng(k)
+    x = k + 2
+    phi = jnp.asarray(np.sort(rng.uniform(0, 1, (k, x)), axis=1), jnp.float32)
+    trans = jnp.asarray(rng.dirichlet(np.ones(k), size=k), jnp.float32)
+    mi_t = jnp.asarray(rng.integers(0, x, (k, x)), jnp.int32)
+    cont_k = ops.bellman_backup(phi, trans, 0.17, mi_t, interpret=True)
+    cont_r = ref.bellman_backup_ref(phi, trans, 0.17, mi_t)
+    np.testing.assert_allclose(np.asarray(cont_k), np.asarray(cont_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_line_dp_kernel_path_matches_jnp_path():
+    """solve_line(use_kernel=True) must equal the jnp DP end-to-end."""
+    from repro.core.line_dp import solve_line
+    from repro.core.markov import MarkovChain
+    from repro.core.support import Support
+    from repro.core.traces import random_instance
+    rng = np.random.default_rng(5)
+    p0, trans, costs, grid = random_instance(rng, 4, 16)
+    grid_j = jnp.asarray(grid, jnp.float32)
+    sup = Support(grid=grid_j, edges=(grid_j[1:] + grid_j[:-1]) / 2)
+    chain = MarkovChain(p0=jnp.asarray(p0, jnp.float32),
+                        trans=jnp.asarray(trans, jnp.float32))
+    t_jnp = solve_line(chain, jnp.asarray(costs, jnp.float32), sup)
+    t_ker = solve_line(chain, jnp.asarray(costs, jnp.float32), sup,
+                       use_kernel=True)
+    np.testing.assert_allclose(np.asarray(t_ker.cont), np.asarray(t_jnp.cont),
+                               atol=1e-5, rtol=1e-5)
+    assert (np.asarray(t_ker.stop) == np.asarray(t_jnp.stop)).all()
+    np.testing.assert_allclose(float(t_ker.value), float(t_jnp.value),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,c,q,h,p,n", [
+    (1, 2, 32, 2, 32, 16),
+    (2, 1, 64, 3, 64, 128),
+    (1, 4, 16, 1, 128, 8),
+])
+def test_ssd_chunk_matches_ref(b, c, q, h, p, n):
+    ks = jax.random.split(KEY, 5)
+    xh = rand(ks[0], (b, c, q, h, p), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (b, c, q, h), jnp.float32))
+    da = -jax.nn.softplus(rand(ks[2], (b, c, q, h), jnp.float32))
+    bb = rand(ks[3], (b, c, q, h, n), jnp.float32)
+    cc = rand(ks[4], (b, c, q, h, n), jnp.float32)
+    yk, sk = ops.ssd_chunk(xh, dt, da, bb, cc, interpret=True)
+    yr, sr = ref.ssd_chunk_ref(xh, dt, da, bb, cc)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_inside_model_matches_jnp():
+    """ssm_forward(use_kernel=True) == jnp path on a smoke config."""
+    from repro.models.ssm import ssm_forward, ssm_defs
+    from repro.models.config import SSMConfig
+    from repro.models.param import materialize
+    cfg = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=32, chunk=32)
+    d = 64
+    params = materialize(ssm_defs(cfg, d), KEY)
+    x = rand(jax.random.PRNGKey(9), (2, 96, d), jnp.float32) * 0.3
+    y1, st1 = ssm_forward(params, x, cfg, use_kernel=False)
+    y2, st2 = ssm_forward(params, x, cfg, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=3e-4, rtol=3e-3)
+    np.testing.assert_allclose(np.asarray(st1["ssm"], np.float32),
+                               np.asarray(st2["ssm"], np.float32),
+                               atol=3e-4, rtol=3e-3)
+
+
+# ---------------------------------------------------------------------------
+# ramp exit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,v,k", [(4, 1000, 16), (8, 4096, 32),
+                                   (3, 2048, 64)])
+def test_ramp_exit_matches_ref(b, v, k):
+    rng = np.random.default_rng(b * v)
+    logits = jnp.asarray(rng.normal(0, 2, (b, v)), jnp.float32)
+    edges = jnp.asarray(np.sort(rng.uniform(0, 1, k - 1)), jnp.float32)
+    table = jnp.asarray(rng.integers(0, 2, (k, k + 2)), jnp.int32)
+    s_bin = jnp.asarray(rng.integers(0, k, b), jnp.int32)
+    x_idx = jnp.asarray(rng.integers(0, k + 2, b), jnp.int32)
+    lam = 0.6
+    lk = ops.ramp_exit(logits, edges, table, s_bin, x_idx, lam=lam,
+                       interpret=True)
+    lr = ref.ramp_exit_ref(logits, edges, table, s_bin, x_idx, lam)
+    np.testing.assert_allclose(np.asarray(lk[0]), np.asarray(lr[0]),
+                               atol=1e-5, rtol=1e-5)
+    assert (np.asarray(lk[1]) == np.asarray(lr[1])).all()
+    assert (np.asarray(lk[2]) == np.asarray(lr[2])).all()
+    assert (np.asarray(lk[3]) == np.asarray(lr[3])).all()
