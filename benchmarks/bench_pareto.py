@@ -1,8 +1,10 @@
 """Figs. 4-5 analogue: accuracy-latency Pareto frontiers on early-exit
 workloads (recall-index vs confidence thresholds vs oracle), swept over
-lambda.  Traces come from the synthetic EE workload generator (offline
-container; DESIGN.md §6) — the same pipeline accepts traces exported from
-a trained checkpoint via examples/train_ee.py.
+lambda.  Each point runs a registry strategy through the batched
+``strategy.evaluate`` scan (DESIGN.md §4).  Traces come from the
+synthetic EE workload generator (offline container; DESIGN.md §6) — the
+same pipeline accepts traces exported from a trained checkpoint via
+examples/train_ee.py.
 
 Emits benchmarks/results/pareto_points.csv and reports the headline
 trade-off (latency at <=2% / <=7% error sacrifice, cf. paper Fig. 4a

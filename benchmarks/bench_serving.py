@@ -1,36 +1,21 @@
 """Serving-engine table: end-to-end early-exit generation on a smoke
-model — T-Tamer recall policy vs threshold baseline vs no-exit, measuring
-segment savings (batch + per-lane policy accounting) and tokens/s on this
-host.  (The serving analogue of the paper's latency reductions, §6.)"""
+model — every online strategy family from the `repro.strategy` registry
+(T-Tamer recall index, the exact tree/sigma index, the skip-table
+cascade, a confidence threshold, and the no-exit endpoint), measuring
+segment savings (batch + per-lane policy accounting) and tokens/s on
+this host.  (The serving analogue of the paper's latency reductions, §6.)"""
 
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro import strategy
 from repro.configs import get_config
-from repro.core.line_dp import solve_line
-from repro.core.markov import estimate_chain
-from repro.core.support import build_support, quantize
 from repro.models import model as M
 from repro.models.param import materialize
-from repro.serving.engine import Engine, RecallIndexPolicy, ThresholdPolicy
-
-
-def _calibrate(params, cfg, key, lam, k=16, t=256):
-    """Run the model on calibration prompts, fit support+chain+tables."""
-    toks = jax.random.randint(key, (t, 32), 0, cfg.vocab)
-    _, _, node_losses, _ = M.prefill(params, cfg, {"tokens": toks}, 48)
-    scaled = lam * np.asarray(node_losses)
-    sup = build_support(scaled, k)
-    bins = quantize(sup, jnp.asarray(scaled))
-    chain = estimate_chain(bins, k)
-    n = node_losses.shape[1]
-    costs = jnp.full((n,), (1.0 - lam) / n, jnp.float32)
-    return solve_line(chain, costs, sup), sup
+from repro.serving.engine import Engine
 
 
 def run() -> list[dict]:
@@ -38,24 +23,26 @@ def run() -> list[dict]:
     key = jax.random.PRNGKey(0)
     params = materialize(M.model_defs(cfg), key)
     lam = 0.5
-    tables, sup = _calibrate(params, cfg, key, lam)
+    casc = strategy.Cascade.calibrate(params, cfg, key, lam,
+                                      k=16, t=256, seq=32)
     batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab)}
     n_tokens = 16
     rows = []
-    base_tps = None
-    for name, policy in [
-        ("recall_index", RecallIndexPolicy(tables, sup, lam)),
-        ("norecall_thr", ThresholdPolicy(tables.n, threshold=0.45)),
-        ("no_exit", ThresholdPolicy(tables.n, threshold=-1.0)),
+    for name, strat in [
+        ("recall_index", strategy.make("recall_index", casc)),
+        ("tree_index", strategy.make("tree_index", casc)),
+        ("skip_recall", strategy.make("skip_recall", casc,
+                                      mode="cumulative")),
+        ("norecall_thr", strategy.make("norecall_threshold", casc,
+                                       threshold=0.45, lam=1.0)),
+        ("no_exit", strategy.make("always_last", casc)),
     ]:
-        eng = Engine(params, cfg, policy, cache_len=64)
+        eng = Engine(params, cfg, strat, cache_len=64)
         eng.generate(batch, 2)  # warm the jits
         t0 = time.perf_counter()
         stats = eng.generate(batch, n_tokens)
         dt = time.perf_counter() - t0
         tps = 8 * n_tokens / dt
-        if base_tps is None and name == "no_exit":
-            base_tps = tps
         save_batch = 1 - stats.segments_run_batch / (
             n_tokens * len(cfg.segments))
         save_policy = 1 - stats.segments_run_policy / stats.segments_full

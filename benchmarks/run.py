@@ -29,6 +29,10 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(MODULES))
     args = ap.parse_args()
     todo = args.only.split(",") if args.only else MODULES
+    unknown = sorted(set(todo) - set(MODULES))
+    if unknown:
+        ap.error(f"unknown benchmark(s): {', '.join(unknown)} "
+                 f"(choose from: {', '.join(MODULES)})")
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,8 +1,10 @@
 """Quickstart: T-Tamer in 60 seconds.
 
-Fits the paper's dynamic-index policy on a synthetic early-exit workload
-and compares it against confidence-threshold heuristics and the offline
-oracle on the lambda-weighted objective (Thm 4.5 / Thm 3.4 in action).
+Calibrates a `Cascade` on a synthetic early-exit workload, builds the
+paper's dynamic-index strategy (and the baselines) from the string
+registry, and compares them on the lambda-weighted objective through the
+ONE batched evaluator that also drives the serving engine
+(Thm 4.5 / Thm 3.4 in action).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +12,8 @@ oracle on the lambda-weighted objective (Thm 4.5 / Thm 3.4 in action).
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import policies, traces
-from repro.core.line_dp import solve_line
-from repro.core.markov import estimate_chain
-from repro.core.support import build_support, quantize
+from repro import strategy
+from repro.core import traces
 
 
 def main() -> None:
@@ -23,31 +23,34 @@ def main() -> None:
     losses, correct, flops = traces.ee_like_traces(rng, 20_000, 8,
                                                    overthink_prob=0.25)
     lam = 0.6
-    scaled = lam * losses
-    costs = jnp.asarray((1 - lam) * flops, jnp.float32)
 
-    # 2. Calibrate: support + Markov chain + DP tables (Alg. 2).
-    fit, ev = scaled[:10_000], scaled[10_000:]
-    support = build_support(fit, k=32)
-    chain = estimate_chain(quantize(support, jnp.asarray(fit)), 32)
-    tables = solve_line(chain, costs, support)
+    # 2. Calibrate: support + Markov chain + DP tables (Alg. 2), bundled
+    #    in a Cascade spec.  Tables live in the lambda-scaled domain.
+    fit, ev = losses[:10_000], losses[10_000:]
+    casc = strategy.Cascade.from_traces(fit, (1 - lam) * flops,
+                                        k=32, lam=lam)
     print(f"online-optimal expected objective (Def. 4.2): "
-          f"{float(tables.value):.4f}")
+          f"{float(casc.solve_line().value):.4f}")
+    print(f"registered strategies: {', '.join(strategy.available())}")
 
-    # 3. Serve the eval half with every policy (Alg. 1 = recall_index).
-    ev_j = jnp.asarray(ev)
-    bins = quantize(support, ev_j)
-    results = {
-        "recall_index (T-Tamer)": policies.recall_index(
-            tables, ev_j, bins, costs),
-        "norecall_threshold=0.1": policies.norecall_threshold(
-            ev_j, costs, jnp.full((8,), lam * 0.1)),
-        "norecall_threshold=0.3": policies.norecall_threshold(
-            ev_j, costs, jnp.full((8,), lam * 0.3)),
-        "always_last (backbone)": policies.always_last(ev_j, costs),
-        "offline oracle": policies.oracle(ev_j, costs),
+    # 3. Serve the eval half with every strategy (Alg. 1 = recall_index).
+    #    The eval traces are pre-scaled, so strategies run with lam=1.
+    ev_j = jnp.asarray(lam * ev)
+    runs = {
+        "recall_index (T-Tamer)": strategy.make("recall_index", casc,
+                                                lam=1.0),
+        "tree_index (exact sigma)": strategy.make("tree_index", casc,
+                                                  lam=1.0),
+        "norecall_threshold=0.1": strategy.make(
+            "norecall_threshold", casc, threshold=lam * 0.1, lam=1.0),
+        "norecall_threshold=0.3": strategy.make(
+            "norecall_threshold", casc, threshold=lam * 0.3, lam=1.0),
+        "always_last (backbone)": strategy.make("always_last", casc,
+                                                lam=1.0),
+        "offline oracle": strategy.make("oracle", casc, lam=1.0),
     }
-    print(f"{'policy':28s} {'objective':>9s} {'explored':>8s} "
+    results = {name: strategy.evaluate(s, ev_j) for name, s in runs.items()}
+    print(f"{'strategy':28s} {'objective':>9s} {'explored':>8s} "
           f"{'served-node':>11s}")
     for name, r in results.items():
         print(f"{name:28s} {float(r.mean_total()):9.4f} "

@@ -1,7 +1,8 @@
 """END-TO-END serving driver (deliverable b): train a small EE model
-briefly, calibrate T-Tamer, then serve batched generation requests with
-per-token early exit — comparing the recall-index policy against the
-confidence-threshold heuristic and full-depth execution.
+briefly, calibrate a T-Tamer `Cascade`, then serve batched generation
+requests with per-token early exit — comparing registry strategies
+(recall index, skip table, confidence threshold) against full-depth
+execution through the same `Engine`.
 
   PYTHONPATH=src python examples/serve_cascade.py            # ~2-4 min
   PYTHONPATH=src python examples/serve_cascade.py --no-train # random init
@@ -12,14 +13,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import strategy
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, batches
-from repro.launch.serve import calibrate
 from repro.models import model as M
 from repro.models.param import materialize
-from repro.serving.engine import Engine, RecallIndexPolicy, ThresholdPolicy
+from repro.serving.engine import Engine
 from repro.training.loop import train
 from repro.training.optimizer import AdamWConfig
 
@@ -47,23 +47,26 @@ def main() -> None:
                                 steps=args.train_steps, log_every=20)
         print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
 
-    print("\n== calibrating T-Tamer if-stop tables ==")
-    tables, support = calibrate(params, cfg, key, args.lam)
+    print("\n== calibrating T-Tamer cascade ==")
+    casc = strategy.Cascade.calibrate(params, cfg, key, args.lam)
+    tables = casc.solve_line()
     print(f"nodes={tables.n} support K={tables.k} "
           f"optimal objective {float(tables.value):.4f}")
 
     prompts = {"tokens": jax.random.randint(
         jax.random.PRNGKey(7), (args.batch, 32), 0, cfg.vocab)}
-    n_seg = len(cfg.segments)
 
     print(f"\n== serving {args.batch} requests x {args.tokens} tokens ==")
     runs = {}
-    for name, policy in [
-        ("T-Tamer recall", RecallIndexPolicy(tables, support, args.lam)),
-        ("threshold(0.4)", ThresholdPolicy(tables.n, 0.4)),
-        ("full depth", ThresholdPolicy(tables.n, -1.0)),
+    for name, strat in [
+        ("T-Tamer recall", strategy.make("recall_index", casc)),
+        ("skip cascade", strategy.make("skip_recall", casc,
+                                       mode="cumulative")),
+        ("threshold(0.4)", strategy.make("norecall_threshold", casc,
+                                         threshold=0.4, lam=1.0)),
+        ("full depth", strategy.make("always_last", casc)),
     ]:
-        eng = Engine(params, cfg, policy, cache_len=96)
+        eng = Engine(params, cfg, strat, cache_len=96)
         eng.generate(prompts, 2)  # warm jits
         t0 = time.time()
         stats = eng.generate(prompts, args.tokens)
@@ -76,7 +79,7 @@ def main() -> None:
 
     # agreement of EE outputs with full-depth outputs (quality proxy)
     full = runs["full depth"][0].tokens
-    for name in ("T-Tamer recall", "threshold(0.4)"):
+    for name in ("T-Tamer recall", "skip cascade", "threshold(0.4)"):
         agree = float((runs[name][0].tokens == full).mean())
         print(f"{name:16s}: token agreement with full depth "
               f"{100 * agree:.1f}%")

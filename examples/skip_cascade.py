@@ -1,7 +1,9 @@
 """Inter-model cascade with SKIPS (§5.2): three decoders of increasing
-size form the transitive closure of a line — the policy may jump straight
-from the small model to the large one, skipping the middle, based on the
-calibrated Markov structure of their losses.
+size form the transitive closure of a line — the `skip_recall` strategy
+may jump straight from the small model to the large one, skipping the
+middle, based on the calibrated Markov structure of their losses.  The
+same registry strategy object evaluates offline here and plugs into the
+serving engine unchanged.
 
   PYTHONPATH=src python examples/skip_cascade.py
 """
@@ -10,10 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import strategy
 from repro.configs.common import dense_decoder
 from repro.core import skip_dp
-from repro.core.markov import estimate_chain
-from repro.core.support import build_support, quantize
+from repro.core.support import quantize
 from repro.models import model as M
 from repro.models.param import count_params, materialize
 
@@ -66,28 +68,34 @@ def main() -> None:
     losses = np.clip(losses, 1e-3, 1.0)
 
     # 2. Costs proportional to model FLOPs; skipping the middle model
-    #    avoids its cost entirely (edge_costs_skip_free).
+    #    avoids its cost entirely (mode="skip_free").
     lam = 0.75
     rel = np.array([count_params(M.model_defs(c)) for c in cfgs],
                    np.float64)
     rel = rel / rel.sum()
-    scaled = lam * losses
-    costs = (1 - lam) * rel
 
-    fit, ev = scaled[:t // 2], scaled[t // 2:]
-    support = build_support(fit, 24)
-    chain = estimate_chain(quantize(support, jnp.asarray(fit)), 24)
-
-    ec = skip_dp.edge_costs_skip_free(costs)
-    tables = skip_dp.solve_skip(chain, ec, support)
+    fit, ev = losses[:t // 2], losses[t // 2:]
+    casc = strategy.Cascade.from_traces(fit, (1 - lam) * rel, k=24,
+                                        lam=lam, solve=False)
+    tables = casc.solve_skip(mode="skip_free")
     print(f"\nskip-cascade online-optimal objective: "
           f"{float(tables.value):.4f}")
 
-    bins = np.asarray(quantize(support, jnp.asarray(ev)))
-    served, spent, probed = skip_dp.simulate_skip(tables, ev, bins, ec)
-    print(f"policy on eval traces: objective "
+    strat = strategy.make("skip_recall", casc, mode="skip_free", lam=1.0)
+    scaled_ev = jnp.asarray(lam * ev)
+    res = strategy.evaluate(strat, scaled_ev)
+    served = np.asarray(res.served_loss)
+    spent = np.asarray(res.explore_cost)
+    print(f"strategy on eval traces: objective "
           f"{float((served + spent).mean()):.4f}, "
-          f"mean models probed {probed.sum(1).mean():.2f}")
+          f"mean models probed {float(res.n_probed.mean()):.2f}")
+
+    # cross-check the streaming strategy against the numpy reference walk
+    bins = np.asarray(quantize(casc.support, scaled_ev))
+    ref_served, ref_spent, probed = skip_dp.simulate_skip(
+        tables, np.asarray(scaled_ev), bins, casc.edge_costs)
+    assert np.allclose(served, ref_served, atol=1e-5), "strategy != walk"
+    assert np.allclose(spent, ref_spent, atol=1e-5), "strategy != walk"
     hist = probed.mean(0)
     print(f"probe rates per model: small {hist[0]:.2f} "
           f"medium {hist[1]:.2f} large {hist[2]:.2f}")
@@ -96,8 +104,7 @@ def main() -> None:
     print(f"fraction skipping straight small->large: {skipped_middle:.2f}")
 
     # strict-line comparison (no skips): cumulative edge costs
-    ec_line = skip_dp.edge_costs_cumulative(costs)
-    t_line = skip_dp.solve_skip(chain, ec_line, support)
+    t_line = casc.solve_skip(mode="cumulative")
     print(f"strict-line objective (no skip benefit): "
           f"{float(t_line.value):.4f}")
 

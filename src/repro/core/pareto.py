@@ -10,9 +10,10 @@ lambda's role between §1.2 and Def. D.1 — we fix lambda as the *accuracy*
 weight) and, per lambda:
 
   1. split traces into fit/eval halves,
-  2. build the support + Markov chain on the fit half,
-  3. solve the line DP, and
-  4. run every policy on the eval half, recording
+  2. build a `strategy.Cascade` on the fit half (support + Markov chain
+     + line DP),
+  3. run every strategy from the registry on the eval half through the
+     single batched ``strategy.evaluate``, recording
      (error vs backbone, normalized latency).
 
 Error = 1 - Acc where Acc is agreement with the backbone output (§6
@@ -26,10 +27,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import policies
-from repro.core.line_dp import solve_line
-from repro.core.markov import estimate_chain
-from repro.core.support import build_support, quantize
+from repro import strategy
 
 __all__ = ["FrontierPoint", "sweep", "pareto_filter"]
 
@@ -64,7 +62,7 @@ def _metrics(name, lam, res, correct, n) -> FrontierPoint:
 def sweep(losses: np.ndarray, correct: np.ndarray, flops: np.ndarray,
           lambdas, k: int = 32,
           thresholds=(0.02, 0.05, 0.1, 0.2, 0.3, 0.5)) -> list[FrontierPoint]:
-    """Run the full policy comparison across the lambda grid."""
+    """Run the full strategy comparison across the lambda grid."""
     t, n = losses.shape
     half = t // 2
     fit_l, ev_l = losses[:half], losses[half:]
@@ -72,29 +70,28 @@ def sweep(losses: np.ndarray, correct: np.ndarray, flops: np.ndarray,
     out: list[FrontierPoint] = []
     for lam in lambdas:
         lam = float(lam)
-        scaled_fit = lam * fit_l
+        # cascade tables live in the lambda-scaled domain; the eval half
+        # is pre-scaled too, so strategies run with lam=1.0 (no rescale)
+        casc = strategy.Cascade.from_traces(fit_l, (1.0 - lam) * flops,
+                                            k=k, lam=lam)
         scaled_ev = jnp.asarray(lam * ev_l)
-        costs = jnp.asarray((1.0 - lam) * flops, jnp.float32)
-        support = build_support(scaled_fit, k)
-        bins_fit = quantize(support, jnp.asarray(scaled_fit))
-        chain = estimate_chain(bins_fit, k)
-        # Guard: DP needs strictly positive costs (Assumption 2.1).
-        costs = jnp.maximum(costs, 1e-6)
-        tables = solve_line(chain, costs, support)
-        bins_ev = quantize(support, scaled_ev)
 
-        res = policies.recall_index(tables, scaled_ev, bins_ev, costs)
-        out.append(_metrics("recall_index", lam, res, ev_c, n))
+        def run(name: str, **kw):
+            strat = strategy.make(name, casc, lam=1.0, **kw)
+            return strategy.evaluate(strat, scaled_ev)
+
+        out.append(_metrics("recall_index", lam, run("recall_index"),
+                            ev_c, n))
         for thr in thresholds:
-            thr_vec = jnp.full((n,), lam * thr, jnp.float32)
-            res = policies.norecall_threshold(scaled_ev, costs, thr_vec)
-            out.append(_metrics(f"norecall_thr={thr}", lam, res, ev_c, n))
-            res = policies.recall_threshold(scaled_ev, costs, thr_vec)
-            out.append(_metrics(f"recall_thr={thr}", lam, res, ev_c, n))
-        res = policies.oracle(scaled_ev, costs)
-        out.append(_metrics("oracle", lam, res, ev_c, n))
-        res = policies.always_last(scaled_ev, costs)
-        out.append(_metrics("always_last", lam, res, ev_c, n))
+            out.append(_metrics(
+                f"norecall_thr={thr}", lam,
+                run("norecall_threshold", threshold=lam * thr), ev_c, n))
+            out.append(_metrics(
+                f"recall_thr={thr}", lam,
+                run("recall_threshold", threshold=lam * thr), ev_c, n))
+        out.append(_metrics("oracle", lam, run("oracle"), ev_c, n))
+        out.append(_metrics("always_last", lam, run("always_last"),
+                            ev_c, n))
     return out
 
 

@@ -1,10 +1,16 @@
-"""Executable routing/stopping policies over loss traces.
+"""DEPRECATED — thin wrappers over `repro.strategy` (one-release shim).
 
-Every policy consumes a batch of traces — ``losses`` (T, n) real-valued
-per-node losses (lambda-scaled) and their binned version ``bins`` (T, n) —
-and returns which node each sample served plus the exploration cost paid.
-All policies are vectorized over T with a Python loop over the (static)
-n nodes, so they jit cleanly and shard over the data axis in serving.
+The free functions below were the original offline trace evaluators.
+Every behaviour now lives in the `Strategy` registry
+(``repro.strategy.make``) and runs through the single batched evaluator
+``repro.strategy.evaluate`` — the same objects that drive the serving
+engine.  These wrappers reproduce the legacy signatures and decisions
+exactly (per-lane cost sums match to float addition-order) and will be
+removed in the next release; new code should use::
+
+    from repro import strategy
+    casc = strategy.Cascade.from_traces(losses, costs, k=32)
+    res = strategy.evaluate(strategy.make("recall_index", casc), losses)
 
 Implemented policies (§3.1, §4, §6 + classic EE baselines):
   * ``recall_index``      — the paper's Alg. 1 (optimal with-recall).
@@ -23,12 +29,15 @@ Implemented policies (§3.1, §4, §6 + classic EE baselines):
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.line_dp import LineTables
+from repro.strategy.base import PolicyResult, evaluate
+from repro.strategy.line import (FixedNodeStrategy, PatienceStrategy,
+                                 RecallIndexStrategy, ThresholdStrategy)
+from repro.strategy.oracle import OracleStrategy
 
 __all__ = [
     "PolicyResult", "recall_index", "norecall_threshold", "recall_threshold",
@@ -37,140 +46,65 @@ __all__ = [
 ]
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class PolicyResult:
-    served_node: jax.Array   # (T,) int — node whose prediction is returned
-    served_loss: jax.Array   # (T,) float — loss of the served node
-    explore_cost: jax.Array  # (T,) float — sum of inspection costs paid
-    n_probed: jax.Array      # (T,) int — number of nodes inspected
-
-    @property
-    def total(self) -> jax.Array:
-        return self.served_loss + self.explore_cost
-
-    def mean_total(self) -> jax.Array:
-        return jnp.mean(self.total)
-
-
-def _finalize(losses, costs, stopped_at, served, n):
-    """Common bookkeeping given per-sample stop index and served node."""
-    t = losses.shape[0]
-    idx = jnp.arange(n)[None, :]
-    probed_mask = idx <= stopped_at[:, None]
-    explore_cost = jnp.sum(probed_mask * costs[None, :], axis=1)
-    served_loss = jnp.take_along_axis(losses, served[:, None], axis=1)[:, 0]
-    return PolicyResult(
-        served_node=served,
-        served_loss=served_loss,
-        explore_cost=explore_cost,
-        n_probed=stopped_at + 1,
-    )
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.policies.{name} is deprecated; use "
+        f"repro.strategy.make(...) + repro.strategy.evaluate(...)",
+        DeprecationWarning, stacklevel=3)
 
 
 def recall_index(tables: LineTables, losses: jax.Array, bins: jax.Array,
                  costs: jax.Array) -> PolicyResult:
-    """Alg. 1 — probe while X > sigma, then serve the argmin ramp.
-
-    Decisions come from the precomputed if-stop table ``tables.stop``:
-    O(1) gather per node per sample (the Thm 4.5 inference bound).
-    """
-    t, n = bins.shape
-    k = tables.k
-    inf_x = k + 1  # X-axis sentinel index (see line_dp.x_values)
-
-    x_idx = jnp.full((t,), inf_x, jnp.int32)       # running-min X-axis index
-    s_bin = jnp.zeros((t,), jnp.int32)             # previous node's bin
-    best_node = jnp.zeros((t,), jnp.int32)
-    best_loss = jnp.full((t,), jnp.inf, losses.dtype)
-    stopped_at = jnp.full((t,), n - 1, jnp.int32)
-    active = jnp.ones((t,), bool)
-
-    for i in range(n):
-        # stop table consulted BEFORE probing node i (node 0 row is all-
-        # continue: the policy must serve something).
-        stop_now = tables.stop[i, s_bin, x_idx] & (i > 0)
-        newly_stopped = active & stop_now
-        stopped_at = jnp.where(newly_stopped, i - 1, stopped_at)
-        active = active & ~stop_now
-
-        r, b = losses[:, i], bins[:, i]
-        better = active & (r < best_loss)
-        best_loss = jnp.where(better, r, best_loss)
-        best_node = jnp.where(better, i, best_node)
-        x_idx = jnp.where(active, jnp.minimum(x_idx, b + 1), x_idx)
-        s_bin = jnp.where(active, b, s_bin)
-
-    return _finalize(losses, costs, stopped_at, best_node, n)
-
-
-def _threshold_stop(losses, thresholds):
-    """First node whose loss clears its threshold (last node forced)."""
-    t, n = losses.shape
-    hits = losses <= thresholds[None, :]
-    hits = hits.at[:, -1].set(True)
-    return jnp.argmax(hits, axis=1).astype(jnp.int32)
+    """Alg. 1 — probe while X > sigma, then serve the argmin ramp."""
+    _warn("recall_index")
+    strat = RecallIndexStrategy(tables, support=None, costs=costs)
+    return evaluate(strat, losses, aux=bins)
 
 
 def norecall_threshold(losses: jax.Array, costs: jax.Array,
                        thresholds: jax.Array) -> PolicyResult:
-    stopped = _threshold_stop(losses, thresholds)
-    return _finalize(losses, costs, stopped, stopped, losses.shape[1])
+    _warn("norecall_threshold")
+    strat = ThresholdStrategy(losses.shape[1], thresholds, recall=False,
+                              costs=costs)
+    return evaluate(strat, losses)
 
 
 def recall_threshold(losses: jax.Array, costs: jax.Array,
                      thresholds: jax.Array) -> PolicyResult:
-    stopped = _threshold_stop(losses, thresholds)
-    n = losses.shape[1]
-    masked = jnp.where(jnp.arange(n)[None, :] <= stopped[:, None],
-                       losses, jnp.inf)
-    served = jnp.argmin(masked, axis=1).astype(jnp.int32)
-    return _finalize(losses, costs, stopped, served, n)
+    _warn("recall_threshold")
+    strat = ThresholdStrategy(losses.shape[1], thresholds, recall=True,
+                              costs=costs)
+    return evaluate(strat, losses)
 
 
 def norecall_patience(losses: jax.Array, costs: jax.Array,
                       preds: jax.Array, patience: int) -> PolicyResult:
     """PABEE: stop once `patience` consecutive ramps emit the same label."""
-    t, n = preds.shape
-    streak = jnp.zeros((t,), jnp.int32)
-    stopped = jnp.full((t,), n - 1, jnp.int32)
-    done = jnp.zeros((t,), bool)
-    for i in range(1, n):
-        same = preds[:, i] == preds[:, i - 1]
-        streak = jnp.where(same, streak + 1, 0)
-        hit = (~done) & (streak >= patience)
-        stopped = jnp.where(hit, i, stopped)
-        done = done | hit
-    return _finalize(losses, costs, stopped, stopped, n)
+    _warn("norecall_patience")
+    strat = PatienceStrategy(losses.shape[1], patience, costs=costs)
+    return evaluate(strat, losses, aux=preds)
 
 
 def oracle(losses: jax.Array, costs: jax.Array) -> PolicyResult:
     """Offline optimum with recall: best prefix under full foresight."""
-    n = losses.shape[1]
-    prefix_min = jax.lax.associative_scan(jnp.minimum, losses, axis=1)
-    prefix_cost = jnp.cumsum(costs)
-    totals = prefix_min + prefix_cost[None, :]
-    stopped = jnp.argmin(totals, axis=1).astype(jnp.int32)
-    masked = jnp.where(jnp.arange(n)[None, :] <= stopped[:, None],
-                       losses, jnp.inf)
-    served = jnp.argmin(masked, axis=1).astype(jnp.int32)
-    return _finalize(losses, costs, stopped, served, n)
+    _warn("oracle")
+    strat = OracleStrategy(losses.shape[1], costs=costs, recall=True)
+    return evaluate(strat, losses)
 
 
 def oracle_norecall(losses: jax.Array, costs: jax.Array) -> PolicyResult:
-    prefix_cost = jnp.cumsum(costs)
-    totals = losses + prefix_cost[None, :]
-    stopped = jnp.argmin(totals, axis=1).astype(jnp.int32)
-    return _finalize(losses, costs, stopped, stopped, losses.shape[1])
+    _warn("oracle_norecall")
+    strat = OracleStrategy(losses.shape[1], costs=costs, recall=False)
+    return evaluate(strat, losses)
 
 
 def always_last(losses: jax.Array, costs: jax.Array) -> PolicyResult:
-    t, n = losses.shape
-    stopped = jnp.full((t,), n - 1, jnp.int32)
-    return _finalize(losses, costs, stopped, stopped, n)
+    _warn("always_last")
+    n = losses.shape[1]
+    return evaluate(FixedNodeStrategy(n, n - 1, costs=costs), losses)
 
 
 def always_first(losses: jax.Array, costs: jax.Array) -> PolicyResult:
-    t, n = losses.shape
-    stopped = jnp.zeros((t,), jnp.int32)
-    return _finalize(losses, costs, stopped, stopped, n)
+    _warn("always_first")
+    n = losses.shape[1]
+    return evaluate(FixedNodeStrategy(n, 0, costs=costs), losses)

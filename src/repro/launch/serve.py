@@ -1,9 +1,14 @@
-"""Serving launcher: loads (or initializes) a checkpoint, calibrates the
-T-Tamer tables from a calibration batch, and serves batched greedy
-generation with per-token early exit through the segment engine.
+"""Serving launcher: loads (or initializes) a checkpoint, calibrates a
+`Cascade` from a calibration batch, builds the requested strategy from
+the registry, and serves batched greedy generation with per-token early
+exit through the segment engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch paper-ee-100m \
-      --smoke --policy recall --lam 0.5 --tokens 32
+      --smoke --policy recall_index --lam 0.5 --tokens 32
+
+``--policy`` accepts any online name from ``repro.strategy.available()``
+— including the table-backed ``skip_recall`` and ``tree_index``
+strategies (§5) that share the line calibration.
 """
 
 from __future__ import annotations
@@ -15,32 +20,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import strategy
 from repro.configs import get_config
-from repro.core.line_dp import solve_line
-from repro.core.markov import estimate_chain
-from repro.core.support import build_support, quantize
 from repro.models import model as M
 from repro.models.param import materialize
-from repro.serving.engine import Engine, RecallIndexPolicy, ThresholdPolicy
+from repro.serving.engine import Engine
 from repro.training import checkpoint
+
+# aliases kept for muscle memory from the previous CLI
+ALIASES = {
+    "recall": "recall_index",
+    "threshold": "norecall_threshold",
+    "none": "always_last",
+}
+# hindsight-only strategies (online=False in the registry) cannot serve
+ONLINE = strategy.available(online_only=True)
 
 
 def calibrate(params, cfg, key, lam: float, k: int = 24, t: int = 512,
               seq: int = 64, segment_costs=None):
-    """Fit support + Markov chain + if-stop tables from model traces."""
-    toks = jax.random.randint(key, (t, seq), 0, cfg.vocab)
-    _, _, node_losses, _ = M.prefill(params, cfg, {"tokens": toks},
-                                     cache_len=seq + 8)
-    scaled = lam * np.asarray(node_losses)
-    support = build_support(scaled, k)
-    bins = quantize(support, jnp.asarray(scaled))
-    chain = estimate_chain(bins, k)
-    n = node_losses.shape[1]
-    if segment_costs is None:
-        segment_costs = np.full((n,), 1.0 / n)
-    costs = jnp.maximum(jnp.asarray(
-        (1.0 - lam) * segment_costs, jnp.float32), 1e-6)
-    return solve_line(chain, costs, support), support
+    """DEPRECATED shim — use `strategy.Cascade.calibrate`.
+
+    Returns the legacy (tables, support) pair for one release.
+    """
+    casc = strategy.Cascade.calibrate(params, cfg, key, lam, k=k, t=t,
+                                      seq=seq, segment_costs=segment_costs)
+    return casc.solve_line(), casc.support
+
+
+def build_strategy(name: str, casc: strategy.Cascade, *, threshold: float,
+                   patience: int):
+    """Registry dispatch with the per-family CLI knobs applied."""
+    if name in ("norecall_threshold", "recall_threshold"):
+        # thresholds are compared against raw 1-confidence in serving
+        return strategy.make(name, casc, threshold=threshold, lam=1.0)
+    if name == "norecall_patience":
+        return strategy.make(name, casc, patience=patience, lam=1.0)
+    if name == "skip_recall":
+        # intra-model early exit: skipped segments still pay backbone
+        return strategy.make(name, casc, mode="cumulative")
+    return strategy.make(name, casc)
 
 
 def main() -> None:
@@ -48,10 +67,11 @@ def main() -> None:
     ap.add_argument("--arch", default="paper-ee-100m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--policy", default="recall",
-                    choices=["recall", "threshold", "none"])
+    ap.add_argument("--policy", default="recall_index",
+                    choices=sorted(set(ONLINE) | set(ALIASES)))
     ap.add_argument("--lam", type=float, default=0.5)
     ap.add_argument("--threshold", type=float, default=0.4)
+    ap.add_argument("--patience", type=int, default=2)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
@@ -68,24 +88,31 @@ def main() -> None:
         params = materialize(M.model_defs(cfg), key)
         print("no checkpoint given — serving random init (demo mode)")
 
-    n_nodes = cfg.n_ramps + 1
-    if args.policy == "recall":
-        tables, support = calibrate(params, cfg, key, args.lam)
-        policy = RecallIndexPolicy(tables, support, args.lam)
+    name = ALIASES.get(args.policy, args.policy)
+    if strategy.needs_tables(name):
+        # table-backed strategies calibrate on real model traces; the
+        # line/skip solves are triggered lazily inside make()
+        casc = strategy.Cascade.calibrate(params, cfg, key, args.lam,
+                                          solve=False)
+    else:
+        # topology/costs-only strategies skip the calibration prefill
+        casc = strategy.Cascade.uniform(cfg.n_ramps + 1, lam=args.lam)
+    strat = build_strategy(name, casc, threshold=args.threshold,
+                           patience=args.patience)
+    if casc.line_tables is not None:
+        tables = casc.line_tables
         print(f"calibrated T-Tamer tables: n={tables.n} K={tables.k} "
               f"online-optimal value {float(tables.value):.4f}")
-    elif args.policy == "threshold":
-        policy = ThresholdPolicy(n_nodes, args.threshold)
-    else:
-        policy = ThresholdPolicy(n_nodes, -1.0)  # never exits early
+    print(f"strategy: {name} (registry: {', '.join(strategy.available())})")
 
-    engine = Engine(params, cfg, policy, cache_len=args.cache_len)
+    engine = Engine(params, cfg, strat, cache_len=args.cache_len)
     prompts = {"tokens": jax.random.randint(
         key, (args.batch, args.prompt_len), 0, cfg.vocab)}
     t0 = time.time()
     stats = engine.generate(prompts, args.tokens)
     dt = time.time() - t0
     n_seg = len(cfg.segments)
+    n_nodes = cfg.n_ramps + 1
     print(f"generated {args.batch}x{args.tokens} tokens in {dt:.2f}s "
           f"({args.batch * args.tokens / dt:.1f} tok/s)")
     print(f"segments: batch-run {stats.segments_run_batch} / "

@@ -1,1 +1,5 @@
-"""repro.serving"""
+"""repro.serving — segment-wise engines driven by `repro.strategy`."""
+
+from repro.serving.engine import Classifier, Engine, GenerationStats
+
+__all__ = ["Engine", "Classifier", "GenerationStats"]

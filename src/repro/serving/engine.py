@@ -1,14 +1,20 @@
 """Segment-wise serving engine with T-Tamer early exit (the paper's
-technique as a first-class serving feature — DESIGN.md §2).
+technique as a first-class serving feature — DESIGN.md §2-3).
 
 The engine executes a decode step SEGMENT BY SEGMENT.  After every ramp
 segment it:
   1. computes the loss proxy ell = 1 - confidence for each lane,
-  2. quantizes it on the calibrated support,
-  3. gathers the if-stop decision from the precomputed T-Tamer table
-     (O(1)/lane, Thm 4.5), and
-  4. records exits.  With RECALL, an exiting lane serves the logits of its
-     best (argmin-loss) ramp so far, not the ramp it exited at.
+  2. hands it to the pluggable `Strategy` (``observe`` updates per-lane
+     state and returns the mask of lanes continuing deeper), and
+  3. serves, per lane, the logits of whatever node ``strategy.serve``
+     designates — argmin ramp under recall, last probed without.
+
+The engine holds NO policy logic of its own: any strategy from
+``repro.strategy.make`` (recall index, thresholds, patience, skip
+tables, ...) plugs in unchanged, and the same object reproduces its
+offline ``strategy.evaluate`` decisions here (tested in
+tests/test_system.py).  Strategies with ``online = False`` (the
+hindsight oracles) are rejected — segments cannot be un-run.
 
 TPU adaptation (DESIGN.md §3): lanes are fixed-shape; exited lanes are
 masked, and the engine stops launching deeper segments once every lane has
@@ -27,91 +33,33 @@ T-Tamer cost model already prices in via the calibration traces.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.line_dp import LineTables
-from repro.core.support import Support, quantize
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.strategy.base import Strategy
 
-__all__ = ["EnginePolicy", "RecallIndexPolicy", "ThresholdPolicy",
-           "Engine", "GenerationStats", "Classifier"]
-
-
-class EnginePolicy:
-    """Per-segment stop/continue + which ramp to serve."""
-
-    n_nodes: int
-
-    def reset(self, batch: int):
-        raise NotImplementedError
-
-    def observe(self, node: int, losses: jax.Array, active: jax.Array):
-        """Update state with node losses; returns updated active mask of
-        lanes that should CONTINUE past this node."""
-        raise NotImplementedError
-
-    def served_node(self) -> jax.Array:
-        raise NotImplementedError
+__all__ = ["Engine", "GenerationStats", "Classifier"]
 
 
-class RecallIndexPolicy(EnginePolicy):
-    """The paper's Alg. 1, vectorized over lanes."""
-
-    def __init__(self, tables: LineTables, support: Support,
-                 lam: float = 0.5):
-        self.tables = tables
-        self.support = support
-        self.lam = lam
-        self.n_nodes = tables.n
-
-    def reset(self, batch: int):
-        k = self.tables.k
-        self._x_idx = jnp.full((batch,), k + 1, jnp.int32)
-        self._s_bin = jnp.zeros((batch,), jnp.int32)
-        self._best_loss = jnp.full((batch,), jnp.inf, jnp.float32)
-        self._best_node = jnp.zeros((batch,), jnp.int32)
-
-    def observe(self, node: int, losses: jax.Array, active: jax.Array):
-        scaled = self.lam * losses
-        b = quantize(self.support, scaled)
-        better = active & (scaled < self._best_loss)
-        self._best_loss = jnp.where(better, scaled, self._best_loss)
-        self._best_node = jnp.where(better, node, self._best_node)
-        self._x_idx = jnp.where(active, jnp.minimum(self._x_idx, b + 1),
-                                self._x_idx)
-        self._s_bin = jnp.where(active, b, self._s_bin)
-        if node + 1 >= self.n_nodes:
-            return jnp.zeros_like(active)
-        stop_next = self.tables.stop[node + 1, self._s_bin, self._x_idx]
-        return active & ~stop_next
-
-    def served_node(self) -> jax.Array:
-        return self._best_node      # RECALL: argmin ramp
-
-
-class ThresholdPolicy(EnginePolicy):
-    """Confidence-threshold baseline (DeeBERT-style, no recall)."""
-
-    def __init__(self, n_nodes: int, threshold: float):
-        self.n_nodes = n_nodes
-        self.threshold = threshold
-
-    def reset(self, batch: int):
-        self._last_node = jnp.zeros((batch,), jnp.int32)
-
-    def observe(self, node: int, losses: jax.Array, active: jax.Array):
-        self._last_node = jnp.where(active, node, self._last_node)
-        if node + 1 >= self.n_nodes:
-            return jnp.zeros_like(active)
-        return active & (losses > self.threshold)
-
-    def served_node(self) -> jax.Array:
-        return self._last_node      # NO recall: last inspected
+def _check_online(strategy: Strategy) -> Strategy:
+    if not getattr(strategy, "online", True):
+        raise ValueError(
+            f"{type(strategy).__name__} needs hindsight (online=False) and "
+            "cannot drive the serving engine; use strategy.evaluate on "
+            "offline traces instead")
+    # the engine's aux channel carries predicted labels, NOT support bins
+    # — a table strategy built without a Support would silently consume
+    # them as bins, so refuse it here rather than serve garbage
+    if hasattr(strategy, "support") and strategy.support is None:
+        raise ValueError(
+            f"{type(strategy).__name__} was built without a Support and "
+            "reads bins from the aux channel; the engine supplies "
+            "predictions there — construct it with the cascade's Support")
+    return strategy
 
 
 @dataclasses.dataclass
@@ -126,14 +74,12 @@ class GenerationStats:
 class Engine:
     """Batched greedy-decode engine with per-token early exit."""
 
-    def __init__(self, params, cfg: ModelConfig, policy: EnginePolicy,
+    def __init__(self, params, cfg: ModelConfig, strategy: Strategy,
                  cache_len: int, jit: bool = True):
         self.params = params
         self.cfg = cfg
-        self.policy = policy
+        self.strategy = _check_online(strategy)
         self.cache_len = cache_len
-        self._ramp_segments = [i for i, s in enumerate(cfg.segments)
-                               if s.ramp]
         n_seg = len(cfg.segments)
 
         def seg_fn(si, x, cache_seg, pos):
@@ -166,20 +112,19 @@ class Engine:
 
     def generate(self, batch: dict, n_tokens: int) -> GenerationStats:
         cfg = self.cfg
+        strategy = self.strategy
         logits, caches, _, pos = self.prefill(batch)
         b = logits.shape[0]
         tok = jnp.argmax(logits, axis=-1)
         out_tokens, out_nodes = [], []
         seg_batch = seg_policy = 0
         n_seg = len(cfg.segments)
-        n_nodes = cfg.n_ramps + 1
 
         for _ in range(n_tokens):
-            self.policy.reset(b)
+            state = strategy.init(b)
             x = self._embed(tok)
             active = jnp.ones((b,), bool)
             best_logits = jnp.zeros((b, cfg.vocab), jnp.float32)
-            have_logits = jnp.zeros((b,), bool)
             node = 0
             new_caches = list(caches)
             for si in range(n_seg):
@@ -190,43 +135,40 @@ class Engine:
                 seg_batch += 1
                 seg_policy += int(active.sum())
                 if conf is not None:
-                    # serve-from-this-node logits for lanes that stop here
-                    # (recall handled by policy's best_node bookkeeping at
-                    # the logits level: we materialize node logits lazily —
-                    # the ramp head shares the unembedding, so recompute
-                    # for the argmin node is one extra head matmul)
+                    # serve-from-this-node logits for lanes whose served
+                    # node is the current one (the ramp head shares the
+                    # unembedding, so materializing them is one head
+                    # matmul; recall refreshes happen via serve()'s
+                    # argmin bookkeeping, no isinstance dispatch)
                     from repro.models.common import rms_norm
                     rp = self.params["segments"][si]["ramp"]
                     h = rms_norm(rp["norm"], x[:, 0, :], cfg.norm_eps)
                     node_logits = M.unembed(self.params, cfg,
                                             h[:, None, :])[:, 0]
-                    prev_active = active
-                    active = self.policy.observe(node, conf, active)
-                    # lanes whose best node is the current one refresh
-                    best_now = (self.policy.served_node() == node) \
-                        if isinstance(self.policy, RecallIndexPolicy) \
-                        else (prev_active & ~active)
-                    best_logits = jnp.where(best_now[:, None],
+                    preds = jnp.argmax(node_logits, axis=-1)
+                    state, active = strategy.observe(
+                        state, node, conf, active,
+                        aux=preds.astype(jnp.int32))
+                    take = strategy.serve(state) == node
+                    best_logits = jnp.where(take[:, None],
                                             node_logits.astype(jnp.float32),
                                             best_logits)
-                    have_logits = have_logits | best_now
                     node += 1
             if bool(active.any()):
                 # final head node (for lanes still active)
                 final_logits, final_loss = self._head(x)
-                prev_active = active
-                active = self.policy.observe(node, final_loss, active)
-                take_final = (self.policy.served_node() == node) \
-                    if isinstance(self.policy, RecallIndexPolicy) \
-                    else prev_active
-                best_logits = jnp.where(take_final[:, None],
+                preds = jnp.argmax(final_logits, axis=-1)
+                state, active = strategy.observe(
+                    state, node, final_loss, active,
+                    aux=preds.astype(jnp.int32))
+                take = strategy.serve(state) == node
+                best_logits = jnp.where(take[:, None],
                                         final_logits.astype(jnp.float32),
                                         best_logits)
-                have_logits = have_logits | take_final
             caches = new_caches
             tok = jnp.argmax(best_logits, axis=-1)
             out_tokens.append(np.asarray(tok))
-            out_nodes.append(np.asarray(self.policy.served_node()))
+            out_nodes.append(np.asarray(strategy.serve(state)))
             pos = pos + 1
 
         return GenerationStats(
@@ -243,25 +185,26 @@ class Classifier:
 
     One request = one input sequence; the prediction is read at the last
     position of a ramp (no decode loop).  The engine runs segment-by-
-    segment over the PREFILL, consulting the T-Tamer if-stop table after
-    each ramp, and serves the argmin-loss ramp's label (recall).  This is
+    segment over the PREFILL, consulting the strategy after each ramp,
+    and serves whatever node ``strategy.serve`` designates.  This is
     Alg. 1 applied at the request level, where the latency saving is the
     skipped backbone depth.
     """
 
-    def __init__(self, params, cfg: ModelConfig, policy: EnginePolicy):
+    def __init__(self, params, cfg: ModelConfig, strategy: Strategy):
         self.params = params
         self.cfg = cfg
-        self.policy = policy
+        self.strategy = _check_online(strategy)
 
     def classify(self, batch: dict) -> dict:
         from repro.models.blocks import block_forward
         from repro.models.common import rms_norm
         cfg = self.cfg
         params = self.params
+        strategy = self.strategy
         x, positions = M._embed_inputs(params, cfg, batch)
         b = x.shape[0]
-        self.policy.reset(b)
+        state = strategy.init(b)
         active = jnp.ones((b,), bool)
         best_logits = jnp.zeros((b, cfg.vocab), jnp.float32)
         node = 0
@@ -286,10 +229,13 @@ class Classifier:
                 logits = M.unembed(params, cfg, h[:, None, :])[:, 0]
                 probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
                 loss = 1.0 - probs.max(axis=-1)
-                active = self.policy.observe(node, loss, active)
-                take = (self.policy.served_node() == node) \
-                    if isinstance(self.policy, RecallIndexPolicy) else \
-                    (~active)
+                preds = jnp.argmax(logits, axis=-1)
+                state, active = strategy.observe(
+                    state, node, loss, active, aux=preds.astype(jnp.int32))
+                # post-observe serve() mask: only lanes whose SERVED node
+                # is this ramp refresh — an earlier-exited lane's logits
+                # are never overwritten by deeper ramps or the head
+                take = strategy.serve(state) == node
                 best_logits = jnp.where(take[:, None],
                                         logits.astype(jnp.float32),
                                         best_logits)
@@ -299,14 +245,16 @@ class Classifier:
                              cfg.norm_eps)
             logits = M.unembed(params, cfg, final)[:, 0]
             probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
-            active2 = self.policy.observe(node, 1.0 - probs.max(-1), active)
-            take = (self.policy.served_node() == node) \
-                if isinstance(self.policy, RecallIndexPolicy) else active
+            preds = jnp.argmax(logits, axis=-1)
+            state, active = strategy.observe(
+                state, node, 1.0 - probs.max(-1), active,
+                aux=preds.astype(jnp.int32))
+            take = strategy.serve(state) == node
             best_logits = jnp.where(take[:, None],
                                     logits.astype(jnp.float32), best_logits)
         return {
             "labels": np.asarray(jnp.argmax(best_logits, axis=-1)),
-            "served_node": np.asarray(self.policy.served_node()),
+            "served_node": np.asarray(strategy.serve(state)),
             "segments_run_batch": seg_run,
             "segments_run_policy": seg_policy,
             "segments_full": n_seg * b,

@@ -1,0 +1,26 @@
+"""repro.strategy — ONE pluggable decision layer for trace evaluation,
+benchmarks, and the online serving engine (DESIGN.md §3-4).
+
+    from repro import strategy
+    casc = strategy.Cascade.from_traces(losses, costs, k=32, lam=0.6)
+    strat = strategy.make("recall_index", casc)
+    result = strategy.evaluate(strat, losses)      # offline traces
+    Engine(params, cfg, strat, cache_len=128)      # online serving
+"""
+
+from repro.strategy.base import PolicyResult, Strategy, evaluate
+from repro.strategy.cascade import Cascade
+from repro.strategy.line import (FixedNodeStrategy, PatienceStrategy,
+                                 RecallIndexStrategy, ThresholdStrategy,
+                                 TreeIndexStrategy)
+from repro.strategy.oracle import OracleStrategy
+from repro.strategy.registry import available, make, needs_tables, register
+from repro.strategy.skip import SkipRecallStrategy
+
+__all__ = [
+    "Strategy", "PolicyResult", "evaluate", "Cascade",
+    "make", "available", "needs_tables", "register",
+    "RecallIndexStrategy", "TreeIndexStrategy", "ThresholdStrategy",
+    "PatienceStrategy", "FixedNodeStrategy", "OracleStrategy",
+    "SkipRecallStrategy",
+]

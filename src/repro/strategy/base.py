@@ -1,0 +1,123 @@
+"""The `Strategy` protocol — ONE decision API for offline trace evaluation,
+benchmarks, and the online serving engine (DESIGN.md §3).
+
+A strategy is a *functional* object: all mutable quantities live in a
+pytree-registered state dataclass, and the three protocol methods are pure:
+
+  * ``init(batch) -> state``            — fresh per-lane state.
+  * ``observe(state, node, losses, active, aux) -> (state, active)``
+        — fold in node ``node``'s per-lane losses; returns the updated
+        state and the mask of lanes that should CONTINUE past this node.
+  * ``serve(state) -> served_node``     — which node's output each lane
+        returns if it stops now (with recall this is the argmin node).
+
+``node`` may be a traced int32 scalar, so one ``observe`` implementation
+jits, vmaps, and ``lax.scan``s in both the offline evaluator below and the
+segment-wise engine (`repro.serving.engine`).  ``aux`` is an optional int32
+per-lane side channel: predicted labels for patience-style strategies,
+or precomputed support bins for table strategies built without a
+``Support`` (the deprecated `core.policies` wrappers use this).
+
+State contract: every state dataclass carries ``explore_cost`` (f32 per
+lane, objective-units inspection cost paid so far) and ``n_probed`` (i32
+per lane), which ``evaluate`` reads back together with ``serve`` to build
+a ``PolicyResult``.  Strategies that price exploration differently (e.g.
+skip strategies paying edge costs) simply maintain these fields their own
+way — no isinstance dispatch anywhere downstream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PolicyResult", "Strategy", "evaluate"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PolicyResult:
+    """Outcome of running a strategy over a batch of traces."""
+
+    served_node: jax.Array   # (T,) int — node whose prediction is returned
+    served_loss: jax.Array   # (T,) float — loss of the served node
+    explore_cost: jax.Array  # (T,) float — sum of inspection costs paid
+    n_probed: jax.Array      # (T,) int — number of nodes inspected
+
+    @property
+    def total(self) -> jax.Array:
+        return self.served_loss + self.explore_cost
+
+    def mean_total(self) -> jax.Array:
+        return jnp.mean(self.total)
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    """Structural protocol — any object with these members qualifies."""
+
+    n_nodes: int
+    lam: float       # scale applied to incoming losses inside observe
+    online: bool     # False => needs hindsight; engine refuses it
+
+    def init(self, batch: int):
+        ...
+
+    def observe(self, state, node, losses: jax.Array, active: jax.Array,
+                aux: jax.Array | None = None) -> Tuple[object, jax.Array]:
+        ...
+
+    def serve(self, state) -> jax.Array:
+        ...
+
+
+def evaluate(strategy: Strategy, losses: jax.Array,
+             aux: jax.Array | None = None) -> PolicyResult:
+    """Run ``strategy`` over offline traces with one ``lax.scan`` over nodes.
+
+    Args:
+      strategy: any `Strategy`; its internal ``lam`` scaling applies, so
+        pass losses in the units the strategy was calibrated for.
+      losses: (T, n) per-node losses.
+      aux: optional (T, n) int32 side channel (predictions / bins).
+
+    Returns a `PolicyResult`; ``served_loss`` is reported in the
+    strategy's scaled units (``lam * losses[served]``) so objectives are
+    comparable with the DP value.
+    """
+    losses = jnp.asarray(losses)
+    t, n = losses.shape
+    if n != strategy.n_nodes:
+        raise ValueError(f"traces have {n} nodes, strategy expects "
+                         f"{strategy.n_nodes}")
+
+    state0 = strategy.init(t)
+    active0 = jnp.ones((t,), bool)
+
+    # aux=None stays None so aux-requiring strategies (patience, table
+    # strategies without a Support) raise instead of seeing zeros.
+    def step(carry, inp):
+        state, active = carry
+        node, loss_col = inp[0], inp[1]
+        aux_col = inp[2] if len(inp) > 2 else None
+        state, active = strategy.observe(state, node, loss_col, active,
+                                         aux=aux_col)
+        return (state, active), None
+
+    xs = (jnp.arange(n, dtype=jnp.int32), losses.T)
+    if aux is not None:
+        xs = xs + (jnp.asarray(aux, jnp.int32).T,)
+    (state, _), _ = jax.lax.scan(step, (state0, active0), xs)
+
+    served = strategy.serve(state)
+    served_loss = strategy.lam * jnp.take_along_axis(
+        losses, served[:, None], axis=1)[:, 0]
+    return PolicyResult(
+        served_node=served,
+        served_loss=served_loss,
+        explore_cost=state.explore_cost,
+        n_probed=state.n_probed,
+    )

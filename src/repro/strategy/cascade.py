@@ -1,0 +1,142 @@
+"""`Cascade` — the calibrated serving spec a strategy is built from.
+
+One object bundles everything the paper's pipeline produces between raw
+traces and a deployable policy (DESIGN.md §4): the cascade topology (a
+line of n nodes), per-node inspection costs in objective units, the
+discrete loss `Support`, the fitted Markov chain, and the solved DP
+tables (line and, on demand, skip).  ``strategy.make(name, cascade)``
+reads whichever pieces the named strategy needs.
+
+Construction paths:
+
+  * `Cascade.from_traces(losses, costs, ...)`  — offline traces (the
+    pareto sweeps and benchmarks).
+  * `Cascade.calibrate(params, cfg, key, lam)` — run a model on
+    calibration prompts and fit from its ramp losses (the serving
+    launcher; formerly a free function in `repro.launch.serve`).
+  * `Cascade.uniform(n)`                       — placeholder spec for
+    strategies that need no tables (thresholds, fixed endpoints).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import skip_dp
+from repro.core.line_dp import LineTables, solve_line
+from repro.core.markov import MarkovChain, estimate_chain
+from repro.core.skip_dp import SkipTables
+from repro.core.support import Support, build_support, quantize
+
+__all__ = ["Cascade"]
+
+
+@dataclasses.dataclass
+class Cascade:
+    """Calibrated cascade spec: topology + costs + support + tables."""
+
+    support: Support
+    chain: MarkovChain
+    costs: jax.Array                       # (n,) objective-unit costs
+    lam: float = 1.0                       # loss scale the tables assume
+    line_tables: LineTables | None = None
+    skip_tables: SkipTables | None = None
+    edge_costs: np.ndarray | None = None   # (n+1, n+1), set by solve_skip
+    skip_mode: str | None = None
+
+    @property
+    def n_nodes(self) -> int:
+        return self.chain.n
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_traces(cls, losses: np.ndarray, costs, *, k: int = 32,
+                    lam: float = 1.0, min_cost: float = 1e-6,
+                    solve: bool = True) -> "Cascade":
+        """Fit support + chain from (T, n) raw loss traces and solve.
+
+        ``losses`` are RAW; they are scaled by ``lam`` before support
+        fitting so the tables live in the lambda-weighted domain.
+        ``costs`` are taken as-is (already objective-weighted) and clamped
+        to ``min_cost`` (Assumption 2.1 needs strictly positive costs).
+        """
+        scaled = lam * np.asarray(losses)
+        support = build_support(scaled, k)
+        bins = quantize(support, jnp.asarray(scaled))
+        chain = estimate_chain(bins, k)
+        costs = jnp.maximum(jnp.asarray(costs, jnp.float32), min_cost)
+        casc = cls(support=support, chain=chain, costs=costs, lam=lam)
+        if solve:
+            casc.solve_line()
+        return casc
+
+    @classmethod
+    def calibrate(cls, params, cfg, key, lam: float, *, k: int = 24,
+                  t: int = 512, seq: int = 64, segment_costs=None,
+                  solve: bool = True) -> "Cascade":
+        """Fit a cascade from a model's own ramp losses on random prompts
+        (the serving launcher's calibration step)."""
+        from repro.models import model as M   # lazy: keep core import light
+        toks = jax.random.randint(key, (t, seq), 0, cfg.vocab)
+        _, _, node_losses, _ = M.prefill(params, cfg, {"tokens": toks},
+                                         cache_len=seq + 8)
+        raw = np.asarray(node_losses)
+        n = raw.shape[1]
+        if segment_costs is None:
+            segment_costs = np.full((n,), 1.0 / n)
+        costs = (1.0 - lam) * np.asarray(segment_costs)
+        return cls.from_traces(raw, costs, k=k, lam=lam, solve=solve)
+
+    @classmethod
+    def uniform(cls, n_nodes: int, *, k: int = 8, lam: float = 1.0,
+                costs=None) -> "Cascade":
+        """Placeholder spec (uniform chain, linear grid) for strategies
+        that consume only the topology and costs."""
+        grid = jnp.linspace(0.1, 1.0, k, dtype=jnp.float32)
+        support = Support(grid=grid, edges=(grid[1:] + grid[:-1]) / 2)
+        p0 = jnp.full((k,), 1.0 / k, jnp.float32)
+        trans = jnp.full((max(n_nodes - 1, 0), k, k), 1.0 / k, jnp.float32)
+        chain = MarkovChain(p0=p0, trans=trans)
+        if costs is None:
+            costs = np.full((n_nodes,), 1.0 / n_nodes)
+        return cls(support=support, chain=chain,
+                   costs=jnp.asarray(costs, jnp.float32), lam=lam)
+
+    # ------------------------------------------------------------------
+    # solvers (cached on the spec)
+    # ------------------------------------------------------------------
+
+    def solve_line(self) -> LineTables:
+        """Solve (and cache) the with-recall line DP (Alg. 2)."""
+        if self.line_tables is None:
+            self.line_tables = solve_line(self.chain, self.costs,
+                                          self.support)
+        return self.line_tables
+
+    def solve_skip(self, mode: str = "cumulative") -> SkipTables:
+        """Solve (and cache) the transitive-closure DP (§5.2).
+
+        ``mode`` picks the edge-cost semantics: ``"cumulative"`` (intra-
+        model early exit — skipped segments still pay backbone compute)
+        or ``"skip_free"`` (inter-model cascades — skipped models are
+        never run).
+        """
+        if mode not in ("cumulative", "skip_free"):
+            raise ValueError(f"unknown skip mode {mode!r}")
+        if self.skip_tables is None or self.skip_mode != mode:
+            costs = np.asarray(self.costs, np.float64)
+            builder = (skip_dp.edge_costs_cumulative if mode == "cumulative"
+                       else skip_dp.edge_costs_skip_free)
+            self.edge_costs = builder(costs)
+            self.skip_tables = skip_dp.solve_skip(self.chain,
+                                                  self.edge_costs,
+                                                  self.support)
+            self.skip_mode = mode
+        return self.skip_tables

@@ -1,0 +1,308 @@
+"""Line-topology strategies: the paper's table/index policies and the
+classic early-exit baselines, all as pure `Strategy` implementations.
+
+Every strategy here folds one node per ``observe`` call over a
+pytree-registered state, so the same object drives the offline
+``strategy.evaluate`` scan and the segment-wise serving engine.
+
+  * `RecallIndexStrategy`  — Alg. 1 backed by the `LineTables.stop` table
+    (O(1) gather per node per lane, Thm 4.5).
+  * `TreeIndexStrategy`    — the exact dynamic index sigma(s, i) of
+    Def. 4.4, the multi-line/tree form (§5.1): probe while the running
+    min X exceeds the next node's interpolated index.
+  * `ThresholdStrategy`    — DeeBERT/BranchyNet confidence thresholds,
+    with or without recall.
+  * `PatienceStrategy`     — PABEE consecutive-agreement stopping (uses
+    the ``aux`` prediction channel).
+  * `FixedNodeStrategy`    — always_first / always_last static endpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.line_dp import LineTables
+from repro.core.support import Support, quantize
+
+__all__ = [
+    "RecallIndexStrategy", "TreeIndexStrategy", "ThresholdStrategy",
+    "PatienceStrategy", "FixedNodeStrategy",
+]
+
+
+def _as_costs(costs, n: int) -> jax.Array:
+    if costs is None:
+        return jnp.zeros((n,), jnp.float32)
+    costs = jnp.asarray(costs, jnp.float32)
+    if costs.shape != (n,):
+        raise ValueError(f"costs shape {costs.shape} != ({n},)")
+    return costs
+
+
+def _bins(support: Support | None, scaled: jax.Array, aux) -> jax.Array:
+    """Support-quantized bins, or the precomputed ``aux`` bins when the
+    strategy was built without a Support (deprecated-wrapper path)."""
+    if support is not None:
+        return quantize(support, scaled)
+    if aux is None:
+        raise ValueError("strategy built without a Support needs "
+                         "precomputed bins on the aux channel")
+    return aux
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RecallState:
+    x_idx: jax.Array        # (B,) i32 — running-min X-axis index
+    s_bin: jax.Array        # (B,) i32 — previous probed node's bin
+    best_loss: jax.Array    # (B,) f32 — running min scaled loss
+    best_node: jax.Array    # (B,) i32 — argmin node (recall target)
+    explore_cost: jax.Array  # (B,) f32
+    n_probed: jax.Array      # (B,) i32
+
+
+class RecallIndexStrategy:
+    """Alg. 1: probe while the if-stop table says continue, serve argmin."""
+
+    online = True
+
+    def __init__(self, tables: LineTables, support: Support | None,
+                 costs=None, lam: float = 1.0):
+        self.tables = tables
+        self.support = support
+        self.lam = float(lam)
+        self.n_nodes = tables.n
+        self.costs = _as_costs(costs, tables.n)
+
+    def init(self, batch: int) -> RecallState:
+        k = self.tables.k
+        return RecallState(
+            x_idx=jnp.full((batch,), k + 1, jnp.int32),
+            s_bin=jnp.zeros((batch,), jnp.int32),
+            best_loss=jnp.full((batch,), jnp.inf, jnp.float32),
+            best_node=jnp.zeros((batch,), jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: RecallState, node, losses, active, aux=None):
+        scaled = self.lam * losses.astype(jnp.float32)
+        b = _bins(self.support, scaled, aux)
+        explore = state.explore_cost + active * self.costs[node]
+        n_probed = state.n_probed + active
+        better = active & (scaled < state.best_loss)
+        best_loss = jnp.where(better, scaled, state.best_loss)
+        best_node = jnp.where(better, node, state.best_node)
+        x_idx = jnp.where(active, jnp.minimum(state.x_idx, b + 1),
+                          state.x_idx)
+        s_bin = jnp.where(active, b, state.s_bin)
+        # stop table for the NEXT node; row gather clamps at n-1 but the
+        # (node + 1 < n) mask forces a stop after the final node anyway.
+        stop_next = self.tables.stop[node + 1, s_bin, x_idx]
+        cont = active & ~stop_next & (node + 1 < self.n_nodes)
+        return RecallState(x_idx=x_idx, s_bin=s_bin, best_loss=best_loss,
+                           best_node=best_node, explore_cost=explore,
+                           n_probed=n_probed), cont
+
+    def serve(self, state: RecallState) -> jax.Array:
+        return state.best_node
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TreeIndexState:
+    s_bin: jax.Array
+    x_val: jax.Array        # (B,) f32 — exact (unbinned) running min
+    best_node: jax.Array
+    explore_cost: jax.Array
+    n_probed: jax.Array
+
+
+class TreeIndexStrategy:
+    """Exact dynamic-index policy: stop once X <= sigma(next | s).
+
+    ``sigma`` is the off-grid indifference point recovered by linear
+    interpolation in the line DP (Def. 4.4); comparing the *continuous*
+    running min against it is exactly how the multi-line / tree index
+    policies (§5.1, Thm C.7) rank branches, so this strategy is the
+    single-line member of the tree-table family.
+    """
+
+    online = True
+
+    def __init__(self, tables: LineTables, support: Support | None,
+                 costs=None, lam: float = 1.0):
+        self.tables = tables
+        self.support = support
+        self.lam = float(lam)
+        self.n_nodes = tables.n
+        self.costs = _as_costs(costs, tables.n)
+
+    def init(self, batch: int) -> TreeIndexState:
+        return TreeIndexState(
+            s_bin=jnp.zeros((batch,), jnp.int32),
+            x_val=jnp.full((batch,), jnp.inf, jnp.float32),
+            best_node=jnp.zeros((batch,), jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: TreeIndexState, node, losses, active, aux=None):
+        scaled = self.lam * losses.astype(jnp.float32)
+        b = _bins(self.support, scaled, aux)
+        explore = state.explore_cost + active * self.costs[node]
+        n_probed = state.n_probed + active
+        better = active & (scaled < state.x_val)
+        x_val = jnp.where(better, scaled, state.x_val)
+        best_node = jnp.where(better, node, state.best_node)
+        s_bin = jnp.where(active, b, state.s_bin)
+        sigma_next = self.tables.sigma[node + 1, s_bin]
+        # ties break toward stopping (Def. 4.4 "smallest solution")
+        cont = active & (x_val > sigma_next) & (node + 1 < self.n_nodes)
+        return TreeIndexState(s_bin=s_bin, x_val=x_val, best_node=best_node,
+                              explore_cost=explore, n_probed=n_probed), cont
+
+    def serve(self, state: TreeIndexState) -> jax.Array:
+        return state.best_node
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ThresholdState:
+    last_node: jax.Array
+    best_loss: jax.Array
+    best_node: jax.Array
+    explore_cost: jax.Array
+    n_probed: jax.Array
+
+
+class ThresholdStrategy:
+    """Stop at the first node whose scaled loss clears its threshold."""
+
+    online = True
+
+    def __init__(self, n_nodes: int, thresholds, recall: bool = False,
+                 costs=None, lam: float = 1.0):
+        self.n_nodes = int(n_nodes)
+        self.recall = bool(recall)
+        self.lam = float(lam)
+        self.costs = _as_costs(costs, self.n_nodes)
+        thr = jnp.asarray(thresholds, jnp.float32)
+        self.thresholds = jnp.broadcast_to(thr, (self.n_nodes,))
+
+    def init(self, batch: int) -> ThresholdState:
+        return ThresholdState(
+            last_node=jnp.zeros((batch,), jnp.int32),
+            best_loss=jnp.full((batch,), jnp.inf, jnp.float32),
+            best_node=jnp.zeros((batch,), jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: ThresholdState, node, losses, active, aux=None):
+        scaled = self.lam * losses.astype(jnp.float32)
+        explore = state.explore_cost + active * self.costs[node]
+        n_probed = state.n_probed + active
+        last_node = jnp.where(active, node, state.last_node)
+        better = active & (scaled < state.best_loss)
+        best_loss = jnp.where(better, scaled, state.best_loss)
+        best_node = jnp.where(better, node, state.best_node)
+        hit = scaled <= self.thresholds[node]
+        cont = active & ~hit & (node + 1 < self.n_nodes)
+        return ThresholdState(last_node=last_node, best_loss=best_loss,
+                              best_node=best_node, explore_cost=explore,
+                              n_probed=n_probed), cont
+
+    def serve(self, state: ThresholdState) -> jax.Array:
+        return state.best_node if self.recall else state.last_node
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PatienceState:
+    prev_pred: jax.Array
+    streak: jax.Array
+    last_node: jax.Array
+    explore_cost: jax.Array
+    n_probed: jax.Array
+
+
+class PatienceStrategy:
+    """PABEE: exit after `patience` consecutive ramps agree (aux = preds)."""
+
+    online = True
+
+    def __init__(self, n_nodes: int, patience: int, costs=None,
+                 lam: float = 1.0):
+        self.n_nodes = int(n_nodes)
+        self.patience = int(patience)
+        self.lam = float(lam)
+        self.costs = _as_costs(costs, self.n_nodes)
+
+    def init(self, batch: int) -> PatienceState:
+        return PatienceState(
+            prev_pred=jnp.full((batch,), -1, jnp.int32),
+            streak=jnp.zeros((batch,), jnp.int32),
+            last_node=jnp.zeros((batch,), jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: PatienceState, node, losses, active, aux=None):
+        if aux is None:
+            raise ValueError("PatienceStrategy needs predictions on the "
+                             "aux channel")
+        explore = state.explore_cost + active * self.costs[node]
+        n_probed = state.n_probed + active
+        last_node = jnp.where(active, node, state.last_node)
+        same = (aux == state.prev_pred) & (node > 0)
+        streak = jnp.where(same, state.streak + 1, 0)
+        hit = (streak >= self.patience) & (node > 0)
+        cont = active & ~hit & (node + 1 < self.n_nodes)
+        return PatienceState(prev_pred=aux.astype(jnp.int32), streak=streak,
+                             last_node=last_node, explore_cost=explore,
+                             n_probed=n_probed), cont
+
+    def serve(self, state: PatienceState) -> jax.Array:
+        return state.last_node
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FixedState:
+    served: jax.Array
+    explore_cost: jax.Array
+    n_probed: jax.Array
+
+
+class FixedNodeStrategy:
+    """Static endpoints of the trade-off: always_first / always_last."""
+
+    online = True
+
+    def __init__(self, n_nodes: int, serve_node: int, costs=None,
+                 lam: float = 1.0):
+        self.n_nodes = int(n_nodes)
+        self.serve_node = int(serve_node) % self.n_nodes
+        self.lam = float(lam)
+        self.costs = _as_costs(costs, self.n_nodes)
+
+    def init(self, batch: int) -> FixedState:
+        return FixedState(
+            served=jnp.full((batch,), self.serve_node, jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: FixedState, node, losses, active, aux=None):
+        explore = state.explore_cost + active * self.costs[node]
+        n_probed = state.n_probed + active
+        cont = active & (node < self.serve_node)
+        return FixedState(served=state.served, explore_cost=explore,
+                          n_probed=n_probed), cont
+
+    def serve(self, state: FixedState) -> jax.Array:
+        return state.served

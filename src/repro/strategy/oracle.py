@@ -1,0 +1,82 @@
+"""Offline oracle strategies (hindsight baselines, Def. 3.2 analogues).
+
+These need the whole trace before committing to a stop point, so they are
+``online = False``: `strategy.evaluate` scans them over every node and the
+state tracks the best prefix seen so far, but the serving engine refuses
+them (it cannot un-run segments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OracleStrategy"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OracleState:
+    pmin_val: jax.Array      # (B,) f32 — prefix min of scaled losses
+    pmin_node: jax.Array     # (B,) i32 — prefix argmin (first occurrence)
+    prefix_cost: jax.Array   # (B,) f32 — cumulative inspection cost
+    best_total: jax.Array    # (B,) f32 — best prefix objective so far
+    best_served: jax.Array   # (B,) i32 — served node at the best prefix
+    explore_cost: jax.Array  # (B,) f32 — cost paid at the best prefix
+    n_probed: jax.Array      # (B,) i32 — prefix length at the best prefix
+
+
+class OracleStrategy:
+    """Best stopping prefix under full foresight.
+
+    With ``recall`` the served node is the prefix argmin (offline optimum
+    with recall); without, the policy must serve the node it stops at
+    (``oracle_norecall``).
+    """
+
+    online = False
+
+    def __init__(self, n_nodes: int, costs=None, recall: bool = True,
+                 lam: float = 1.0):
+        from repro.strategy.line import _as_costs
+        self.n_nodes = int(n_nodes)
+        self.recall = bool(recall)
+        self.lam = float(lam)
+        self.costs = _as_costs(costs, self.n_nodes)
+
+    def init(self, batch: int) -> OracleState:
+        return OracleState(
+            pmin_val=jnp.full((batch,), jnp.inf, jnp.float32),
+            pmin_node=jnp.zeros((batch,), jnp.int32),
+            prefix_cost=jnp.zeros((batch,), jnp.float32),
+            best_total=jnp.full((batch,), jnp.inf, jnp.float32),
+            best_served=jnp.zeros((batch,), jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: OracleState, node, losses, active, aux=None):
+        scaled = self.lam * losses.astype(jnp.float32)
+        better = scaled < state.pmin_val
+        pmin_val = jnp.where(better, scaled, state.pmin_val)
+        pmin_node = jnp.where(better, node, state.pmin_node)
+        prefix_cost = state.prefix_cost + self.costs[node]
+        cand = pmin_val if self.recall else scaled
+        total = cand + prefix_cost
+        improve = total < state.best_total    # strict: first argmin, as
+        best_total = jnp.where(improve, total, state.best_total)
+        served_here = pmin_node if self.recall else \
+            jnp.full_like(pmin_node, node)
+        best_served = jnp.where(improve, served_here, state.best_served)
+        explore = jnp.where(improve, prefix_cost, state.explore_cost)
+        n_probed = jnp.where(improve, node + 1, state.n_probed)
+        # hindsight: keep scanning every node regardless of `active`
+        return OracleState(pmin_val=pmin_val, pmin_node=pmin_node,
+                           prefix_cost=prefix_cost, best_total=best_total,
+                           best_served=best_served, explore_cost=explore,
+                           n_probed=n_probed), active
+
+    def serve(self, state: OracleState) -> jax.Array:
+        return state.best_served

@@ -1,0 +1,97 @@
+"""Skip-cascade strategy (§5.2): the transitive-closure NEXT table as a
+streaming `Strategy`.
+
+The solved `SkipTables.nxt` table stores, for every (last-probed node,
+previous bin, running-min X index), either STOP or the next node to probe
+— possibly skipping intermediates.  Streamed over a line of nodes in
+order, a lane simply ignores every node that is not its current target,
+so the same object drives offline `strategy.evaluate` and the segment
+engine (where skipped ramp heads are never consulted; whether the skipped
+*backbone* compute is also saved is encoded in the edge-cost matrix:
+``skip_free`` for inter-model cascades, ``cumulative`` for intra-model
+early exit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.skip_dp import SkipTables
+from repro.core.support import Support
+from repro.strategy.line import _bins
+
+__all__ = ["SkipRecallStrategy"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SkipState:
+    nxt_node: jax.Array     # (B,) i32 — next node to probe (STOP = -1)
+    last: jax.Array         # (B,) i32 — last probed node (-1 = root)
+    s_bin: jax.Array        # (B,) i32
+    x_idx: jax.Array        # (B,) i32
+    best_loss: jax.Array    # (B,) f32
+    best_node: jax.Array    # (B,) i32
+    explore_cost: jax.Array  # (B,) f32 — edge costs paid
+    n_probed: jax.Array      # (B,) i32 — nodes actually probed
+
+
+class SkipRecallStrategy:
+    """Probe the NEXT-table's target node, pay the traversed edge cost,
+    serve the argmin probed node (recall)."""
+
+    online = True
+
+    def __init__(self, tables: SkipTables, support: Support | None,
+                 edge_costs, lam: float = 1.0):
+        self.tables = tables
+        self.support = support
+        self.lam = float(lam)
+        self.n_nodes = tables.n
+        self.edge_costs = jnp.asarray(edge_costs, jnp.float32)
+        if self.edge_costs.shape != (self.n_nodes + 1, self.n_nodes + 1):
+            raise ValueError(f"edge_costs shape {self.edge_costs.shape} != "
+                             f"({self.n_nodes + 1}, {self.n_nodes + 1})")
+
+    def init(self, batch: int) -> SkipState:
+        k = self.tables.k
+        first = self.tables.nxt[0, 0, k + 1]   # root decision, s irrelevant
+        return SkipState(
+            nxt_node=jnp.full((batch,), first, jnp.int32),
+            last=jnp.full((batch,), -1, jnp.int32),
+            s_bin=jnp.zeros((batch,), jnp.int32),
+            x_idx=jnp.full((batch,), k + 1, jnp.int32),
+            best_loss=jnp.full((batch,), jnp.inf, jnp.float32),
+            best_node=jnp.zeros((batch,), jnp.int32),
+            explore_cost=jnp.zeros((batch,), jnp.float32),
+            n_probed=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def observe(self, state: SkipState, node, losses, active, aux=None):
+        probe = active & (state.nxt_node == node)
+        scaled = self.lam * losses.astype(jnp.float32)
+        b = _bins(self.support, scaled, aux)
+        edge = self.edge_costs[state.last + 1, node + 1]
+        explore = state.explore_cost + probe * edge
+        n_probed = state.n_probed + probe
+        better = probe & (scaled < state.best_loss)
+        best_loss = jnp.where(better, scaled, state.best_loss)
+        best_node = jnp.where(better, node, state.best_node)
+        x_idx = jnp.where(probe, jnp.minimum(state.x_idx, b + 1),
+                          state.x_idx)
+        s_bin = jnp.where(probe, b, state.s_bin)
+        last = jnp.where(probe, node, state.last)
+        nxt_new = self.tables.nxt[node + 1, s_bin, x_idx]
+        nxt_node = jnp.where(probe, nxt_new, state.nxt_node)
+        # STOP (-1) and exhausted lines both fail `nxt_node > node`
+        cont = active & (nxt_node > node)
+        return SkipState(nxt_node=nxt_node, last=last, s_bin=s_bin,
+                         x_idx=x_idx, best_loss=best_loss,
+                         best_node=best_node, explore_cost=explore,
+                         n_probed=n_probed), cont
+
+    def serve(self, state: SkipState) -> jax.Array:
+        return state.best_node

@@ -7,12 +7,34 @@ framework-free; arrays are stored as (dtype, shape, raw bytes).
 from __future__ import annotations
 
 import os
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # optional dep — fall back to stdlib zlib
+    zstandard = None
+
+_ZLIB_MAGIC = b"ZLB0"        # our zlib frames; zstd frames self-identify
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return _ZLIB_MAGIC + zlib.compress(raw, 6)
+
+
+def _decompress(buf: bytes) -> bytes:
+    if buf[:4] == _ZLIB_MAGIC:
+        return zlib.decompress(buf[4:])
+    if zstandard is None:
+        raise ImportError("checkpoint was written with zstd but the "
+                          "zstandard module is not installed")
+    return zstandard.ZstdDecompressor().decompress(buf)
 
 __all__ = ["save", "load", "latest_step"]
 
@@ -61,13 +83,13 @@ def save(path: str, tree, step: int | None = None) -> str:
     }
     raw = msgpack.packb(payload, use_bin_type=True)
     with open(path, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+        f.write(_compress(raw))
     return path
 
 
 def load(path: str):
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     flat = {}
     for k, meta in payload["arrays"].items():

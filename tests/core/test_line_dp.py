@@ -3,7 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional — property tests skip without it
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.core import line_dp, policies
 from repro.core.brute_force import bf_line

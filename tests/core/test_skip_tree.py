@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional — property tests skip without it
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 import jax.numpy as jnp
 

@@ -4,7 +4,11 @@ checkpoint roundtrips on arbitrary pytrees."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional — property tests skip without it
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.models.quant import dequantize_rows, quantize_rows
 

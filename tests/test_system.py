@@ -1,18 +1,18 @@
 """End-to-end behaviour tests for the full system: training converges,
-serving engine applies the T-Tamer policy coherently, checkpoints round-
-trip, and the engine's decisions match the reference policy simulator."""
+serving engine applies registry strategies coherently, checkpoints round-
+trip, and the engine's decisions match the offline strategy evaluator."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import strategy
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, batches
-from repro.launch.serve import calibrate
 from repro.models import model as M
 from repro.models.param import materialize
-from repro.serving.engine import Engine, RecallIndexPolicy, ThresholdPolicy
+from repro.serving.engine import Classifier, Engine
 from repro.training import checkpoint
 from repro.training.loop import train
 from repro.training.optimizer import AdamWConfig
@@ -27,6 +27,13 @@ def trained():
                               easy_frac=0.8))
     params, _, hist = train(cfg, opt, params, data, steps=60, log_every=60)
     return cfg, params, hist
+
+
+@pytest.fixture(scope="module")
+def cascade(trained):
+    cfg, params, _ = trained
+    return strategy.Cascade.calibrate(params, cfg, jax.random.PRNGKey(1),
+                                      lam=0.5, t=64, seq=32)
 
 
 def test_training_reduces_loss(trained):
@@ -68,77 +75,111 @@ def test_checkpoint_roundtrip(trained, tmp_path):
     assert checkpoint.latest_step(str(tmp_path)) == path
 
 
-def test_engine_generates_with_all_policies(trained):
+def test_engine_generates_with_all_strategies(trained, cascade):
     cfg, params, _ = trained
-    tables, support = calibrate(params, cfg, jax.random.PRNGKey(1),
-                                lam=0.5, t=64, seq=32)
     prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(2),
                                             (4, 16), 0, cfg.vocab)}
     n_nodes = cfg.n_ramps + 1
     outs = {}
-    for name, pol in [("recall", RecallIndexPolicy(tables, support, 0.5)),
-                      ("thr", ThresholdPolicy(n_nodes, 0.5)),
-                      ("full", ThresholdPolicy(n_nodes, -1.0))]:
-        stats = Engine(params, cfg, pol, cache_len=48,
+    for name, strat in [
+        ("recall", strategy.make("recall_index", cascade)),
+        ("tree", strategy.make("tree_index", cascade)),
+        ("skip", strategy.make("skip_recall", cascade, mode="cumulative")),
+        ("thr", strategy.make("norecall_threshold", cascade,
+                              threshold=0.5, lam=1.0)),
+        ("full", strategy.make("always_last", cascade)),
+    ]:
+        stats = Engine(params, cfg, strat, cache_len=48,
                        jit=False).generate(prompts, 4)
         assert stats.tokens.shape == (4, 4)
         assert (stats.tokens >= 0).all() and (stats.tokens < cfg.vocab).all()
         assert stats.served_nodes.max() < n_nodes
         outs[name] = stats
-    # full depth must run every segment; policies can only run fewer
+    # full depth must run every segment; strategies can only run fewer
     assert outs["full"].segments_run_batch == 4 * len(cfg.segments)
-    assert outs["recall"].segments_run_batch <= \
-        outs["full"].segments_run_batch
+    for name in ("recall", "tree", "skip", "thr"):
+        assert outs[name].segments_run_batch <= \
+            outs["full"].segments_run_batch
 
 
-def test_engine_decisions_match_reference_policy(trained):
-    """The engine's per-token exit decisions must reproduce
-    core.policies.recall_index on the same loss sequences."""
+def test_engine_rejects_offline_strategies(trained, cascade):
     cfg, params, _ = trained
-    from repro.core import policies
-    from repro.core.support import quantize
-    tables, support = calibrate(params, cfg, jax.random.PRNGKey(1),
-                                lam=0.5, t=64, seq=32)
+    with pytest.raises(ValueError, match="online"):
+        Engine(params, cfg, strategy.make("oracle", cascade), cache_len=48)
+
+
+def test_engine_decisions_match_offline_evaluator(trained, cascade):
+    """The engine's per-token exit decisions must reproduce
+    strategy.evaluate on the same loss sequences."""
+    cfg, params, _ = trained
     prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(3),
                                             (6, 16), 0, cfg.vocab)}
     _, caches, _, pos = M.prefill(params, cfg, prompts, 48)
     tok = jnp.zeros((6,), jnp.int32)
     _, _, node_losses = M.decode_step(params, cfg, {"tokens": tok},
                                       caches, pos)
-    lam_losses = 0.5 * node_losses
-    bins = quantize(support, lam_losses)
-    ref = policies.recall_index(tables, lam_losses, bins,
-                                jnp.full((tables.n,), 0.25, jnp.float32))
-    # engine-style replay of the same losses through the policy object
-    pol = RecallIndexPolicy(tables, support, 0.5)
-    pol.reset(6)
-    active = jnp.ones((6,), bool)
-    probed = jnp.ones((6,), jnp.int32)
-    for node in range(tables.n):
-        active = pol.observe(node, node_losses[:, node], active)
-        probed = probed + (active & (node + 1 < tables.n)).astype(jnp.int32)
-    np.testing.assert_array_equal(np.asarray(pol.served_node()),
-                                  np.asarray(ref.served_node))
-    np.testing.assert_array_equal(np.asarray(probed),
-                                  np.asarray(ref.n_probed))
+    for name in ("recall_index", "tree_index", "skip_recall"):
+        strat = strategy.make(name, cascade)
+        # engine-style streaming replay of the same losses
+        state = strat.init(6)
+        active = jnp.ones((6,), bool)
+        for node in range(strat.n_nodes):
+            state, active = strat.observe(state, node,
+                                          node_losses[:, node], active)
+        ref = strategy.evaluate(strat, node_losses)
+        np.testing.assert_array_equal(np.asarray(strat.serve(state)),
+                                      np.asarray(ref.served_node),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(state.n_probed),
+                                      np.asarray(ref.n_probed),
+                                      err_msg=name)
 
 
-def test_classifier_mode(trained):
+def test_classifier_mode(trained, cascade):
     """Classification-mode serving (the paper's §6 setting): recall
     classifier agrees with full-depth on most inputs while skipping
-    segments; policies produce valid labels."""
-    from repro.serving.engine import Classifier
+    segments; strategies produce valid labels."""
     cfg, params, _ = trained
-    tables, support = calibrate(params, cfg, jax.random.PRNGKey(4),
-                                lam=0.5, t=64, seq=32)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5),
                                           (16, 24), 0, cfg.vocab)}
     full = Classifier(params, cfg,
-                      ThresholdPolicy(cfg.n_ramps + 1, -1.0)).classify(batch)
+                      strategy.make("always_last", cascade)).classify(batch)
     rec = Classifier(params, cfg,
-                     RecallIndexPolicy(tables, support, 0.5)).classify(batch)
+                     strategy.make("recall_index", cascade)).classify(batch)
     assert full["segments_run_batch"] == len(cfg.segments)
     assert rec["segments_run_batch"] <= full["segments_run_batch"]
     assert rec["labels"].shape == (16,)
     assert (rec["labels"] >= 0).all() and (rec["labels"] < cfg.vocab).all()
     assert (rec["served_node"] <= cfg.n_ramps).all()
+
+
+def test_classifier_early_exit_logits_not_overwritten(trained):
+    """Regression: with a no-recall strategy, a lane that exits at ramp i
+    must be served ramp i's logits — deeper ramps / the head must not
+    overwrite them (the old `take = ~active` masking did exactly that)."""
+    cfg, params, _ = trained
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(6),
+                                          (24, 24), 0, cfg.vocab)}
+    casc = strategy.Cascade.uniform(cfg.n_ramps + 1)
+    # threshold at the median node-0 loss => some lanes exit at node 0,
+    # some survive deeper (so deeper segments DO run)
+    _, _, node_losses, _ = M.prefill(params, cfg, batch, cache_len=32)
+    thr = float(np.median(np.asarray(node_losses)[:, 0]))
+    out = Classifier(params, cfg, strategy.make(
+        "norecall_threshold", casc, threshold=thr)).classify(batch)
+    ref = Classifier(params, cfg, strategy.make(
+        "always_first", casc)).classify(batch)
+    exited_first = out["served_node"] == 0
+    assert exited_first.any(), "no lane exited at node 0 — bad threshold"
+    assert (~exited_first).any(), "every lane exited — bad threshold"
+    np.testing.assert_array_equal(out["labels"][exited_first],
+                                  ref["labels"][exited_first])
+    # and a lane that exits exactly at the final ramp keeps that ramp's
+    # label even though the head still runs for surviving lanes
+    last_ramp = cfg.n_ramps - 1
+    at_last_ramp = out["served_node"] == last_ramp
+    if at_last_ramp.any():
+        ramp_ref = Classifier(params, cfg, strategy.FixedNodeStrategy(
+            cfg.n_ramps + 1, last_ramp)).classify(batch)
+        np.testing.assert_array_equal(out["labels"][at_last_ramp],
+                                      ramp_ref["labels"][at_last_ramp])
