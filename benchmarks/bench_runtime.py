@@ -1,0 +1,211 @@
+"""Continuous-batching runtime benchmarks (DESIGN.md §7):
+
+  1. Arrival-rate x strategy sweep in SIMULATION mode — the same
+     scheduler/queue/metrics stack as real serving, with tokens replayed
+     from synthetic early-exit traces and a virtual clock pricing each
+     step at per-lane probe cost.  Shows the T-Tamer recall strategies
+     converting probe savings into GOODPUT (tokens/s within the TTFT
+     SLO) as load approaches the always_last capacity wall.
+
+  2. Lane recycling vs the fixed-batch discipline, twice: in sim units
+     (batch-cost model, heterogeneous token budgets — stragglers idle
+     the whole width), and on the REAL smoke model, continuous batching
+     through `serving.runtime` vs batched `Engine.generate` at equal
+     batch width (the fixed batch pads every request to its batch max).
+
+Run standalone for the CI smoke + JSON artifact:
+
+  python -m benchmarks.bench_runtime --smoke --out runtime-metrics.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro import strategy
+from repro.core import traces
+from repro.serving import runtime as rt
+from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+# virtual cost model: one node-probe on one lane costs SEG_TIME/lane,
+# plus a fixed per-step dispatch overhead (both in sim seconds)
+SEG_TIME = 0.01
+OVERHEAD = 0.002
+SLO = 0.5
+LANES = 4
+N_NODES = 6
+
+
+def _sim_setup(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    losses, _, flops = traces.ee_like_traces(rng, 6_000, N_NODES,
+                                             overthink_prob=0.25)
+    lam = 0.6
+    casc = strategy.Cascade.from_traces(losses[:3_000], (1 - lam) * flops,
+                                        k=16, lam=lam)
+    return casc, losses[3_000:]
+
+
+def _serve_sim(casc, bank_traces, requests, *, cost="lane",
+               static_batching=False, lanes=LANES):
+    bank, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                 ("recall_index", None))
+    stepper = rt.SimStepper(bank, bank_traces, n_lanes=lanes,
+                            seg_time=SEG_TIME, overhead=OVERHEAD,
+                            cost=cost)
+    server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of, slo=SLO,
+                       static_batching=static_batching)
+    return server.serve(requests).summary(slo=SLO)
+
+
+def sweep_rate_strategy(*, rates, names, duration, seed=0):
+    """Arrival rate x strategy -> goodput/throughput rows (sim mode)."""
+    casc, bank_traces = _sim_setup(seed)
+    rows = []
+    for rate in rates:
+        for name in names:
+            spec = WorkloadSpec(rate=rate, duration=duration,
+                                prompt_len=8, max_tokens=(4, 32),
+                                seed=seed + 17, strategy=name)
+            requests = make_workload("poisson", spec)
+            s = _serve_sim(casc, bank_traces, requests)
+            rows.append({
+                "name": f"runtime_sim_{name}_r{rate:g}",
+                "us_per_call": s["duration"] / max(s["tokens"], 1) * 1e6,
+                "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
+                            f"thru={s['throughput_tok_s']:.1f}tok_s "
+                            f"slo_att={100 * s['slo_attainment']:.0f}% "
+                            f"ttft_p95={s['ttft']['p95']:.2f}s "
+                            f"seg_saved_lane="
+                            f"{100 * s['segments_saved_lane']:.0f}%"),
+                "summary": s, "rate": rate, "strategy": name,
+            })
+    return rows
+
+
+def recycling_vs_static_sim(*, n_requests, seed=0):
+    """Equal-width continuous vs fixed-batch admission, sim batch-cost
+    model (what the masked batch engine pays): heterogeneous budgets
+    make stragglers idle the width under static batching."""
+    casc, bank_traces = _sim_setup(seed)
+    spec = WorkloadSpec(rate=1e9, duration=n_requests / 1e9 + 1e-6,
+                        prompt_len=8, max_tokens=(4, 32), seed=seed + 29,
+                        strategy="recall_index")
+    requests = make_workload("poisson", spec)[:n_requests]
+    rows = []
+    for label, static in (("continuous", False), ("static", True)):
+        s = _serve_sim(casc, bank_traces, requests, cost="batch",
+                       static_batching=static)
+        rows.append({
+            "name": f"runtime_sim_recycle_{label}",
+            "us_per_call": s["duration"] / max(s["tokens"], 1) * 1e6,
+            "derived": (f"thru={s['throughput_tok_s']:.1f}tok_s "
+                        f"duration={s['duration']:.1f}s "
+                        f"tokens={s['tokens']}"),
+            "summary": s,
+        })
+    return rows
+
+
+def recycling_vs_engine_real(*, n_requests=12, lanes=LANES, seed=0):
+    """REAL smoke model: continuous batching vs fixed-batch
+    `Engine.generate` at equal batch width.  The fixed batch must decode
+    every request to the batch max, so useful-token throughput drops."""
+    import jax
+    import time
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models.param import materialize
+    from repro.serving.engine import Engine
+
+    cfg = get_config("paper-ee-100m", smoke=True)
+    key = jax.random.PRNGKey(seed)
+    params = materialize(M.model_defs(cfg), key)
+    casc = strategy.Cascade.calibrate(params, cfg, key, 0.5, k=12,
+                                      t=128, seq=16)
+    prompt_len, cache_len = 16, 48
+    spec = WorkloadSpec(rate=1e9, duration=n_requests / 1e9 + 1e-6,
+                        prompt_len=prompt_len, vocab=cfg.vocab,
+                        max_tokens=(2, 12), seed=seed,
+                        strategy="recall_index")
+    requests = make_workload("poisson", spec)[:n_requests]
+
+    mk = rt.cascade_factory(casc)
+    # continuous batching (compile off the clock via server warmup)
+    bank, sid_of = rt.build_bank(requests, mk, ("recall_index", None))
+    stepper = rt.EngineStepper(params, cfg, bank, n_lanes=lanes,
+                               cache_len=cache_len, prompt_len=prompt_len)
+    server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of, slo=SLO)
+    s = server.serve(requests).summary(slo=SLO)
+
+    # fixed-batch baseline: batches of `lanes`, each decoded to its max
+    engine = Engine(params, cfg, mk("recall_index", None),
+                    cache_len=cache_len)
+    warm = {"tokens": np.stack([r.prompt for r in requests[:lanes]])}
+    engine.generate(warm, 2)  # compile off the clock
+    useful = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(requests), lanes):
+        batch = requests[i:i + lanes]
+        prompts = {"tokens": np.stack(
+            [batch[j % len(batch)].prompt for j in range(lanes)])}
+        engine.generate(prompts, max(r.max_tokens for r in batch))
+        useful += sum(r.max_tokens for r in batch)
+    dt = max(time.perf_counter() - t0, 1e-9)
+
+    return [
+        {"name": "runtime_engine_continuous",
+         "us_per_call": 1e6 / max(s["throughput_tok_s"], 1e-9),
+         "derived": (f"thru={s['throughput_tok_s']:.1f}tok_s "
+                     f"tokens={s['tokens']} "
+                     f"seg_saved_batch="
+                     f"{100 * s['segments_saved_batch']:.0f}%"),
+         "summary": s},
+        {"name": "runtime_engine_fixed_batch",
+         "us_per_call": 1e6 / (useful / dt),
+         "derived": (f"thru={useful / dt:.1f}tok_s tokens={useful} "
+                     f"(each batch padded to its max budget)"),
+         "summary": {"throughput_tok_s": useful / dt, "tokens": useful,
+                     "duration": dt}},
+    ]
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        rows = sweep_rate_strategy(rates=(2.0, 6.0),
+                                   names=("recall_index", "always_last"),
+                                   duration=15.0)
+        rows += recycling_vs_static_sim(n_requests=24)
+    else:
+        rows = sweep_rate_strategy(
+            rates=(2.0, 4.0, 6.0),
+            names=("recall_index", "tree_index", "always_last"),
+            duration=30.0)
+        rows += recycling_vs_static_sim(n_requests=48)
+        rows += recycling_vs_engine_real()
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="sim-only subset (CI)")
+    ap.add_argument("--out", default=None,
+                    help="write the full metrics JSON here")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},"
+              f"{str(row['derived']).replace(',', ';')}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=float)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ MODULES = [
     "pareto",          # Figs. 4-5 accuracy-latency frontiers
     "dag",             # §5 skip/tree value + optimality-gap
     "serving",         # engine-level EE savings (§6 serving analogue)
+    "runtime",         # continuous-batching goodput / lane recycling
     "roofline",        # EXPERIMENTS.md §Roofline (reads dryrun JSONs)
 ]
 

@@ -5,11 +5,11 @@ from repro.core.support import Support, build_support, quantize
 from repro.core.markov import MarkovChain, estimate_chain, estimate_from_losses
 from repro.core.line_dp import LineTables, solve_line
 from repro.core.skip_dp import SkipTables, solve_skip
-from repro.core import policies, tree_dp, pareto, traces, impossibility
+from repro.core import tree_dp, pareto, traces, impossibility
 
 __all__ = [
     "Support", "build_support", "quantize",
     "MarkovChain", "estimate_chain", "estimate_from_losses",
     "LineTables", "solve_line", "SkipTables", "solve_skip",
-    "policies", "tree_dp", "pareto", "traces", "impossibility",
+    "tree_dp", "pareto", "traces", "impossibility",
 ]

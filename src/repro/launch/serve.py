@@ -1,14 +1,21 @@
 """Serving launcher: loads (or initializes) a checkpoint, calibrates a
 `Cascade` from a calibration batch, builds the requested strategy from
-the registry, and serves batched greedy generation with per-token early
-exit through the segment engine.
+the registry, and serves through the segment engine — either one batched
+generation (default) or a continuous-batching traffic session
+(``--server``):
 
   PYTHONPATH=src python -m repro.launch.serve --arch paper-ee-100m \
       --smoke --policy recall_index --lam 0.5 --tokens 32
 
+  PYTHONPATH=src python -m repro.launch.serve --arch paper-ee-100m \
+      --smoke --server --rate 8 --duration 5 --policy recall_index
+
 ``--policy`` accepts any online name from ``repro.strategy.available()``
 — including the table-backed ``skip_recall`` and ``tree_index``
-strategies (§5) that share the line calibration.
+strategies (§5) that share the line calibration.  ``--server`` replays a
+seeded open-loop workload (``--workload poisson|bursty|diurnal``) into
+the lane scheduler and reports throughput, latency percentiles, goodput
+under ``--slo-ms``, and segments saved (repro.serving.runtime).
 """
 
 from __future__ import annotations
@@ -37,29 +44,127 @@ ALIASES = {
 ONLINE = strategy.available(online_only=True)
 
 
-def calibrate(params, cfg, key, lam: float, k: int = 24, t: int = 512,
-              seq: int = 64, segment_costs=None):
-    """DEPRECATED shim — use `strategy.Cascade.calibrate`.
-
-    Returns the legacy (tables, support) pair for one release.
-    """
-    casc = strategy.Cascade.calibrate(params, cfg, key, lam, k=k, t=t,
-                                      seq=seq, segment_costs=segment_costs)
-    return casc.solve_line(), casc.support
-
-
 def build_strategy(name: str, casc: strategy.Cascade, *, threshold: float,
-                   patience: int):
-    """Registry dispatch with the per-family CLI knobs applied."""
-    if name in ("norecall_threshold", "recall_threshold"):
-        # thresholds are compared against raw 1-confidence in serving
+                   patience: int, lam: float | None = None):
+    """Registry dispatch with the per-family CLI knobs applied.
+
+    ``lam`` is the per-request override the runtime routes through
+    `Request.lam`; threshold/patience strategies compare raw
+    1-confidence (their lam is pinned to 1.0), so a per-request lam
+    there is a contradiction we refuse rather than silently drop.
+    """
+    if name in ("norecall_threshold", "recall_threshold",
+                "norecall_patience"):
+        if lam is not None:
+            raise ValueError(
+                f"{name} serves raw confidences (lam fixed at 1.0); "
+                "per-request lam is not supported for this family — "
+                "tune --threshold/--patience instead")
+        if name == "norecall_patience":
+            return strategy.make(name, casc, patience=patience, lam=1.0)
         return strategy.make(name, casc, threshold=threshold, lam=1.0)
-    if name == "norecall_patience":
-        return strategy.make(name, casc, patience=patience, lam=1.0)
     if name == "skip_recall":
         # intra-model early exit: skipped segments still pay backbone
+        if lam is not None:
+            return strategy.make(name, casc, mode="cumulative", lam=lam)
         return strategy.make(name, casc, mode="cumulative")
+    if lam is not None:
+        return strategy.make(name, casc, lam=lam)
     return strategy.make(name, casc)
+
+
+def _print_segments_saved(seg_batch: int, seg_policy: int, *, steps: int,
+                          n_seg: int, lane_steps: int) -> None:
+    """One consistent line for both serving modes: each saving is a
+    percentage of ITS OWN full-depth reference — batch-level counts
+    segment launches (``steps * n_seg``), lane-level counts per-lane
+    probes (``lane_steps * n_seg``)."""
+    save_b = 100.0 * (1.0 - seg_batch / max(steps * n_seg, 1))
+    save_l = 100.0 * (1.0 - seg_policy / max(lane_steps * n_seg, 1))
+    print(f"segments saved: batch {save_b:.0f}% "
+          f"({seg_batch}/{steps * n_seg} launches) / "
+          f"lane {save_l:.0f}% ({seg_policy}/{lane_steps * n_seg} "
+          f"per-lane probes)")
+
+
+def _serve_batch(args, cfg, params, strat) -> None:
+    """The original one-shot path: one fixed batch, prefill to done."""
+    engine = Engine(params, cfg, strat, cache_len=args.cache_len)
+    key = jax.random.PRNGKey(args.seed)
+    prompts = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab)}
+    t0 = time.time()
+    stats = engine.generate(prompts, args.tokens)
+    dt = time.time() - t0
+    n_nodes = cfg.n_ramps + 1
+    print(f"generated {args.batch}x{args.tokens} tokens in {dt:.2f}s "
+          f"({args.batch * args.tokens / dt:.1f} tok/s)")
+    _print_segments_saved(stats.segments_run_batch,
+                          stats.segments_run_policy,
+                          steps=args.tokens, n_seg=len(cfg.segments),
+                          lane_steps=args.tokens * args.batch)
+    print(f"served-node histogram: "
+          f"{np.bincount(stats.served_nodes.ravel(), minlength=n_nodes)}")
+
+
+def _serve_traffic(args, cfg, params, casc) -> None:
+    """--server: continuous batching over an open-loop workload."""
+    from repro.serving import runtime as rt
+    from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+    name = ALIASES.get(args.policy, args.policy)
+    lo = max(1, min(4, args.tokens))
+    spec = WorkloadSpec(rate=args.rate, duration=args.duration,
+                        prompt_len=args.prompt_len, vocab=cfg.vocab,
+                        max_tokens=(lo, args.tokens), seed=args.seed,
+                        strategy=name)
+    requests = make_workload(args.workload, spec)
+    if not requests:
+        print("workload produced no arrivals; raise --rate or --duration")
+        return
+
+    def make_strategy(sname, lam):
+        return build_strategy(sname, casc, threshold=args.threshold,
+                              patience=args.patience, lam=lam)
+
+    bank, sid_of = rt.build_bank(requests, make_strategy, (name, None))
+    stepper = rt.EngineStepper(params, cfg, bank, n_lanes=args.lanes,
+                               cache_len=args.cache_len,
+                               prompt_len=args.prompt_len)
+    slo = args.slo_ms / 1e3
+    server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
+                       order=args.order, slo=slo, eos=args.eos)
+    print(f"serving {len(requests)} {args.workload} requests "
+          f"(rate {args.rate}/s x {args.duration}s) on {args.lanes} lanes, "
+          f"policy {name}, SLO ttft<={args.slo_ms:.0f}ms ...")
+    metrics = server.serve(requests)
+    s = metrics.summary(slo=slo)
+
+    def ms(v):
+        return "n/a" if v is None else f"{1e3 * v:.0f}ms"
+
+    print(f"completed {s['completed']}/{s['requests']} requests, "
+          f"{s['tokens']} tokens in {s['duration']:.2f}s")
+    print(f"throughput: {s['throughput_tok_s']:.1f} tok/s "
+          f"({s['throughput_req_s']:.2f} req/s)")
+    print(f"latency: ttft p50 {ms(s['ttft']['p50'])} "
+          f"p95 {ms(s['ttft']['p95'])} p99 {ms(s['ttft']['p99'])}; "
+          f"token p50 {ms(s['token_latency']['p50'])} "
+          f"p95 {ms(s['token_latency']['p95'])} "
+          f"p99 {ms(s['token_latency']['p99'])}")
+    att = s["slo_attainment"]
+    print(f"goodput (ttft<={args.slo_ms:.0f}ms): "
+          f"{s['goodput_tok_s']:.1f} tok/s "
+          f"(attainment {100 * att:.0f}%)" if att is not None else
+          "goodput: n/a")
+    _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
+                          steps=metrics.steps, n_seg=len(cfg.segments),
+                          lane_steps=metrics.lane_steps)
+    if args.json:
+        metrics.to_json(args.json, slo=slo,
+                        extra={"policy": name, "rate": args.rate,
+                               "lanes": args.lanes})
+        print(f"wrote metrics JSON to {args.json}")
 
 
 def main() -> None:
@@ -76,7 +181,30 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    # --server traffic mode (repro.serving.runtime)
+    ap.add_argument("--server", action="store_true",
+                    help="serve an open-loop workload with continuous "
+                         "batching instead of one fixed batch")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="mean arrivals/sec")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="arrival window in seconds")
+    ap.add_argument("--slo-ms", type=float, default=1000.0,
+                    help="TTFT SLO for goodput accounting")
+    ap.add_argument("--lanes", type=int, default=None,
+                    help="lane count (default: --batch)")
+    ap.add_argument("--workload", default="poisson",
+                    choices=("poisson", "bursty", "diurnal"))
+    ap.add_argument("--order", default="fifo", choices=("fifo", "edf"))
+    ap.add_argument("--eos", type=int, default=None,
+                    help="token id that ends a stream early (lane is "
+                         "recycled immediately)")
+    ap.add_argument("--json", default=None,
+                    help="write runtime metrics JSON here")
     args = ap.parse_args()
+    if args.lanes is None:
+        args.lanes = args.batch
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(0)
@@ -105,22 +233,10 @@ def main() -> None:
               f"online-optimal value {float(tables.value):.4f}")
     print(f"strategy: {name} (registry: {', '.join(strategy.available())})")
 
-    engine = Engine(params, cfg, strat, cache_len=args.cache_len)
-    prompts = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab)}
-    t0 = time.time()
-    stats = engine.generate(prompts, args.tokens)
-    dt = time.time() - t0
-    n_seg = len(cfg.segments)
-    n_nodes = cfg.n_ramps + 1
-    print(f"generated {args.batch}x{args.tokens} tokens in {dt:.2f}s "
-          f"({args.batch * args.tokens / dt:.1f} tok/s)")
-    print(f"segments: batch-run {stats.segments_run_batch} / "
-          f"full {args.tokens * n_seg} per lane-step; "
-          f"lane-level saved "
-          f"{100 * (1 - stats.segments_run_policy / stats.segments_full):.0f}%")
-    print(f"served-node histogram: "
-          f"{np.bincount(stats.served_nodes.ravel(), minlength=n_nodes)}")
+    if args.server:
+        _serve_traffic(args, cfg, params, casc)
+    else:
+        _serve_batch(args, cfg, params, strat)
 
 
 if __name__ == "__main__":

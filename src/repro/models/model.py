@@ -30,7 +30,8 @@ from repro.models.param import ParamDef
 from repro.sharding.ctx import constrain_batch
 
 __all__ = ["model_defs", "forward_train", "prefill", "decode_step",
-           "decode_segment", "cache_specs", "unembed", "decode_unroll"]
+           "decode_segment", "cache_specs", "unembed", "decode_unroll",
+           "ramp_readout"]
 
 # Decode-layer execution (perf hillclimb lever, EXPERIMENTS.md §Perf):
 # scan (default) keeps HLO small; unrolled decode removes the per-step
@@ -89,6 +90,29 @@ def unembed(params: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
     if cfg.tie_embeddings:
         return h @ params["embed"]["table"].T.astype(h.dtype)
     return h @ params["unembed"].astype(h.dtype)
+
+
+def ramp_readout(params, cfg: ModelConfig, h: jax.Array,
+                 segment: int | None = None):
+    """The shared ramp / final-head readout (DESIGN.md §2): per-node
+    RMSNorm, tied unembedding, and the T-Tamer loss proxy
+    ``ell = 1 - max softmax prob`` (paper §6 / App. D.2).
+
+    ``h`` is the RAW residual-stream hidden at the readout point, shape
+    ``(..., D)``; ``segment`` selects that segment's ramp norm (``None``
+    -> the final head norm).  Returns ``(logits (..., V), ell (...))``.
+    One implementation feeds training (ramp CE), calibration (prefill
+    node losses), and both serving engines, so the calibrated tables see
+    exactly the quantity the online loop measures.
+    """
+    if segment is None:
+        norm = params["final_norm"]
+    else:
+        norm = params["segments"][segment]["ramp"]["norm"]
+    hn = rms_norm(norm, h, cfg.norm_eps)
+    logits = unembed(params, cfg, hn)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return logits, 1.0 - p.max(axis=-1)
 
 
 def _embed_inputs(params, cfg: ModelConfig, batch: dict):
@@ -154,8 +178,8 @@ def _run_segments(params, cfg: ModelConfig, x, positions, *,
         x = constrain_batch(x)  # re-anchor residual-stream sharding
         aux = _merge_aux(aux, aux_stack)
         if seg.ramp:
-            rp = params["segments"][si]["ramp"]
-            ramp_hiddens.append(rms_norm(rp["norm"], x, cfg.norm_eps))
+            # RAW hidden; `ramp_readout` applies the per-ramp norm + head
+            ramp_hiddens.append((si, x))
     return x, ramp_hiddens, caches, aux
 
 
@@ -182,14 +206,13 @@ def forward_train(params, cfg: ModelConfig, batch: dict, *,
     final, ramps, _, aux = _run_segments(
         params, cfg, x, positions, want_cache=False, cache_len=None,
         remat=remat, use_flash=use_flash, use_ssd_kernel=use_ssd_kernel)
-    final = rms_norm(params["final_norm"], final, cfg.norm_eps)
     labels = batch["labels"]
-    loss = _xent(unembed(params, cfg, final), labels)
+    loss = _xent(ramp_readout(params, cfg, final)[0], labels)
     metrics = {"ce_final": loss}
     if ramps:
         ramp_ce = 0.0
-        for ri, h in enumerate(ramps):
-            ce = _xent(unembed(params, cfg, h), labels)
+        for ri, (si, h) in enumerate(ramps):
+            ce = _xent(ramp_readout(params, cfg, h, segment=si)[0], labels)
             metrics[f"ce_ramp{ri}"] = ce
             ramp_ce += ce
         loss = loss + ramp_loss_weight * ramp_ce / len(ramps)
@@ -198,14 +221,6 @@ def forward_train(params, cfg: ModelConfig, batch: dict, *,
         loss = loss + v
     metrics["loss"] = loss
     return loss, metrics
-
-
-def _conf_last(params, cfg, h_last: jax.Array) -> jax.Array:
-    """1 - max softmax prob at the last position: the T-Tamer loss proxy
-    ell(x) = 1 - confidence (paper §6 / App. D.2).  h_last: (B, D)."""
-    logits = unembed(params, cfg, h_last[:, None, :])[:, 0]
-    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    return 1.0 - p.max(axis=-1)
 
 
 def prefill(params, cfg: ModelConfig, batch: dict, cache_len: int, *,
@@ -217,11 +232,10 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache_len: int, *,
     final, ramps, caches, _ = _run_segments(
         params, cfg, x, positions, want_cache=True, cache_len=cache_len,
         remat=False, use_flash=use_flash, use_ssd_kernel=use_ssd_kernel)
-    final = rms_norm(params["final_norm"], final, cfg.norm_eps)
-    logits = unembed(params, cfg, final[:, -1:, :])[:, 0]
-    node_losses = [_conf_last(params, cfg, h[:, -1, :]) for h in ramps]
-    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    node_losses.append(1.0 - p.max(axis=-1))
+    node_losses = [ramp_readout(params, cfg, h[:, -1, :], segment=si)[1]
+                   for si, h in ramps]
+    logits, final_loss = ramp_readout(params, cfg, final[:, -1, :])
+    node_losses.append(final_loss)
     next_pos = positions[:, -1] + 1
     return logits, caches, jnp.stack(node_losses, axis=1), next_pos
 
@@ -232,8 +246,10 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache_len: int, *,
 
 def decode_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
                    cache_seg, pos: jax.Array):
-    """Run segment `si` for one token.  x (B,1,D) -> (x', new_cache, loss
-    proxy (B,) or None if the segment has no ramp)."""
+    """Run segment `si` for one token.  x (B,1,D) -> (x', new_cache,
+    readout) where readout is None for ramp-less segments and otherwise
+    the full `ramp_readout` pair (logits (B,V), loss proxy (B,)) — the
+    serving engine consumes both, so the head matmul runs exactly once."""
     seg = cfg.segments[si]
     p_seg = params["segments"][si]["blocks"]
 
@@ -254,12 +270,10 @@ def decode_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
             return y, new_cache
 
         x, new_cache = jax.lax.scan(body, x, (p_seg, cache_seg))
-    conf = None
+    readout = None
     if seg.ramp:
-        rp = params["segments"][si]["ramp"]
-        h = rms_norm(rp["norm"], x[:, 0, :], cfg.norm_eps)
-        conf = _conf_last(params, cfg, h)
-    return x, new_cache, conf
+        readout = ramp_readout(params, cfg, x[:, 0, :], segment=si)
+    return x, new_cache, readout
 
 
 def decode_step(params, cfg: ModelConfig, batch: dict, caches, pos):
@@ -277,14 +291,12 @@ def decode_step(params, cfg: ModelConfig, batch: dict, caches, pos):
     new_caches = []
     node_losses = []
     for si in range(len(cfg.segments)):
-        x, nc, conf = decode_segment(params, cfg, si, x, caches[si], pos)
+        x, nc, ro = decode_segment(params, cfg, si, x, caches[si], pos)
         new_caches.append(nc)
-        if conf is not None:
-            node_losses.append(conf)
-    final = rms_norm(params["final_norm"], x, cfg.norm_eps)
-    logits = unembed(params, cfg, final)[:, 0]
-    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    node_losses.append(1.0 - p.max(axis=-1))
+        if ro is not None:
+            node_losses.append(ro[1])
+    logits, final_loss = ramp_readout(params, cfg, x[:, 0, :])
+    node_losses.append(final_loss)
     return logits, new_caches, jnp.stack(node_losses, axis=1)
 
 

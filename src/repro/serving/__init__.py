@@ -1,5 +1,7 @@
-"""repro.serving — segment-wise engines driven by `repro.strategy`."""
+"""repro.serving — segment-wise engines driven by `repro.strategy`,
+plus the continuous-batching runtime (`repro.serving.runtime`)."""
 
-from repro.serving.engine import Classifier, Engine, GenerationStats
+from repro.serving.engine import (Classifier, Engine, GenerationStats,
+                                  make_token_step)
 
-__all__ = ["Engine", "Classifier", "GenerationStats"]
+__all__ = ["Engine", "Classifier", "GenerationStats", "make_token_step"]

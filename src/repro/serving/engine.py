@@ -17,17 +17,25 @@ tests/test_system.py).  Strategies with ``online = False`` (the
 hindsight oracles) are rejected — segments cannot be un-run.
 
 TPU adaptation (DESIGN.md §3): lanes are fixed-shape; exited lanes are
-masked, and the engine stops launching deeper segments once every lane has
-exited ("batch-level" saving).  Per-lane policy FLOPs (what a
-lane-granular runtime such as per-request dispatch would pay) are
-accounted separately in the stats — both numbers are reported by the
-serving benchmarks.
+masked, and the whole token is ONE device program (`make_token_step`):
+each segment launch is gated by ``lax.cond(active.any(), ...)``, so the
+decision to stop running deeper segments once every lane has exited
+("batch-level" saving) is made on device — no host round-trip per
+segment.  Segment counters accumulate as device scalars and the host
+syncs exactly once per token (tokens + served nodes + stats in a single
+``device_get``).  Per-lane policy FLOPs (what a lane-granular runtime
+such as per-request dispatch would pay) are accounted separately — both
+numbers are reported by the serving benchmarks.
 
-State skew: when a token exits early, deeper layers' KV/SSM caches are
-simply not written for that position (the stored-position mask hides the
-hole from later attention).  This is the standard early-exit cache policy
-(cf. Apparate / DeeBERT serving) — a quality-for-latency approximation the
-T-Tamer cost model already prices in via the calibration traces.
+State skew: when a lane exits early, deeper segments' KV/SSM cache
+writes are MASKED for that lane (``_mask_lane_writes``) — the holes are
+hidden from later attention by the stored-position mask.  This is the
+standard early-exit cache policy (cf. Apparate / DeeBERT serving), a
+quality-for-latency approximation the T-Tamer cost model already prices
+in via the calibration traces; it also makes every lane's output stream
+a function of its own request alone, which is what lets the
+continuous-batching runtime (repro.serving.runtime) recycle lanes with
+admission-order invariance.
 """
 
 from __future__ import annotations
@@ -42,7 +50,8 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.strategy.base import Strategy
 
-__all__ = ["Engine", "GenerationStats", "Classifier"]
+__all__ = ["Engine", "GenerationStats", "Classifier", "make_token_step",
+           "bank_observe", "bank_serve"]
 
 
 def _check_online(strategy: Strategy) -> Strategy:
@@ -71,6 +80,162 @@ class GenerationStats:
     segments_full: int              # full-depth reference
 
 
+def _mask_lane_writes(new_cache, old_cache, active: jax.Array):
+    """Keep inactive lanes' cache bits: leaves are layer-stacked
+    ``(L, B, ...)``, so broadcast the lane mask over axis 1."""
+    def sel(n, o):
+        return jnp.where(active.reshape((1, -1) + (1,) * (n.ndim - 2)),
+                         n, o)
+    return jax.tree.map(sel, new_cache, old_cache)
+
+
+def bank_observe(strategies, states, node, losses, preds, active, sid):
+    """Fold one node into every bank member's state; lanes only follow
+    their own member's continue/stop verdict (``sid`` selects).  Shared
+    by the engine's token step and the runtime's simulation stepper."""
+    new_states, conts = [], []
+    for k, strat in enumerate(strategies):
+        mask = active if len(strategies) == 1 else active & (sid == k)
+        st, cont = strat.observe(states[k], node, losses, mask, aux=preds)
+        new_states.append(st)
+        conts.append(cont)
+    if len(strategies) == 1:
+        return tuple(new_states), conts[0]
+    out = jnp.zeros_like(active)
+    for k, cont in enumerate(conts):
+        out = jnp.where(sid == k, cont, out)
+    return tuple(new_states), out
+
+
+def bank_serve(strategies, states, sid):
+    served = strategies[0].serve(states[0]).astype(jnp.int32)
+    for k in range(1, len(strategies)):
+        served = jnp.where(sid == k,
+                           strategies[k].serve(states[k]).astype(jnp.int32),
+                           served)
+    return served
+
+
+def make_token_step(params, cfg: ModelConfig, strategies, *,
+                    jit: bool = True, donate: bool | None = None,
+                    carry_state: bool = False):
+    """Build the one-token segment sweep shared by `Engine.generate` and
+    the continuous-batching runtime (`repro.serving.runtime`).
+
+    The whole sweep is a single device program: each segment launch is
+    gated by ``lax.cond(active.any(), ...)`` so batch-level skipping is
+    decided on device (no per-segment host round-trip), exited lanes'
+    cache writes are masked (a lane's stream depends on its own request
+    only), and the segment counters accumulate as device scalars so
+    callers sync at most once per token.
+
+    Args:
+      strategies: a tuple *bank* of online strategies; the per-lane
+        ``sid`` (B,) int32 argument picks each lane's member — this is
+        how the runtime serves per-request strategies / lambdas inside
+        one static-shape batch.  The Engine passes a one-member bank.
+      jit: wrap in ``jax.jit`` (caches donated off-CPU).
+      donate: override cache-buffer donation (default: on for
+        accelerator backends, off on CPU where XLA can't honor it).
+      carry_state: runtime mode — the step takes the bank's per-lane
+        states as a sixth argument and returns them updated.  By default
+        a strategy explores per token, so every occupied lane's state is
+        re-initialized at its token boundary via
+        `strategy.base.reset_lanes` (pytree-sliced, on device).  A
+        strategy that sets ``persistent = True`` opts out of the
+        boundary reset: its state survives across the tokens of one
+        request and is reset ONLY by the scheduler's admission-time
+        `init_lane` — which is also what guarantees, for both kinds, a
+        recycled lane can never observe its predecessor's state.
+
+    Returns ``step(tok (B,) i32, caches, pos (B,) i32, occupied (B,)
+    bool, sid (B,) i32[, states]) -> (next_tok, new_caches, served_node,
+    seg_batch, seg_policy[, states])`` — seg_* are int32 scalars
+    counting this token's launched segments and per-lane probed
+    segments.
+    """
+    from repro.strategy.base import reset_lanes
+    strategies = tuple(_check_online(s) for s in strategies)
+
+    def step(tok, caches, pos, occupied, sid, states_in=None):
+        b = tok.shape[0]
+        x = params["embed"]["table"][tok][:, None, :]
+        if carry_state:
+            # per-token exploration: every occupied lane starts this
+            # token from a fresh state, sliced per lane so unoccupied
+            # lanes' (stale, masked-out) leaves stay bit-stable.
+            # `persistent` strategies keep their state across tokens
+            # (admission's init_lane is their only reset).
+            states = tuple(
+                st if getattr(s, "persistent", False)
+                else reset_lanes(s, st, occupied)
+                for s, st in zip(strategies, states_in))
+        else:
+            states = tuple(s.init(b) for s in strategies)
+        active = occupied
+        best_logits = jnp.zeros((b, cfg.vocab), jnp.float32)
+        seg_batch = jnp.zeros((), jnp.int32)
+        seg_policy = jnp.zeros((), jnp.int32)
+        new_caches = list(caches)
+        node = 0
+        for si, seg in enumerate(cfg.segments):
+            seg_batch = seg_batch + active.any().astype(jnp.int32)
+            seg_policy = seg_policy + active.sum(dtype=jnp.int32)
+
+            def run(ops, si=si, node=node):
+                x, cache, states, act, best = ops
+                x2, nc, ro = M.decode_segment(params, cfg, si, x, cache,
+                                              pos)
+                nc = _mask_lane_writes(nc, cache, act)
+                if ro is not None:
+                    # ramp readout: serve-from-this-node logits for lanes
+                    # whose served node is the current one (one head
+                    # matmul via models.model.ramp_readout; recall
+                    # refreshes happen via serve()'s argmin bookkeeping)
+                    logits, ell = ro
+                    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    states, act = bank_observe(strategies, states, node,
+                                                ell, preds, act, sid)
+                    take = bank_serve(strategies, states, sid) == node
+                    best = jnp.where(take[:, None],
+                                     logits.astype(jnp.float32), best)
+                return (x2, nc, states, act, best)
+
+            ops = (x, caches[si], states, active, best_logits)
+            x, new_caches[si], states, active, best_logits = jax.lax.cond(
+                active.any(), run, lambda o: o, ops)
+            if seg.ramp:
+                node += 1
+
+        def run_head(ops):
+            x, states, act, best = ops
+            logits, ell = M.ramp_readout(params, cfg, x[:, 0, :])
+            preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            states, act = bank_observe(strategies, states, node, ell,
+                                        preds, act, sid)
+            take = bank_serve(strategies, states, sid) == node
+            best = jnp.where(take[:, None], logits.astype(jnp.float32),
+                             best)
+            return (x, states, act, best)
+
+        ops = (x, states, active, best_logits)
+        x, states, active, best_logits = jax.lax.cond(
+            active.any(), run_head, lambda o: o, ops)
+
+        next_tok = jnp.argmax(best_logits, axis=-1).astype(jnp.int32)
+        served = bank_serve(strategies, states, sid)
+        if carry_state:
+            return next_tok, new_caches, served, seg_batch, seg_policy, \
+                states
+        return next_tok, new_caches, served, seg_batch, seg_policy
+
+    if not jit:
+        return step
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+
 class Engine:
     """Batched greedy-decode engine with per-token early exit."""
 
@@ -80,95 +245,34 @@ class Engine:
         self.cfg = cfg
         self.strategy = _check_online(strategy)
         self.cache_len = cache_len
-        n_seg = len(cfg.segments)
-
-        def seg_fn(si, x, cache_seg, pos):
-            return M.decode_segment(params, cfg, si, x, cache_seg, pos)
-
-        def embed_fn(tokens):
-            return params["embed"]["table"][tokens][:, None, :]
-
-        def head_fn(x):
-            from repro.models.common import rms_norm
-            final = rms_norm(params["final_norm"], x, cfg.norm_eps)
-            logits = M.unembed(params, cfg, final)[:, 0]
-            p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-            return logits, 1.0 - p.max(axis=-1)
-
-        if jit:
-            self._seg = [jax.jit(lambda x, c, pos, si=si:
-                                 seg_fn(si, x, c, pos))
-                         for si in range(n_seg)]
-            self._embed = jax.jit(embed_fn)
-            self._head = jax.jit(head_fn)
-        else:
-            self._seg = [lambda x, c, pos, si=si: seg_fn(si, x, c, pos)
-                         for si in range(n_seg)]
-            self._embed = embed_fn
-            self._head = head_fn
+        self.jit = bool(jit)
+        self._step = make_token_step(params, cfg, (self.strategy,),
+                                     jit=self.jit)
 
     def prefill(self, batch: dict):
         return M.prefill(self.params, self.cfg, batch, self.cache_len)
 
     def generate(self, batch: dict, n_tokens: int) -> GenerationStats:
         cfg = self.cfg
-        strategy = self.strategy
         logits, caches, _, pos = self.prefill(batch)
         b = logits.shape[0]
-        tok = jnp.argmax(logits, axis=-1)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        occupied = jnp.ones((b,), bool)
+        sid = jnp.zeros((b,), jnp.int32)
         out_tokens, out_nodes = [], []
         seg_batch = seg_policy = 0
-        n_seg = len(cfg.segments)
 
         for _ in range(n_tokens):
-            state = strategy.init(b)
-            x = self._embed(tok)
-            active = jnp.ones((b,), bool)
-            best_logits = jnp.zeros((b, cfg.vocab), jnp.float32)
-            node = 0
-            new_caches = list(caches)
-            for si in range(n_seg):
-                # skip the remaining depth once every lane has exited
-                if not bool(active.any()):
-                    break
-                x, new_caches[si], conf = self._seg[si](x, caches[si], pos)
-                seg_batch += 1
-                seg_policy += int(active.sum())
-                if conf is not None:
-                    # serve-from-this-node logits for lanes whose served
-                    # node is the current one (the ramp head shares the
-                    # unembedding, so materializing them is one head
-                    # matmul; recall refreshes happen via serve()'s
-                    # argmin bookkeeping, no isinstance dispatch)
-                    from repro.models.common import rms_norm
-                    rp = self.params["segments"][si]["ramp"]
-                    h = rms_norm(rp["norm"], x[:, 0, :], cfg.norm_eps)
-                    node_logits = M.unembed(self.params, cfg,
-                                            h[:, None, :])[:, 0]
-                    preds = jnp.argmax(node_logits, axis=-1)
-                    state, active = strategy.observe(
-                        state, node, conf, active,
-                        aux=preds.astype(jnp.int32))
-                    take = strategy.serve(state) == node
-                    best_logits = jnp.where(take[:, None],
-                                            node_logits.astype(jnp.float32),
-                                            best_logits)
-                    node += 1
-            if bool(active.any()):
-                # final head node (for lanes still active)
-                final_logits, final_loss = self._head(x)
-                preds = jnp.argmax(final_logits, axis=-1)
-                state, active = strategy.observe(
-                    state, node, final_loss, active,
-                    aux=preds.astype(jnp.int32))
-                take = strategy.serve(state) == node
-                best_logits = jnp.where(take[:, None],
-                                        final_logits.astype(jnp.float32),
-                                        best_logits)
-            caches = new_caches
-            tok = jnp.argmax(best_logits, axis=-1)
-            out_tokens.append(np.asarray(tok))
-            out_nodes.append(np.asarray(strategy.serve(state)))
+            tok, caches, served, sb, sp = self._step(tok, caches, pos,
+                                                     occupied, sid)
+            # the ONLY host sync of the token: emitted tokens, served
+            # nodes, and both segment counters in one transfer
+            tok_h, served_h, sb_h, sp_h = jax.device_get(
+                (tok, served, sb, sp))
+            out_tokens.append(tok_h)
+            out_nodes.append(served_h)
+            seg_batch += int(sb_h)
+            seg_policy += int(sp_h)
             pos = pos + 1
 
         return GenerationStats(
@@ -176,7 +280,7 @@ class Engine:
             served_nodes=np.stack(out_nodes, 1),
             segments_run_batch=seg_batch,
             segments_run_policy=seg_policy,
-            segments_full=n_tokens * n_seg * b,
+            segments_full=n_tokens * len(cfg.segments) * b,
         )
 
 
@@ -198,7 +302,6 @@ class Classifier:
 
     def classify(self, batch: dict) -> dict:
         from repro.models.blocks import block_forward
-        from repro.models.common import rms_norm
         cfg = self.cfg
         params = self.params
         strategy = self.strategy
@@ -224,11 +327,8 @@ class Classifier:
             seg_run += 1
             seg_policy += int(active.sum())
             if seg.ramp:
-                rp = params["segments"][si]["ramp"]
-                h = rms_norm(rp["norm"], x[:, -1, :], cfg.norm_eps)
-                logits = M.unembed(params, cfg, h[:, None, :])[:, 0]
-                probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
-                loss = 1.0 - probs.max(axis=-1)
+                logits, loss = M.ramp_readout(params, cfg, x[:, -1, :],
+                                              segment=si)
                 preds = jnp.argmax(logits, axis=-1)
                 state, active = strategy.observe(
                     state, node, loss, active, aux=preds.astype(jnp.int32))
@@ -241,13 +341,10 @@ class Classifier:
                                         best_logits)
                 node += 1
         if bool(active.any()):
-            final = rms_norm(params["final_norm"], x[:, -1:, :],
-                             cfg.norm_eps)
-            logits = M.unembed(params, cfg, final)[:, 0]
-            probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+            logits, loss = M.ramp_readout(params, cfg, x[:, -1, :])
             preds = jnp.argmax(logits, axis=-1)
             state, active = strategy.observe(
-                state, node, 1.0 - probs.max(-1), active,
+                state, node, loss, active,
                 aux=preds.astype(jnp.int32))
             take = strategy.serve(state) == node
             best_logits = jnp.where(take[:, None],

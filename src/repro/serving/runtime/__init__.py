@@ -1,0 +1,28 @@
+"""repro.serving.runtime — continuous-batching serving on top of the
+Strategy engine (DESIGN.md §7).
+
+The runtime turns the one-shot `Engine` into an open-loop server:
+streaming `Request`s queue up (`request.py`), a fixed-width lane
+scheduler admits them into the batched decode step and recycles a lane
+the moment its request completes (`scheduler.py`), synthetic traffic
+generators drive it (`workload.py`), and serving metrics — throughput,
+token-latency percentiles, TTFT, goodput under an SLO, segments saved —
+come out as JSON (`metrics.py`).  `server.py` ties the loop together
+and adds a model-free simulation mode that replays calibration traces
+through the same scheduler, so CI exercises admission logic in
+milliseconds.
+"""
+
+from repro.serving.runtime.metrics import RuntimeMetrics
+from repro.serving.runtime.request import Request, RequestQueue
+from repro.serving.runtime.scheduler import EngineStepper, LaneScheduler
+from repro.serving.runtime.server import (Server, SimStepper, build_bank,
+                                          cascade_factory)
+from repro.serving.runtime.workload import (available_workloads,
+                                            make_workload)
+
+__all__ = [
+    "Request", "RequestQueue", "LaneScheduler", "EngineStepper",
+    "Server", "SimStepper", "RuntimeMetrics", "build_bank",
+    "cascade_factory", "make_workload", "available_workloads",
+]

@@ -1,0 +1,179 @@
+"""Serving metrics for the continuous-batching runtime (DESIGN.md §7).
+
+Definitions (all timestamps come from the server's clock — wall seconds
+in engine mode, virtual units in simulation mode):
+
+  * **TTFT** — first emitted token minus ARRIVAL (queue wait included;
+    that is the quantity admission policy actually moves).
+  * **token latency** — inter-token gap between consecutive emissions of
+    one request; p50/p95/p99 are over all gaps of all requests.
+  * **throughput** — emitted tokens (and completed requests) per unit
+    time over the serve window.
+  * **goodput** — emitted tokens/sec counting only requests that met the
+    SLO (``ttft <= slo``); the difference to raw throughput is work the
+    server did without serving anyone acceptably.
+  * **segments saved** — both of the engine's accountings, in one unit
+    each: *batch*-level (segment launches skipped because every lane had
+    exited) and *lane*-level (per-lane probes skipped — what a
+    lane-granular dispatch would save), both relative to full depth.
+
+`summary()` returns a plain dict; `to_json()` dumps summary + per-request
+records, which is what the bench trajectory and the CI artifact store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+__all__ = ["RequestRecord", "RuntimeMetrics"]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    arrival: float
+    admitted: float | None = None
+    first_token: float | None = None
+    finished: float | None = None
+    n_tokens: int = 0
+    served_depth_sum: int = 0       # sum over tokens of served node idx
+    strategy: str | None = None
+    tokens: list = dataclasses.field(default_factory=list)  # emitted ids
+    _last_token: float | None = None
+
+    @property
+    def ttft(self) -> float | None:
+        return None if self.first_token is None \
+            else self.first_token - self.arrival
+
+    @property
+    def e2e(self) -> float | None:
+        return None if self.finished is None \
+            else self.finished - self.arrival
+
+    def as_dict(self) -> dict:
+        return {
+            "rid": self.rid, "arrival": self.arrival,
+            "admitted": self.admitted, "first_token": self.first_token,
+            "finished": self.finished, "n_tokens": self.n_tokens,
+            "ttft": self.ttft, "e2e": self.e2e,
+            "mean_served_node": (self.served_depth_sum / self.n_tokens
+                                 if self.n_tokens else None),
+            "strategy": self.strategy,
+            "tokens": list(self.tokens),
+        }
+
+
+def _pct(vals, qs=(50, 95, 99)) -> dict:
+    if not len(vals):
+        return {f"p{q}": None for q in qs}
+    arr = np.asarray(vals, np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+class RuntimeMetrics:
+    """Accumulates per-request + per-step records during a serve run."""
+
+    def __init__(self, full_depth: int, n_lanes: int):
+        self.full_depth = int(full_depth)   # segments (sim: nodes)/token
+        self.n_lanes = int(n_lanes)
+        self.records: dict[int, RequestRecord] = {}
+        self.itl: list[float] = []          # inter-token gaps
+        self.steps = 0
+        self.seg_batch = 0                  # launched segment count
+        self.seg_policy = 0                 # per-lane probed count
+        self.lane_steps = 0                 # occupied lane-tokens
+        self.t_start: float = 0.0
+        self.t_end: float = 0.0
+
+    # ------------------------------------------------------------------
+    # event hooks (called by the server loop)
+    # ------------------------------------------------------------------
+
+    def on_admit(self, req, now: float) -> None:
+        self.records[req.rid] = RequestRecord(
+            rid=req.rid, arrival=req.arrival, admitted=now,
+            strategy=req.strategy)
+
+    def on_step(self, seg_batch: int, seg_policy: int,
+                n_occupied: int) -> None:
+        self.steps += 1
+        self.seg_batch += int(seg_batch)
+        self.seg_policy += int(seg_policy)
+        self.lane_steps += int(n_occupied)
+
+    def on_token(self, rid: int, served_node: int, now: float,
+                 token: int | None = None) -> None:
+        rec = self.records[rid]
+        if rec.first_token is None:
+            rec.first_token = now
+        else:
+            self.itl.append(now - rec._last_token)
+        rec._last_token = now
+        rec.n_tokens += 1
+        rec.served_depth_sum += int(served_node)
+        if token is not None:
+            rec.tokens.append(int(token))
+
+    def on_finish(self, rid: int, now: float) -> None:
+        self.records[rid].finished = now
+
+    # ------------------------------------------------------------------
+    # aggregation
+    # ------------------------------------------------------------------
+
+    def summary(self, slo: float | None = None) -> dict:
+        recs = list(self.records.values())
+        done = [r for r in recs if r.finished is not None]
+        duration = max(self.t_end - self.t_start, 1e-9)
+        tokens = sum(r.n_tokens for r in recs)
+        ttfts = [r.ttft for r in recs if r.ttft is not None]
+        e2es = [r.e2e for r in done]
+
+        met_slo = None
+        goodput = None
+        if slo is not None:
+            ok = [r for r in done
+                  if r.ttft is not None and r.ttft <= slo]
+            met_slo = len(ok) / max(len(done), 1)
+            goodput = sum(r.n_tokens for r in ok) / duration
+
+        full_b = self.steps * self.full_depth
+        full_l = self.lane_steps * self.full_depth
+        return {
+            "duration": duration,
+            "requests": len(recs),
+            "completed": len(done),
+            "tokens": tokens,
+            "throughput_tok_s": tokens / duration,
+            "throughput_req_s": len(done) / duration,
+            "ttft": _pct(ttfts),
+            "token_latency": _pct(self.itl),
+            "e2e_latency": _pct(e2es, qs=(50, 95)),
+            "slo": slo,
+            "slo_attainment": met_slo,
+            "goodput_tok_s": goodput,
+            "steps": self.steps,
+            "segments_saved_batch": (1.0 - self.seg_batch / full_b
+                                     if full_b else None),
+            "segments_saved_lane": (1.0 - self.seg_policy / full_l
+                                    if full_l else None),
+            "mean_served_node": (sum(r.served_depth_sum for r in recs)
+                                 / tokens if tokens else None),
+        }
+
+    def to_json(self, path: str, slo: float | None = None,
+                extra: dict | None = None) -> dict:
+        """Write summary + per-request records; returns the payload."""
+        payload = {
+            "summary": self.summary(slo),
+            "requests": [r.as_dict() for r in self.records.values()],
+        }
+        if extra:
+            payload.update(extra)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        return payload

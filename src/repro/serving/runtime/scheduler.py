@@ -1,0 +1,192 @@
+"""Lane scheduling: fixed-width slots, immediate recycling, static
+shapes (DESIGN.md §7).
+
+Two layers:
+
+  * `LaneScheduler` — the pure allocator.  `n_lanes` slots; a lane is
+    recycled the moment its request finishes (or its stream hits EOS);
+    admission pops the `RequestQueue` into free lanes.  All bookkeeping
+    is host-side numpy, so the device batch keeps one static shape and
+    occupancy is just a mask.
+
+  * `EngineStepper` — the device-state surgery for the REAL model.  It
+    owns the batched decode caches / current tokens / positions / the
+    carried strategy-bank states, admits one request by prefilling it
+    at batch 1 and pytree-scattering the results into the lane slot, and
+    steps all lanes through the shared `serving.engine.make_token_step`
+    program (carry_state mode).  A recycled lane's strategy state is
+    sliced back to fresh-init at admission via `strategy.init_lane`;
+    per-token strategies are additionally re-sliced at every token
+    boundary inside the step, while ``persistent = True`` strategies
+    carry state across a request's tokens and rely on the admission
+    reset alone — either way, state from a previous occupant can never
+    leak into the next request.
+
+Per-lane masked cache writes inside the token step make each lane's
+output stream a function of its own request only, so the scheduler's
+admission order cannot change what any request generates
+(tests/serving/test_runtime.py pins this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serving.engine import make_token_step
+from repro.serving.runtime.request import Request, RequestQueue
+from repro.strategy.base import init_lane
+
+__all__ = ["LaneScheduler", "EngineStepper"]
+
+
+class LaneScheduler:
+    """Fixed-width lane allocator with immediate recycling."""
+
+    def __init__(self, n_lanes: int):
+        if n_lanes < 1:
+            raise ValueError("need at least one lane")
+        self.n_lanes = int(n_lanes)
+        self.lane_req: list[Request | None] = [None] * self.n_lanes
+        self.remaining = np.zeros(self.n_lanes, np.int64)
+        self.sid = np.zeros(self.n_lanes, np.int32)
+
+    def occupied_mask(self) -> np.ndarray:
+        return np.asarray([r is not None for r in self.lane_req])
+
+    def busy(self) -> bool:
+        return any(r is not None for r in self.lane_req)
+
+    def free_lanes(self) -> list[int]:
+        return [i for i, r in enumerate(self.lane_req) if r is None]
+
+    def admit(self, queue: RequestQueue, sid_of, *,
+              static_batching: bool = False) -> list[tuple[int, Request]]:
+        """Pop queued requests into free lanes; returns assignments.
+
+        ``static_batching=True`` reproduces the fixed-batch
+        `Engine.generate` discipline (the bench baseline): a new batch
+        is admitted only once EVERY lane is free, so stragglers idle the
+        whole width.
+        """
+        if static_batching and self.busy():
+            return []
+        out = []
+        for lane in self.free_lanes():
+            if not len(queue):
+                break
+            req = queue.pop()
+            self.lane_req[lane] = req
+            self.remaining[lane] = req.max_tokens
+            self.sid[lane] = sid_of(req)
+            out.append((lane, req))
+        return out
+
+    def consume_token(self, lane: int) -> bool:
+        """Account one emitted token; True when the budget is exhausted."""
+        self.remaining[lane] -= 1
+        return bool(self.remaining[lane] <= 0)
+
+    def release(self, lane: int) -> Request:
+        req = self.lane_req[lane]
+        if req is None:
+            raise ValueError(f"lane {lane} is already free")
+        self.lane_req[lane] = None
+        self.remaining[lane] = 0
+        self.sid[lane] = 0
+        return req
+
+
+def _materialize_cache(spec, key=None):
+    """Zero-filled decode cache from a `models.model.cache_specs` tree
+    (attention ``pos`` buffers start at -1 == empty slot)."""
+    if isinstance(spec, dict):
+        return {k: _materialize_cache(v, k) for k, v in spec.items()}
+    shape, dtype = spec
+    if key == "pos":
+        return jnp.full(shape, -1, dtype)
+    return jnp.zeros(shape, dtype)
+
+
+class EngineStepper:
+    """Real-model lane state: batched caches + the shared token step."""
+
+    virtual_time = False
+    emits_tokens = True    # `emitted` really is token ids (EOS applies)
+
+    def __init__(self, params, cfg, strategies: tuple, *, n_lanes: int,
+                 cache_len: int, prompt_len: int, jit: bool = True):
+        self.params = params
+        self.cfg = cfg
+        self.strategies = strategies
+        self.n_lanes = int(n_lanes)
+        self.cache_len = int(cache_len)
+        self.prompt_len = int(prompt_len)
+        self.full_depth = len(cfg.segments)
+        self._step = make_token_step(params, cfg, strategies, jit=jit,
+                                     donate=False, carry_state=True)
+
+        def admit_fn(caches, tok, pos, prompt, lane):
+            logits, pc, _, npos = M.prefill(params, cfg,
+                                            {"tokens": prompt}, cache_len)
+            t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+
+            def scatter(full, one):
+                return full.at[:, lane].set(one[:, 0].astype(full.dtype))
+
+            caches = jax.tree.map(scatter, caches, pc)
+            return (caches, tok.at[lane].set(t0),
+                    pos.at[lane].set(npos[0].astype(jnp.int32)))
+
+        self._admit = jax.jit(admit_fn) if jit else admit_fn
+        self.alloc()
+
+    def alloc(self) -> None:
+        """(Re)build empty lane state: zero caches, fresh bank states."""
+        specs = M.cache_specs(self.cfg, self.n_lanes, self.cache_len)
+        self.caches = [_materialize_cache(s) for s in specs]
+        self.tok = jnp.zeros((self.n_lanes,), jnp.int32)
+        self.pos = jnp.zeros((self.n_lanes,), jnp.int32)
+        self.states = tuple(s.init(self.n_lanes) for s in self.strategies)
+
+    def admit(self, lane: int, req: Request) -> None:
+        """Prefill the request at batch 1 and scatter it into ``lane``."""
+        if req.prompt.shape[0] != self.prompt_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {req.prompt.shape[0]} "
+                f"!= stepper bucket {self.prompt_len} (static shapes)")
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        self.caches, self.tok, self.pos = self._admit(
+            self.caches, self.tok, self.pos, prompt,
+            jnp.int32(lane))
+        # pytree-sliced per-lane reset: the recycled lane starts from
+        # fresh strategy state no matter what its predecessor observed
+        self.states = tuple(init_lane(s, st, lane)
+                            for s, st in zip(self.strategies, self.states))
+
+    def warmup(self) -> None:
+        """Compile the admit + step programs off the serving clock."""
+        dummy = Request(rid=-1, prompt=np.zeros(self.prompt_len, np.int32),
+                        max_tokens=1)
+        self.admit(0, dummy)
+        occ = np.zeros((self.n_lanes,), bool)
+        occ[0] = True
+        self.step(occ, np.zeros((self.n_lanes,), np.int32))
+        self.alloc()
+
+    def step(self, occupied: np.ndarray, sid: np.ndarray):
+        """One decode token for every occupied lane.
+
+        Returns host-side ``(emitted (B,), served (B,), seg_batch,
+        seg_policy)`` — a single device sync for the whole token.
+        """
+        occ = jnp.asarray(occupied, bool)
+        tok, self.caches, served, sb, sp, self.states = self._step(
+            self.tok, self.caches, self.pos, occ,
+            jnp.asarray(sid, jnp.int32), self.states)
+        self.tok = tok
+        self.pos = self.pos + occ.astype(jnp.int32)
+        tok_h, served_h, sb_h, sp_h = jax.device_get((tok, served, sb, sp))
+        return tok_h, served_h, int(sb_h), int(sp_h)

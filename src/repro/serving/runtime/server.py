@@ -1,0 +1,267 @@
+"""The continuous-batching serve loop + model-free simulation
+(DESIGN.md §7).
+
+Data flow per iteration:
+
+    workload arrivals -> RequestQueue -> LaneScheduler.admit
+        -> stepper.admit (prefill + lane scatter | sim cursor)
+        -> stepper.step  (one token for every occupied lane)
+        -> metrics.on_token / lane recycling on completion
+
+`Server` drives either stepper behind one loop:
+
+  * `EngineStepper` (scheduler.py) — the real model; time is wall time.
+  * `SimStepper` (here) — model-free: each lane's token replays a row of
+    per-node losses (calibration traces or synthetic) through the SAME
+    strategy bank the engine would consult, and a virtual clock prices
+    each step.  CI exercises queueing, admission, recycling, and metric
+    plumbing in milliseconds with no model params at all.
+
+The sim cost model prices a step as ``overhead + seg_time * work``
+where work is the launched depth (``cost="batch"``, what the masked
+batch engine pays) or the mean per-lane probes (``cost="lane"``, what a
+lane-granular dispatch would pay — the accounting split DESIGN.md §3
+describes).  Strategy quality only turns into throughput under the lane
+model, which is exactly the regime the bench sweep reports.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import bank_observe, bank_serve
+from repro.serving.runtime.metrics import RuntimeMetrics
+from repro.serving.runtime.request import Request, RequestQueue
+from repro.serving.runtime.scheduler import LaneScheduler
+
+__all__ = ["Server", "SimStepper", "build_bank", "cascade_factory"]
+
+_ROW_PRIME = 9973  # deterministic per-(rid, token) trace-row assignment
+
+
+def build_bank(requests, make_strategy, default: tuple):
+    """Resolve the distinct per-request ``(strategy, lam)`` pairs into a
+    static strategy bank.
+
+    Returns ``(strategies, sid_of)`` — the tuple the token step closes
+    over (its size is fixed at trace time) and the lane->member resolver
+    the scheduler stamps on each admission.  ``make_strategy(name, lam)``
+    builds one member; ``default`` fills a request's missing fields.
+    """
+    def key_of(req):
+        return (req.strategy or default[0],
+                req.lam if req.lam is not None else default[1])
+
+    keys: list = []
+    for req in sorted(requests, key=lambda r: r.rid):
+        k = key_of(req)
+        if k not in keys:
+            keys.append(k)
+    if not keys:
+        keys = [default]
+    strategies = tuple(make_strategy(name, lam) for name, lam in keys)
+    index = {k: i for i, k in enumerate(keys)}
+    return strategies, lambda req: index[key_of(req)]
+
+
+def cascade_factory(cascade):
+    """The standard ``make_strategy`` for `build_bank`: registry dispatch
+    against one calibrated cascade, with ``lam=None`` meaning the
+    cascade's own lambda.  Callers with per-family CLI knobs (the
+    launcher's thresholds/patience) wrap their own factory instead."""
+    from repro import strategy as _strategy
+
+    def mk(name, lam):
+        if lam is None:
+            return _strategy.make(name, cascade)
+        return _strategy.make(name, cascade, lam=lam)
+
+    return mk
+
+
+class SimStepper:
+    """Model-free stepper: replays loss traces through the strategy bank.
+
+    ``trace_bank`` is a ``(T, n_nodes)`` array of per-node losses (e.g.
+    `core.traces.ee_like_traces` or a cascade's calibration traces);
+    request ``rid``'s token ``t`` deterministically reads row
+    ``(rid * 9973 + t) % T``, so a request's decisions are independent
+    of lane placement and arrival order by construction.
+    """
+
+    virtual_time = True
+    emits_tokens = False   # `emitted` carries served nodes, not token ids
+
+    def __init__(self, strategies: tuple, trace_bank, *, n_lanes: int,
+                 seg_time: float = 1.0, overhead: float = 0.25,
+                 cost: str = "lane"):
+        if cost not in ("lane", "batch"):
+            raise ValueError(f"unknown cost model {cost!r}")
+        self.strategies = strategies
+        self.bank = np.asarray(trace_bank, np.float32)
+        self.n_nodes = self.bank.shape[1]
+        self.full_depth = self.n_nodes
+        self.n_lanes = int(n_lanes)
+        self.seg_time = float(seg_time)
+        self.overhead = float(overhead)
+        self.cost = cost
+        for s in strategies:
+            if s.n_nodes != self.n_nodes:
+                raise ValueError(
+                    f"strategy expects {s.n_nodes} nodes, trace bank has "
+                    f"{self.n_nodes}")
+            if getattr(s, "needs_aux", False):
+                raise ValueError(
+                    f"{type(s).__name__} consumes the aux prediction "
+                    "channel; simulation mode replays losses only — "
+                    "serve it through the real EngineStepper instead")
+
+        def decide(losses, occupied, sid):
+            b = losses.shape[0]
+            states = tuple(s.init(b) for s in strategies)
+            active = occupied
+            depth = jnp.zeros((), jnp.int32)
+            policy = jnp.zeros((), jnp.int32)
+            for node in range(self.n_nodes):
+                depth = depth + active.any().astype(jnp.int32)
+                policy = policy + active.sum(dtype=jnp.int32)
+                states, active = bank_observe(
+                    strategies, states, node, losses[:, node], None,
+                    active, sid)
+            return bank_serve(strategies, states, sid), depth, policy
+
+        self._decide = jax.jit(decide)
+        self.alloc()
+
+    def alloc(self) -> None:
+        self.lane_req: list[Request | None] = [None] * self.n_lanes
+        self.lane_tidx = np.zeros(self.n_lanes, np.int64)
+
+    def admit(self, lane: int, req: Request) -> None:
+        self.lane_req[lane] = req
+        self.lane_tidx[lane] = 0
+
+    def warmup(self) -> None:
+        """Compile the decision program (virtual time is unaffected)."""
+        self._decide(jnp.zeros((self.n_lanes, self.n_nodes), jnp.float32),
+                     jnp.zeros((self.n_lanes,), bool),
+                     jnp.zeros((self.n_lanes,), jnp.int32))
+        self.alloc()
+
+    def _row(self, req: Request, tidx: int) -> np.ndarray:
+        return self.bank[(req.rid * _ROW_PRIME + tidx) % len(self.bank)]
+
+    def step(self, occupied: np.ndarray, sid: np.ndarray):
+        """Returns ``(emitted, served, seg_batch, seg_policy, cost)``."""
+        losses = np.zeros((self.n_lanes, self.n_nodes), np.float32)
+        for lane in np.flatnonzero(occupied):
+            losses[lane] = self._row(self.lane_req[lane],
+                                     int(self.lane_tidx[lane]))
+            self.lane_tidx[lane] += 1
+        served, depth, policy = jax.device_get(self._decide(
+            jnp.asarray(losses), jnp.asarray(occupied, bool),
+            jnp.asarray(sid, jnp.int32)))
+        work = (policy / self.n_lanes) if self.cost == "lane" else depth
+        cost = self.overhead + self.seg_time * float(work)
+        # sim tokens have no content; the served node stands in
+        return served, served, int(depth), int(policy), cost
+
+
+class Server:
+    """Open-loop continuous-batching server over any stepper."""
+
+    def __init__(self, stepper, scheduler: LaneScheduler, sid_of, *,
+                 order: str = "fifo", slo: float | None = None,
+                 static_batching: bool = False, eos: int | None = None):
+        self.stepper = stepper
+        self.scheduler = scheduler
+        self.sid_of = sid_of
+        self.order = order
+        self.slo = slo
+        self.static_batching = static_batching
+        self.eos = eos
+        self._vt = 0.0
+        self._t0 = 0.0
+
+    # ---- clock ---------------------------------------------------------
+    def _now(self) -> float:
+        if self.stepper.virtual_time:
+            return self._vt
+        return time.perf_counter() - self._t0
+
+    def _advance_to(self, t: float) -> None:
+        if self.stepper.virtual_time:
+            self._vt = max(self._vt, t)
+        else:
+            gap = t - self._now()
+            if gap > 0:
+                time.sleep(gap)
+
+    # ---- the loop ------------------------------------------------------
+    def serve(self, requests, warmup: bool = True) -> RuntimeMetrics:
+        """Run the full open-loop session: admit every request at its
+        arrival time, decode until all streams drain, return metrics.
+
+        ``warmup`` compiles the stepper's device programs before the
+        serving clock starts, so wall-clock latency percentiles measure
+        serving, not XLA compilation.
+        """
+        sched = self.scheduler
+        stepper = self.stepper
+        if warmup:
+            stepper.warmup()
+        else:
+            stepper.alloc()
+        metrics = RuntimeMetrics(stepper.full_depth, sched.n_lanes)
+        deadline_of = None
+        if self.order == "edf" and self.slo is not None:
+            deadline_of = lambda r: r.arrival + self.slo  # noqa: E731
+        queue = RequestQueue(self.order, deadline_of=deadline_of)
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self._vt = 0.0
+        self._t0 = time.perf_counter()
+        metrics.t_start = self._now()
+
+        while pending or len(queue) or sched.busy():
+            now = self._now()
+            while pending and pending[0].arrival <= now:
+                queue.push(pending.pop(0))
+            for lane, req in sched.admit(
+                    queue, self.sid_of,
+                    static_batching=self.static_batching):
+                stepper.admit(lane, req)
+                metrics.on_admit(req, self._now())
+            if not sched.busy():
+                # every lane idle and nothing admissible: jump (sim) or
+                # sleep (real) to the next arrival
+                self._advance_to(pending[0].arrival)
+                continue
+
+            occupied = sched.occupied_mask()
+            out = stepper.step(occupied, sched.sid)
+            if stepper.virtual_time:
+                emitted, served, sb, sp, cost = out
+                self._vt += cost
+            else:
+                emitted, served, sb, sp = out
+            tnow = self._now()
+            metrics.on_step(sb, sp, int(occupied.sum()))
+            for lane in np.flatnonzero(occupied):
+                req = sched.lane_req[lane]
+                metrics.on_token(req.rid, int(served[lane]), tnow,
+                                 token=int(emitted[lane]))
+                done = sched.consume_token(lane)
+                if (not done and self.eos is not None
+                        and getattr(stepper, "emits_tokens", True)
+                        and int(emitted[lane]) == self.eos):
+                    done = True  # stream early-exit: recycle immediately
+                if done:
+                    metrics.on_finish(req.rid, tnow)
+                    sched.release(lane)
+
+        metrics.t_end = self._now()
+        return metrics

@@ -1,0 +1,127 @@
+"""Synthetic open-loop traffic generators (DESIGN.md §7).
+
+Three arrival processes cover the serving regimes the scheduler must
+survive:
+
+  * ``poisson``  — memoryless steady load (the queueing-theory default).
+  * ``bursty``   — ON/OFF modulated Poisson: silence, then bursts at a
+    multiple of the mean rate (tests lane recycling under backlog).
+  * ``diurnal``  — a sin^2 ramp from zero up to the peak rate and back
+    (tests admission under slowly drifting load).
+
+Every generator is seeded and fully deterministic: the same
+``(name, rate, duration, seed)`` produces byte-identical requests, and
+each request's prompt / token budget derive from its own draw order, so
+workloads replay exactly across runs and schedulers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.runtime.request import Request
+
+__all__ = ["WorkloadSpec", "make_workload", "available_workloads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Shared knobs for all generators."""
+
+    rate: float                    # mean arrivals/sec (diurnal: peak)
+    duration: float                # arrival window [0, duration)
+    prompt_len: int = 32           # fixed prompt bucket (static shapes)
+    vocab: int = 512
+    max_tokens: tuple = (4, 32)    # inclusive uniform decode budget
+    seed: int = 0
+    lam: float | None = None       # stamped on every request
+    strategy: str | None = None    # stamped on every request
+
+    def __post_init__(self):
+        if not self.rate > 0:
+            raise ValueError(f"rate must be > 0, got {self.rate}")
+        if not self.duration > 0:
+            raise ValueError(f"duration must be > 0, got {self.duration}")
+        lo, hi = self.max_tokens
+        if not 1 <= lo <= hi:
+            raise ValueError(f"bad max_tokens range {self.max_tokens}")
+
+
+def _finish(arrivals: np.ndarray, spec: WorkloadSpec,
+            rng: np.random.Generator) -> list[Request]:
+    lo, hi = spec.max_tokens
+    reqs = []
+    for rid, t in enumerate(np.sort(arrivals)):
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, spec.vocab, size=(spec.prompt_len,),
+                                dtype=np.int32),
+            max_tokens=int(rng.integers(lo, hi + 1)),
+            arrival=float(t),
+            lam=spec.lam,
+            strategy=spec.strategy,
+        ))
+    return reqs
+
+
+def _poisson_arrivals(rate: float, t0: float, t1: float,
+                      rng: np.random.Generator) -> list[float]:
+    out, t = [], t0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= t1:
+            return out
+        out.append(t)
+
+
+def poisson(spec: WorkloadSpec) -> list[Request]:
+    """Homogeneous Poisson arrivals at ``spec.rate``."""
+    rng = np.random.default_rng(spec.seed)
+    arrivals = np.asarray(
+        _poisson_arrivals(spec.rate, 0.0, spec.duration, rng))
+    return _finish(arrivals, spec, rng)
+
+
+def bursty(spec: WorkloadSpec, *, on: float = 1.0,
+           off: float = 3.0) -> list[Request]:
+    """ON/OFF traffic: Poisson bursts during ``on``-second windows
+    separated by ``off`` seconds of silence; the ON rate is scaled so the
+    long-run mean is still ``spec.rate``."""
+    rng = np.random.default_rng(spec.seed)
+    rate_on = spec.rate * (on + off) / on
+    arrivals, t = [], 0.0
+    while t < spec.duration:
+        arrivals += _poisson_arrivals(rate_on, t,
+                                      min(t + on, spec.duration), rng)
+        t += on + off
+    return _finish(np.asarray(arrivals), spec, rng)
+
+
+def diurnal(spec: WorkloadSpec) -> list[Request]:
+    """Inhomogeneous Poisson with rate(t) = peak * sin^2(pi t / T) —
+    a zero→peak→zero ramp over the window (thinning construction)."""
+    rng = np.random.default_rng(spec.seed)
+    cand = np.asarray(
+        _poisson_arrivals(spec.rate, 0.0, spec.duration, rng))
+    accept = rng.random(cand.shape) \
+        < np.sin(np.pi * cand / spec.duration) ** 2
+    return _finish(cand[accept], spec, rng)
+
+
+_WORKLOADS = {"poisson": poisson, "bursty": bursty, "diurnal": diurnal}
+
+
+def available_workloads() -> tuple:
+    return tuple(sorted(_WORKLOADS))
+
+
+def make_workload(name: str, spec: WorkloadSpec, **kwargs) -> list[Request]:
+    """Build the named arrival process from a `WorkloadSpec`."""
+    try:
+        gen = _WORKLOADS[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; available: "
+                       f"{', '.join(available_workloads())}") from None
+    return gen(spec, **kwargs)

@@ -8,7 +8,8 @@ benchmarks, and the online serving engine (DESIGN.md §3-4).
     Engine(params, cfg, strat, cache_len=128)      # online serving
 """
 
-from repro.strategy.base import PolicyResult, Strategy, evaluate
+from repro.strategy.base import (PolicyResult, Strategy, evaluate,
+                                 init_lane, reset_lanes)
 from repro.strategy.cascade import Cascade
 from repro.strategy.line import (FixedNodeStrategy, PatienceStrategy,
                                  RecallIndexStrategy, ThresholdStrategy,
@@ -18,7 +19,8 @@ from repro.strategy.registry import available, make, needs_tables, register
 from repro.strategy.skip import SkipRecallStrategy
 
 __all__ = [
-    "Strategy", "PolicyResult", "evaluate", "Cascade",
+    "Strategy", "PolicyResult", "evaluate", "reset_lanes", "init_lane",
+    "Cascade",
     "make", "available", "needs_tables", "register",
     "RecallIndexStrategy", "TreeIndexStrategy", "ThresholdStrategy",
     "PatienceStrategy", "FixedNodeStrategy", "OracleStrategy",

@@ -14,9 +14,10 @@ pytree-registered state dataclass, and the three protocol methods are pure:
 ``node`` may be a traced int32 scalar, so one ``observe`` implementation
 jits, vmaps, and ``lax.scan``s in both the offline evaluator below and the
 segment-wise engine (`repro.serving.engine`).  ``aux`` is an optional int32
-per-lane side channel: predicted labels for patience-style strategies,
-or precomputed support bins for table strategies built without a
-``Support`` (the deprecated `core.policies` wrappers use this).
+per-lane side channel: predicted labels for patience-style strategies
+(the engine supplies argmax logits there), or precomputed support bins
+for table strategies built without a ``Support`` (offline evaluation
+against pre-quantized traces).
 
 State contract: every state dataclass carries ``explore_cost`` (f32 per
 lane, objective-units inspection cost paid so far) and ``n_probed`` (i32
@@ -34,7 +35,8 @@ from typing import Protocol, Tuple, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PolicyResult", "Strategy", "evaluate"]
+__all__ = ["PolicyResult", "Strategy", "evaluate", "reset_lanes",
+           "init_lane"]
 
 
 @jax.tree_util.register_dataclass
@@ -72,6 +74,34 @@ class Strategy(Protocol):
 
     def serve(self, state) -> jax.Array:
         ...
+
+
+def reset_lanes(strategy: Strategy, state, mask: jax.Array):
+    """Per-lane state reset — the runtime's lane-recycling primitive.
+
+    Every state leaf is a ``(B, ...)`` per-lane array, so slicing the
+    pytree with a broadcast ``where`` re-initializes exactly the lanes
+    where ``mask`` is True while leaving the other lanes' carried state
+    (running minima, streaks, paid costs) bit-identical.  Pure and
+    jittable; the continuous-batching scheduler calls this at every
+    admission so a recycled lane can never leak its previous request's
+    decisions into the next one (tests/serving/test_runtime.py).
+    """
+    mask = jnp.asarray(mask)
+    b = mask.shape[0]
+    fresh = strategy.init(b)
+
+    def sel(f, s):
+        return jnp.where(mask.reshape((b,) + (1,) * (s.ndim - 1)), f, s)
+
+    return jax.tree.map(sel, fresh, state)
+
+
+def init_lane(strategy: Strategy, state, lane) -> object:
+    """Reset a single lane (static or traced i32 index) of a batched
+    state to its fresh ``init`` value — sugar over `reset_lanes`."""
+    b = jax.tree.leaves(state)[0].shape[0]
+    return reset_lanes(strategy, state, jnp.arange(b) == lane)
 
 
 def evaluate(strategy: Strategy, losses: jax.Array,

@@ -234,6 +234,7 @@ class PatienceStrategy:
     """PABEE: exit after `patience` consecutive ramps agree (aux = preds)."""
 
     online = True
+    needs_aux = True   # consumes predictions; loss-only replay can't drive it
 
     def __init__(self, n_nodes: int, patience: int, costs=None,
                  lam: float = 1.0):

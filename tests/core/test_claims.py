@@ -11,7 +11,8 @@ except ImportError:  # hypothesis optional — property tests skip without it
     from conftest import hypothesis_stubs
     given, settings, st = hypothesis_stubs()
 
-from repro.core import impossibility, pareto, policies, traces
+from repro import strategy
+from repro.core import impossibility, pareto, traces
 from repro.core.line_dp import solve_line
 from repro.core.markov import (MarkovChain, estimate_chain, marginals,
                                sample_chain)
@@ -95,7 +96,13 @@ def test_oracle_lower_bounds_everything():
     lam = 0.6
     ls = jnp.asarray(lam * losses)
     cj = jnp.asarray((1 - lam) * flops, jnp.float32)
-    oracle = float(policies.oracle(ls, cj).mean_total())
-    for res in (policies.always_last(ls, cj), policies.always_first(ls, cj),
-                policies.norecall_threshold(ls, cj, jnp.full((6,), 0.1))):
+    n = ls.shape[1]
+    oracle = float(strategy.evaluate(
+        strategy.OracleStrategy(n, costs=cj, recall=True),
+        ls).mean_total())
+    for strat in (strategy.FixedNodeStrategy(n, n - 1, costs=cj),
+                  strategy.FixedNodeStrategy(n, 0, costs=cj),
+                  strategy.ThresholdStrategy(n, 0.1, recall=False,
+                                             costs=cj)):
+        res = strategy.evaluate(strat, ls)
         assert oracle <= float(res.mean_total()) + 1e-6

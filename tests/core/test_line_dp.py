@@ -9,7 +9,8 @@ except ImportError:  # hypothesis optional — property tests skip without it
     from conftest import hypothesis_stubs
     given, settings, st = hypothesis_stubs()
 
-from repro.core import line_dp, policies
+from repro import strategy
+from repro.core import line_dp
 from repro.core.brute_force import bf_line
 from repro.core.line_dp import solve_line
 from repro.core.markov import MarkovChain, sample_chain
@@ -88,8 +89,10 @@ def test_policy_simulation_matches_value(seed, n, k):
     key = jax.random.PRNGKey(seed)
     bins = sample_chain(chain, key, 40_000)
     losses = jnp.asarray(grid, jnp.float32)[bins]
-    res = policies.recall_index(tables, losses,
-                                bins, jnp.asarray(costs, jnp.float32))
+    res = strategy.evaluate(
+        strategy.RecallIndexStrategy(tables, support=None,
+                                     costs=jnp.asarray(costs, jnp.float32)),
+        losses, aux=bins)
     mc = float(res.mean_total())
     val = float(tables.value)
     se = float(jnp.std(res.total)) / np.sqrt(bins.shape[0])
@@ -107,12 +110,16 @@ def test_policy_dominates_baselines_in_expectation(seed, n, k):
     bins = sample_chain(chain, jax.random.PRNGKey(seed + 1), 40_000)
     losses = jnp.asarray(grid, jnp.float32)[bins]
     cj = jnp.asarray(costs, jnp.float32)
-    ours = float(policies.recall_index(tables, losses, bins, cj).mean_total())
-    for base in (policies.always_last(losses, cj),
-                 policies.always_first(losses, cj),
-                 policies.norecall_threshold(
-                     losses, cj, jnp.full((n,), float(np.median(grid))))):
-        assert ours <= float(base.mean_total()) + 0.01
+    ours = float(strategy.evaluate(
+        strategy.RecallIndexStrategy(tables, support=None, costs=cj),
+        losses, aux=bins).mean_total())
+    thr = strategy.ThresholdStrategy(n, float(np.median(grid)),
+                                     recall=False, costs=cj)
+    for base in (strategy.FixedNodeStrategy(n, n - 1, costs=cj),
+                 strategy.FixedNodeStrategy(n, 0, costs=cj),
+                 thr):
+        res = strategy.evaluate(base, losses)
+        assert ours <= float(res.mean_total()) + 0.01
 
 
 def test_sigma_independent_of_x():

@@ -1,9 +1,8 @@
 """Strategy registry tests: every registered strategy reproduces the
-legacy `core.policies` decisions on shared synthetic traces, the skip
-strategy matches the numpy reference walk, and `observe` state threading
-survives jit / vmap / lax.scan."""
-
-import warnings
+legacy (pre-refactor) `core.policies` decisions on shared synthetic
+traces — pinned by golden digests generated from the originals at the
+seed commit — the skip strategy matches the numpy reference walk, and
+`observe` state threading survives jit / vmap / lax.scan."""
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro import strategy
-from repro.core import policies, skip_dp, traces
+from repro.core import skip_dp, traces
 from repro.core.line_dp import solve_line
 from repro.core.markov import MarkovChain, sample_chain
 from repro.core.support import Support
@@ -38,8 +37,8 @@ def instance():
 # Golden digests of the PRE-REFACTOR core.policies implementations on the
 # `instance` fixture traces (generated from the originals at the seed
 # commit, CPU f32): (weighted served_node checksum, weighted n_probed
-# checksum, mean explore_cost, mean served_loss).  They pin the legacy
-# behaviour independently of the now-delegating wrappers.
+# checksum, mean explore_cost, mean served_loss).  The wrappers are gone
+# (PR 2); these digests are the surviving pin of the legacy behaviour.
 GOLDEN = {
     "recall_index": (193855, 573136, 0.130817, 0.290877),
     "norecall_threshold": (235742, 556142, 0.144184, 0.286886),
@@ -61,54 +60,18 @@ def _digest(res):
             round(float(np.asarray(res.served_loss).mean()), 6))
 
 
-def _assert_parity(name, ref, res):
-    """Decisions must match exactly; float cost sums to addition order."""
-    np.testing.assert_array_equal(np.asarray(ref.served_node),
-                                  np.asarray(res.served_node),
-                                  err_msg=f"{name}: served_node")
-    np.testing.assert_array_equal(np.asarray(ref.n_probed),
-                                  np.asarray(res.n_probed),
-                                  err_msg=f"{name}: n_probed")
-    np.testing.assert_allclose(np.asarray(ref.served_loss),
-                               np.asarray(res.served_loss), atol=1e-6,
-                               err_msg=f"{name}: served_loss")
-    np.testing.assert_allclose(np.asarray(ref.explore_cost),
-                               np.asarray(res.explore_cost), atol=1e-6,
-                               err_msg=f"{name}: explore_cost")
-
-
 @pytest.mark.parametrize("name", ["recall_index", "norecall_threshold",
                                   "recall_threshold", "norecall_patience",
                                   "oracle", "oracle_norecall",
                                   "always_last", "always_first"])
 def test_registry_matches_legacy_policies(instance, name):
     casc, tables, losses, bins, cj = instance
-    thr = jnp.full((casc.n_nodes,), 0.4, jnp.float32)
     preds = jnp.asarray(np.asarray(bins) % 3)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = {
-            "recall_index": lambda: policies.recall_index(
-                tables, losses, bins, cj),
-            "norecall_threshold": lambda: policies.norecall_threshold(
-                losses, cj, thr),
-            "recall_threshold": lambda: policies.recall_threshold(
-                losses, cj, thr),
-            "norecall_patience": lambda: policies.norecall_patience(
-                losses, cj, preds, 2),
-            "oracle": lambda: policies.oracle(losses, cj),
-            "oracle_norecall": lambda: policies.oracle_norecall(losses, cj),
-            "always_last": lambda: policies.always_last(losses, cj),
-            "always_first": lambda: policies.always_first(losses, cj),
-        }[name]()
     kwargs = {"norecall_threshold": {"threshold": 0.4},
               "recall_threshold": {"threshold": 0.4},
               "norecall_patience": {"patience": 2}}.get(name, {})
     strat = strategy.make(name, casc, **kwargs)
     res = strategy.evaluate(strat, losses, aux=preds)
-    _assert_parity(name, legacy, res)
-    # pin against the pre-refactor implementations, not just the (now
-    # delegating) wrappers — catches regressions that move both in sync
     got = _digest(res)
     exp = GOLDEN[name]
     assert got[:2] == exp[:2], f"{name}: decision digest {got} != {exp}"
@@ -194,10 +157,10 @@ def test_evaluate_rejects_wrong_width(instance):
         strategy.evaluate(strat, losses[:, :3])
 
 
-def test_deprecated_wrappers_warn(instance):
-    _, _, losses, _, cj = instance
-    with pytest.warns(DeprecationWarning):
-        policies.always_last(losses, cj)
+def test_deprecated_wrappers_removed():
+    """PR 1 kept `core.policies` one release; this is that release."""
+    with pytest.raises(ImportError):
+        from repro.core import policies  # noqa: F401
 
 
 def test_cascade_from_traces_end_to_end():
