@@ -1,4 +1,4 @@
-"""Continuous-batching runtime benchmarks (DESIGN.md §7):
+"""Continuous-batching runtime benchmarks (DESIGN.md §7-8):
 
   1. Arrival-rate x strategy sweep in SIMULATION mode — the same
      scheduler/queue/metrics stack as real serving, with tokens replayed
@@ -13,22 +13,39 @@
      through `serving.runtime` vs batched `Engine.generate` at equal
      batch width (the fixed batch pads every request to its batch max).
 
-Run standalone for the CI smoke + JSON artifact:
+  3. Paged vs ring KV on the REAL smoke model at EQUAL HBM budget
+     (serving.kvpool): a shared-prefix workload under both ``kv`` modes
+     reports goodput/TTFT side by side plus pages-in-use, prefix hit
+     rate, and COW splits — the memory headroom prefix sharing frees is
+     the admission capacity the ring discipline burns on duplicates.
 
-  python -m benchmarks.bench_runtime --smoke --out runtime-metrics.json
+Run standalone for the CI smoke + JSON artifacts:
+
+  python -m benchmarks.bench_runtime --smoke --out runtime-metrics.json \
+      --json
+
+``--json`` (over)writes the stable ``BENCH_runtime.json`` at the repo
+root (schema ``bench_runtime/v1``: one row per rate x strategy x
+kv-mode with goodput / TTFT p50/p99 / pages-in-use).  Each run is one
+snapshot; the trajectory accumulates across commits via git history and
+the per-run CI artifact upload.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 
 import numpy as np
 
 from repro import strategy
 from repro.core import traces
 from repro.serving import runtime as rt
+from repro.serving.runtime.request import Request
 from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # virtual cost model: one node-probe on one lane costs SEG_TIME/lane,
 # plus a fixed per-step dispatch overhead (both in sim seconds)
@@ -81,7 +98,7 @@ def sweep_rate_strategy(*, rates, names, duration, seed=0):
                             f"ttft_p95={s['ttft']['p95']:.2f}s "
                             f"seg_saved_lane="
                             f"{100 * s['segments_saved_lane']:.0f}%"),
-                "summary": s, "rate": rate, "strategy": name,
+                "summary": s, "rate": rate, "strategy": name, "kv": "sim",
             })
     return rows
 
@@ -105,7 +122,7 @@ def recycling_vs_static_sim(*, n_requests, seed=0):
             "derived": (f"thru={s['throughput_tok_s']:.1f}tok_s "
                         f"duration={s['duration']:.1f}s "
                         f"tokens={s['tokens']}"),
-            "summary": s,
+            "summary": s, "strategy": "recall_index", "kv": "sim",
         })
     return rows
 
@@ -163,14 +180,109 @@ def recycling_vs_engine_real(*, n_requests=12, lanes=LANES, seed=0):
                      f"tokens={s['tokens']} "
                      f"seg_saved_batch="
                      f"{100 * s['segments_saved_batch']:.0f}%"),
-         "summary": s},
+         "summary": s, "strategy": "recall_index", "kv": "ring"},
         {"name": "runtime_engine_fixed_batch",
          "us_per_call": 1e6 / (useful / dt),
          "derived": (f"thru={useful / dt:.1f}tok_s tokens={useful} "
                      f"(each batch padded to its max budget)"),
          "summary": {"throughput_tok_s": useful / dt, "tokens": useful,
-                     "duration": dt}},
+                     "duration": dt},
+         "strategy": "recall_index", "kv": "ring"},
     ]
+
+
+def _shared_prefix_requests(vocab, *, n_requests, prompt_len, seed):
+    """Deterministic mix: 3 of every 4 requests reuse one of two base
+    prompts (what a shared system preamble looks like), the rest are
+    disjoint — the prefix-cache hit rate the paged pool should convert
+    into page headroom."""
+    rng = np.random.default_rng(seed)
+    bases = [rng.integers(0, vocab, prompt_len, dtype=np.int32)
+             for _ in range(2)]
+    out = []
+    for rid in range(n_requests):
+        if rid % 4 < 3:
+            prompt = bases[rid % 2].copy()
+        else:
+            prompt = rng.integers(0, vocab, prompt_len, dtype=np.int32)
+        out.append(Request(rid=rid, prompt=prompt,
+                           max_tokens=2 + rid % 5,
+                           arrival=rid * 0.02,
+                           strategy="recall_index"))
+    return out
+
+
+def paged_vs_ring_real(*, n_requests=8, lanes=2, prompt_len=16,
+                       page_size=8, cache_len=32, seed=0):
+    """REAL smoke model, shared-prefix workload, EQUAL HBM budget: the
+    paged pool (default n_pages == lanes x lane_pages, the ring
+    footprint) vs per-lane ring caches.  Reports goodput/TTFT plus the
+    pool's occupancy and sharing counters."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models.param import materialize
+
+    cfg = get_config("paper-ee-100m", smoke=True)
+    key = jax.random.PRNGKey(seed)
+    params = materialize(M.model_defs(cfg), key)
+    casc = strategy.Cascade.calibrate(params, cfg, key, 0.5, k=12,
+                                      t=128, seq=16)
+    requests = _shared_prefix_requests(cfg.vocab, n_requests=n_requests,
+                                       prompt_len=prompt_len, seed=seed)
+    rows = []
+    for kv in ("ring", "paged"):
+        bank, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                     ("recall_index", None))
+        stepper = rt.EngineStepper(params, cfg, bank, n_lanes=lanes,
+                                   cache_len=cache_len,
+                                   prompt_len=prompt_len, kv=kv,
+                                   page_size=page_size)
+        server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
+                           slo=SLO)
+        s = server.serve(requests).summary(slo=SLO)
+        row = {
+            "name": f"runtime_engine_kv_{kv}",
+            "us_per_call": 1e6 / max(s["throughput_tok_s"], 1e-9),
+            "derived": (f"thru={s['throughput_tok_s']:.1f}tok_s "
+                        f"goodput={s['goodput_tok_s']:.1f}tok_s "
+                        f"tokens={s['tokens']}"),
+            "summary": s, "strategy": "recall_index", "kv": kv,
+        }
+        if stepper.pool is not None:
+            ps = stepper.pool.stats()
+            row["kv_pool"] = ps
+            row["derived"] += (
+                f" pages_peak={ps['pages_peak']}/{ps['n_pages'] - 1}"
+                f" prefix_hit={100 * ps['prefix_hit_rate']:.0f}%"
+                f" cow={ps['cow_splits']}")
+        rows.append(row)
+    return rows
+
+
+def stable_report(rows: list[dict]) -> dict:
+    """The accumulating perf-trajectory schema (BENCH_runtime.json):
+    one flat row per rate x strategy x kv-mode.  Keys are stable across
+    commits; absent dimensions are null."""
+    out = []
+    for row in rows:
+        s = row.get("summary") or {}
+        pool = row.get("kv_pool") or {}
+        ttft = s.get("ttft") or {}
+        out.append({
+            "name": row["name"],
+            "rate": row.get("rate"),
+            "strategy": row.get("strategy"),
+            "kv": row.get("kv"),
+            "goodput_tok_s": s.get("goodput_tok_s"),
+            "throughput_tok_s": s.get("throughput_tok_s"),
+            "ttft_p50": ttft.get("p50"),
+            "ttft_p99": ttft.get("p99"),
+            "pages_in_use": pool.get("pages_peak"),
+            "prefix_hit_rate": pool.get("prefix_hit_rate"),
+            "cow_splits": pool.get("cow_splits"),
+        })
+    return {"schema": "bench_runtime/v1", "rows": out}
 
 
 def run(smoke: bool = False) -> list[dict]:
@@ -179,6 +291,7 @@ def run(smoke: bool = False) -> list[dict]:
                                    names=("recall_index", "always_last"),
                                    duration=15.0)
         rows += recycling_vs_static_sim(n_requests=24)
+        rows += paged_vs_ring_real(n_requests=6)
     else:
         rows = sweep_rate_strategy(
             rates=(2.0, 4.0, 6.0),
@@ -186,15 +299,19 @@ def run(smoke: bool = False) -> list[dict]:
             duration=30.0)
         rows += recycling_vs_static_sim(n_requests=48)
         rows += recycling_vs_engine_real()
+        rows += paged_vs_ring_real(n_requests=16, lanes=4)
     return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="sim-only subset (CI)")
+                    help="sim + tiny real-model subset (CI)")
     ap.add_argument("--out", default=None,
                     help="write the full metrics JSON here")
+    ap.add_argument("--json", action="store_true",
+                    help="write the stable BENCH_runtime.json at the "
+                         "repo root (perf trajectory; CI artifact)")
     args = ap.parse_args()
     rows = run(smoke=args.smoke)
     print("name,us_per_call,derived")
@@ -205,6 +322,11 @@ def main() -> None:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1, default=float)
         print(f"wrote {args.out}")
+    if args.json:
+        path = REPO_ROOT / "BENCH_runtime.json"
+        with open(path, "w") as f:
+            json.dump(stable_report(rows), f, indent=1, default=float)
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

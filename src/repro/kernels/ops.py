@@ -12,10 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (bellman_backup as _bb, flash_attention as _fa,
-                           ramp_exit as _re, ssd_chunk as _sc)
+                           paged_attention as _pa, ramp_exit as _re,
+                           ssd_chunk as _sc)
 
-__all__ = ["flash_attention", "bellman_backup", "ssd_chunk", "ramp_exit",
-           "on_cpu"]
+__all__ = ["flash_attention", "paged_attention", "bellman_backup",
+           "ssd_chunk", "ramp_exit", "on_cpu"]
 
 
 def on_cpu() -> bool:
@@ -52,6 +53,37 @@ def flash_attention(q, k, v, *, scale: float, causal: bool = True,
                                      window=window, block_q=block_q,
                                      block_kv=block_kv, interpret=interpret)
     return out[:, :, :s, :hd].transpose(0, 2, 1, 3)
+
+
+def paged_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos, *,
+                    scale: float, window: int | None = None,
+                    interpret: bool | None = None):
+    """Paged single-token decode attention — model layout in/out.
+
+    q (B, H, hd) with H = G * Hkv; k/v_pages (P, page, Hkv, hd) — the
+    pool layout models/attention.py scatters into; pos_pages (P, page)
+    i32 (-1 empty); page_table (B, maxp) i32 garbage-page padded; q_pos
+    (B,) i32.  Pads hd to 128 and the q group to a sublane multiple of
+    8, derives the per-lane visited-page count from q_pos, and hands the
+    kernel the (P, Hkv, page, hd) transpose.  Returns (B, H, hd).
+    """
+    interpret = on_cpu() if interpret is None else interpret
+    b, h, hd = q.shape
+    ps = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    gp = -(-g // 8) * 8
+    qg = q.reshape(b, hkv, g, hd)
+    qg = _pad_to(_pad_to(qg, 3, 128), 2, gp)
+    kt = _pad_to(k_pages.transpose(0, 2, 1, 3), 3, 128)
+    vt = _pad_to(v_pages.transpose(0, 2, 1, 3), 3, 128)
+    q_pos = q_pos.astype(jnp.int32)
+    n_used = jnp.minimum(q_pos // ps + 1, page_table.shape[1])
+    out = _pa.paged_attention_kernel(
+        qg, kt, vt, pos_pages.astype(jnp.int32),
+        page_table.astype(jnp.int32), q_pos, n_used, scale=scale,
+        window=window, interpret=interpret)
+    return out[:, :, :g, :hd].reshape(b, h, hd)
 
 
 def bellman_backup(phi_next, trans, cost, mi_t, *,

@@ -9,8 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "bellman_backup_ref", "ssd_chunk_ref",
-           "ramp_exit_ref"]
+__all__ = ["flash_attention_ref", "paged_attention_ref",
+           "bellman_backup_ref", "ssd_chunk_ref", "ramp_exit_ref"]
 
 
 def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
@@ -32,6 +32,39 @@ def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
     return out.reshape(b, h, s, hd).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, pos_pages, page_table, q_pos,
+                        n_used, *, scale: float, window: int | None = None):
+    """Paged single-token decode attention (paged_attention.py contract).
+
+    q (B, Hkv, G, hd); k/v_pages (P, Hkv, ps, hd); pos_pages (P, ps) i32
+    (-1 = empty slot); page_table (B, maxp) i32; q_pos (B,) i32;
+    n_used (B,) i32 — table entries at index >= n_used are ignored.
+    Returns (B, Hkv, G, hd); lanes with nothing attendable return zeros.
+    """
+    b, hkv, g, hd = q.shape
+    ps = k_pages.shape[2]
+    maxp = page_table.shape[1]
+    k = k_pages[page_table].astype(jnp.float32)     # (B, maxp, Hkv, ps, hd)
+    v = v_pages[page_table].astype(jnp.float32)
+    kpos = pos_pages[page_table]                    # (B, maxp, ps)
+    k = k.transpose(0, 2, 1, 3, 4).reshape(b, hkv, maxp * ps, hd)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(b, hkv, maxp * ps, hd)
+    valid = (kpos >= 0) & (kpos <= q_pos[:, None, None])
+    if window is not None:
+        valid &= kpos > (q_pos[:, None, None] - window)
+    valid &= jnp.arange(maxp)[None, :, None] < n_used[:, None, None]
+    valid = valid.reshape(b, 1, 1, maxp * ps)
+    logits = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                        k) * scale
+    # -1e30 (not -inf) keeps all-masked lanes NaN-free; the post-softmax
+    # where() then turns their uniform weights into zeros
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    out = jnp.einsum("bkgt,bktd->bkgd", w, v)
+    return out.astype(q.dtype)
 
 
 def bellman_backup_ref(phi_next, trans, cost, mi_t):

@@ -130,13 +130,19 @@ def _serve_traffic(args, cfg, params, casc) -> None:
     bank, sid_of = rt.build_bank(requests, make_strategy, (name, None))
     stepper = rt.EngineStepper(params, cfg, bank, n_lanes=args.lanes,
                                cache_len=args.cache_len,
-                               prompt_len=args.prompt_len)
+                               prompt_len=args.prompt_len,
+                               kv=args.kv, page_size=args.page_size,
+                               n_pages=args.pages,
+                               paged_kernel=args.paged_kernel)
     slo = args.slo_ms / 1e3
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos)
+    kv_desc = args.kv if args.kv == "ring" else (
+        f"paged ({stepper.pool.n_pages} pages x {args.page_size} tokens)")
     print(f"serving {len(requests)} {args.workload} requests "
           f"(rate {args.rate}/s x {args.duration}s) on {args.lanes} lanes, "
-          f"policy {name}, SLO ttft<={args.slo_ms:.0f}ms ...")
+          f"policy {name}, kv {kv_desc}, "
+          f"SLO ttft<={args.slo_ms:.0f}ms ...")
     metrics = server.serve(requests)
     s = metrics.summary(slo=slo)
 
@@ -160,10 +166,21 @@ def _serve_traffic(args, cfg, params, casc) -> None:
     _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
                           steps=metrics.steps, n_seg=len(cfg.segments),
                           lane_steps=metrics.lane_steps)
+    pool_stats = None
+    if stepper.pool is not None:
+        pool_stats = stepper.pool.stats()
+        print(f"kv pool: peak {pool_stats['pages_peak']}/"
+              f"{pool_stats['n_pages'] - 1} pages, "
+              f"prefix hit rate {100 * pool_stats['prefix_hit_rate']:.0f}% "
+              f"({pool_stats['shared_tokens']} shared tokens), "
+              f"{pool_stats['cow_splits']} COW splits, "
+              f"{pool_stats['evictions']} evictions")
     if args.json:
-        metrics.to_json(args.json, slo=slo,
-                        extra={"policy": name, "rate": args.rate,
-                               "lanes": args.lanes})
+        extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
+                 "kv": args.kv}
+        if pool_stats is not None:
+            extra["kv_pool"] = pool_stats
+        metrics.to_json(args.json, slo=slo, extra=extra)
         print(f"wrote metrics JSON to {args.json}")
 
 
@@ -200,6 +217,20 @@ def main() -> None:
     ap.add_argument("--eos", type=int, default=None,
                     help="token id that ends a stream early (lane is "
                          "recycled immediately)")
+    ap.add_argument("--kv", default="ring", choices=("ring", "paged"),
+                    help="decode KV memory: per-lane ring caches or the "
+                         "paged pool with shared-prefix reuse "
+                         "(DESIGN.md §8)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--kv paged)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="total pool pages (--kv paged; default: "
+                         "lanes x ceil(cache_len/page_size) + 1 — the "
+                         "ring-equivalent HBM budget)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="decode through the Pallas paged-attention "
+                         "kernel (--kv paged; TPU hot path — on CPU it "
+                         "runs in slow interpret mode)")
     ap.add_argument("--json", default=None,
                     help="write runtime metrics JSON here")
     args = ap.parse_args()
@@ -236,6 +267,9 @@ def main() -> None:
     if args.server:
         _serve_traffic(args, cfg, params, casc)
     else:
+        if args.kv != "ring":
+            print("note: --kv paged applies to --server traffic mode; "
+                  "the one-shot batch path always uses ring caches")
         _serve_batch(args, cfg, params, strat)
 
 

@@ -1,21 +1,35 @@
 """Attention mixers: GQA (with qk-norm / sliding window) and MLA
 (DeepSeek-V2 Multi-head Latent Attention), each with a training/prefill
-path and a single-token decode path against a ring-buffer KV cache.
+path and a single-token decode path against EITHER a per-lane
+ring-buffer KV cache or the paged KV pool (DESIGN.md §3, §8).
 
-Cache layout (fixed shapes — TPU-friendly, see DESIGN.md §3):
+Ring cache layout (fixed shapes — TPU-friendly):
   GQA:  k, v: (B, C, Hkv, hd); pos: (B, C) absolute positions (-1 empty).
   MLA:  c_kv: (B, C, lora); k_rope: (B, C, rope_dim); pos: (B, C).
 C = min(seq_len, window) — sliding windows bound the decode cache.
 
+Paged layout (serving.kvpool): the SAME leaf names with the lane axis
+replaced by a global page pool — ``k, v: (P, page, Hkv, hd)``, ``pos:
+(P, page)`` — plus a per-lane `PagedKV` handle carrying the page table
+and this token's (page, slot) write target.  Page 0 is the reserved
+garbage sink: lanes masked out by ``write_mask`` (early-exited or
+unoccupied) write their K/V there with position -1, so gathered garbage
+is never attended; unused page-table entries also point at page 0.  The
+holes a masked write leaves behind are therefore hidden by the SAME
+stored-position mask the ring path uses.
+
 The einsum/jnp path is what the multi-pod dry-run lowers (XLA fuses it and
 GSPMD shards it); the Pallas flash kernel (repro.kernels.flash_attention)
-is the TPU hot-path for prefill, validated against `kernels.ref` in
-interpret mode and enabled via ``use_flash=True``.
+is the TPU hot-path for prefill, the paged-attention kernel
+(repro.kernels.paged_attention, enabled via ``paged_kernel(True)``) the
+hot-path for paged decode — both validated against `kernels.ref` in
+interpret mode.
 """
 
 from __future__ import annotations
 
 import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +38,21 @@ from repro.models.common import causal_mask, rms_norm, rope, rope_cos_sin
 from repro.models.config import AttnConfig
 from repro.models.param import ParamDef
 
-__all__ = ["attn_defs", "attn_forward", "attn_decode", "init_cache_defs"]
+__all__ = ["attn_defs", "attn_forward", "attn_decode", "init_cache_defs",
+           "PagedKV", "paged_kernel"]
+
+# must agree with serving.kvpool.alloc.GARBAGE_PAGE (kept as a literal so
+# the model layer never imports the serving layer)
+_GARBAGE_PAGE = 0
+
+
+class PagedKV(NamedTuple):
+    """Per-token device view of a lane's paged-KV state (a pytree; the
+    host-side planner is serving.kvpool.KVPool)."""
+
+    page_table: jax.Array   # (B, lane_pages) i32, garbage-page padded
+    write_page: jax.Array   # (B,) i32 page receiving this token's KV
+    write_slot: jax.Array   # (B,) i32 slot within that page
 
 
 # --------------------------------------------------------------------------
@@ -273,21 +301,27 @@ def attn_forward(p: dict, x: jax.Array, positions: jax.Array,
     return y, {"k": k, "v": v}
 
 
-def attn_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
-                cfg: AttnConfig, eps: float = 1e-5):
-    """One-token decode against the ring-buffer cache.
+# Paged-decode attention implementation (DESIGN.md §8): "gather" (the
+# default — page-table gather + the same _sdpa as the ring path, what
+# XLA lowers everywhere) or the Pallas paged-attention kernel
+# (repro.kernels.paged_attention — page indirection inside the grid via
+# scalar prefetch; GQA bf16/f32 only, int8 and MLA fall back to gather).
+_PAGED_KERNEL = contextvars.ContextVar("repro_paged_kernel", default=False)
 
-    Args:
-      x: (B, 1, D) current token activations.
-      cache: {"k","v": (B,C,Hkv,hd), "pos": (B,C)}.
-      pos: (B,) absolute position of the new token.
 
-    Returns (y, new_cache).
-    """
-    if cfg.mla is not None:
-        return _mla_decode(p, x, cache, pos, cfg, eps)
-    b, _, d = x.shape
-    c = cache["k"].shape[1]
+@contextlib.contextmanager
+def paged_kernel(on: bool = True):
+    tok = _PAGED_KERNEL.set(on)
+    try:
+        yield
+    finally:
+        _PAGED_KERNEL.reset(tok)
+
+
+def _gqa_qkv_decode(p: dict, x: jax.Array, pos: jax.Array, cfg: AttnConfig,
+                    eps: float):
+    """The new token's q/k/v (+ qk-norm + rope), shared by the ring and
+    paged decode paths.  x (B,1,D) -> q/k/v (B,1,H*,hd)."""
     q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
     k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
     v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
@@ -295,8 +329,101 @@ def attn_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
         q = rms_norm({"scale": p["q_norm"]}, q, eps)
         k = rms_norm({"scale": p["k_norm"]}, k, eps)
     cos, sin = rope_cos_sin(pos[:, None], cfg.head_dim, cfg.rope_theta)
-    q = rope(q, cos, sin)
-    k = rope(k, cos, sin)
+    return rope(q, cos, sin), rope(k, cos, sin), v
+
+
+def _paged_targets(paged: PagedKV, pos: jax.Array, write_mask):
+    """(write_page, write_slot, stored_pos) with masked lanes redirected
+    to the garbage page / position -1 — the paged equivalent of the
+    engine's per-lane masked ring writes."""
+    wp = paged.write_page
+    pw = pos.astype(jnp.int32)
+    if write_mask is not None:
+        wp = jnp.where(write_mask, wp, _GARBAGE_PAGE)
+        pw = jnp.where(write_mask, pw, -1)
+    return wp, paged.write_slot, pw
+
+
+def _gqa_decode_paged(p, x, cache, pos, cfg: AttnConfig, eps,
+                      paged: PagedKV, write_mask):
+    """One-token GQA decode against the paged pool: scatter the new
+    token's K/V into the lane's (page, slot) write target, then attend
+    over the page-table gather of the pool."""
+    b = x.shape[0]
+    ps = cache["k"].shape[1]
+    q, k, v = _gqa_qkv_decode(p, x, pos, cfg, eps)
+    wp, ws, pw = _paged_targets(paged, pos, write_mask)
+    new_cache = dict(cache)
+    if "k_s" in cache:  # int8 pool path (models.quant)
+        from repro.models.quant import dequantize_rows, quantize_rows
+        kq, ks = quantize_rows(k[:, 0])
+        vq, vs = quantize_rows(v[:, 0])
+        new_cache["k"] = cache["k"].at[wp, ws].set(kq)
+        new_cache["v"] = cache["v"].at[wp, ws].set(vq)
+        new_cache["k_s"] = cache["k_s"].at[wp, ws].set(ks)
+        new_cache["v_s"] = cache["v_s"].at[wp, ws].set(vs)
+    else:
+        new_cache["k"] = cache["k"].at[wp, ws].set(
+            k[:, 0].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[wp, ws].set(
+            v[:, 0].astype(cache["v"].dtype))
+    new_cache["pos"] = cache["pos"].at[wp, ws].set(pw)
+
+    table = paged.page_table                                  # (B, maxp)
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    if _PAGED_KERNEL.get() and "k_s" not in cache:
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(
+            q[:, 0], new_cache["k"], new_cache["v"], new_cache["pos"],
+            table, pos.astype(jnp.int32), scale=scale, window=cfg.window)
+        out = out[:, None]                                    # (B,1,H,hd)
+    else:
+        if "k_s" in cache:
+            from repro.models.quant import dequantize_rows
+            k_full = dequantize_rows(new_cache["k"][table],
+                                     new_cache["k_s"][table], q.dtype)
+            v_full = dequantize_rows(new_cache["v"][table],
+                                     new_cache["v_s"][table], q.dtype)
+        else:
+            k_full = new_cache["k"][table].astype(q.dtype)
+            v_full = new_cache["v"][table].astype(q.dtype)
+        c = table.shape[1] * ps
+        k_full = k_full.reshape(b, c, cfg.n_kv_heads, cfg.head_dim)
+        v_full = v_full.reshape(b, c, cfg.n_kv_heads, -1)
+        pos_full = new_cache["pos"][table].reshape(b, c)
+        mask = causal_mask(pos[:, None], pos_full, cfg.window)
+        mask &= pos_full[:, None, :] >= 0
+        out = _sdpa(q, k_full, v_full, mask, scale)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, new_cache
+
+
+def attn_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                cfg: AttnConfig, eps: float = 1e-5,
+                paged: PagedKV | None = None, write_mask=None):
+    """One-token decode against the ring-buffer cache, or — when a
+    `PagedKV` handle is given — against the paged KV pool.
+
+    Args:
+      x: (B, 1, D) current token activations.
+      cache: ring {"k","v": (B,C,Hkv,hd), "pos": (B,C)} or paged pool
+        {"k","v": (P,page,Hkv,hd), "pos": (P,page)}.
+      pos: (B,) absolute position of the new token.
+      paged: page table + this token's write target (paged mode only).
+      write_mask: (B,) lanes whose write should land (paged mode; masked
+        lanes are redirected to the garbage page — ring callers mask via
+        the engine's `_mask_lane_writes` instead).
+
+    Returns (y, new_cache).
+    """
+    if cfg.mla is not None:
+        return _mla_decode(p, x, cache, pos, cfg, eps, paged, write_mask)
+    if paged is not None:
+        return _gqa_decode_paged(p, x, cache, pos, cfg, eps, paged,
+                                 write_mask)
+    b, _, d = x.shape
+    c = cache["k"].shape[1]
+    q, k, v = _gqa_qkv_decode(p, x, pos, cfg, eps)
 
     slot = (pos % c).astype(jnp.int32)                       # ring write
     bidx = jnp.arange(b)
@@ -374,14 +501,15 @@ def _mla_forward(p, x, positions, cfg: AttnConfig, eps):
     return y, {"c_kv": c_kv, "k_rope": k_rope[..., 0, :]}
 
 
-def _mla_decode(p, x, cache, pos, cfg: AttnConfig, eps):
+def _mla_decode(p, x, cache, pos, cfg: AttnConfig, eps,
+                paged: PagedKV | None = None, write_mask=None):
     """Absorbed-matmul MLA decode: attention runs in the compressed
-    kv_lora space — the cache stays (B, C, lora + rope), which is the
-    whole point of MLA (DESIGN.md §4)."""
+    kv_lora space — the cache stays (B, C, lora + rope) (ring) or
+    (P, page, lora + rope) (paged), which is the whole point of MLA
+    (DESIGN.md §4)."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
-    c = cache["c_kv"].shape[1]
     q_nope, q_rope = _mla_q(p, x, cfg, eps)                  # (B,1,H,*)
     dkv = x @ p["w_dkv"]
     c_new = rms_norm({"scale": p["kv_norm"]}, dkv[..., :m.kv_lora_rank], eps)
@@ -390,28 +518,54 @@ def _mla_decode(p, x, cache, pos, cfg: AttnConfig, eps):
     q_rope = rope(q_rope, cos, sin)
     k_rope_new = rope(k_rope_new[..., None, :], cos, sin)[..., 0, :]
 
-    slot = (pos % c).astype(jnp.int32)
-    bidx = jnp.arange(b)
+    if paged is not None:
+        widx = _paged_targets(paged, pos, write_mask)
+    else:
+        c = cache["c_kv"].shape[1]
+        widx = (jnp.arange(b), (pos % c).astype(jnp.int32),
+                pos.astype(jnp.int32))
+    wa, wb, pw = widx
     new_cache = dict(cache)
     if "c_kv_s" in cache:  # int8 latent cache (models.quant)
         from repro.models.quant import dequantize_rows, quantize_rows
         cq, cs = quantize_rows(c_new[:, 0])
         rq, rs = quantize_rows(k_rope_new[:, 0])
-        new_cache["c_kv"] = cache["c_kv"].at[bidx, slot].set(cq)
-        new_cache["c_kv_s"] = cache["c_kv_s"].at[bidx, slot].set(cs)
-        new_cache["k_rope"] = cache["k_rope"].at[bidx, slot].set(rq)
-        new_cache["k_rope_s"] = cache["k_rope_s"].at[bidx, slot].set(rs)
-        ckv = dequantize_rows(new_cache["c_kv"], new_cache["c_kv_s"])
-        krope = dequantize_rows(new_cache["k_rope"], new_cache["k_rope_s"])
+        new_cache["c_kv"] = cache["c_kv"].at[wa, wb].set(cq)
+        new_cache["c_kv_s"] = cache["c_kv_s"].at[wa, wb].set(cs)
+        new_cache["k_rope"] = cache["k_rope"].at[wa, wb].set(rq)
+        new_cache["k_rope_s"] = cache["k_rope_s"].at[wa, wb].set(rs)
+        if paged is None:
+            ckv = dequantize_rows(new_cache["c_kv"], new_cache["c_kv_s"])
+            krope = dequantize_rows(new_cache["k_rope"],
+                                    new_cache["k_rope_s"])
+        else:
+            ckv = krope = None   # dequantized after the page gather
     else:
-        ckv = cache["c_kv"].at[bidx, slot].set(
+        ckv = cache["c_kv"].at[wa, wb].set(
             c_new[:, 0].astype(cache["c_kv"].dtype))
-        krope = cache["k_rope"].at[bidx, slot].set(
+        krope = cache["k_rope"].at[wa, wb].set(
             k_rope_new[:, 0].astype(cache["k_rope"].dtype))
         new_cache["c_kv"] = ckv
         new_cache["k_rope"] = krope
-    new_pos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    new_pos = cache["pos"].at[wa, wb].set(pw)
     new_cache["pos"] = new_pos
+    if paged is not None:
+        # page-table gather back to the per-lane (B, C, ...) layout the
+        # absorbed-matmul score path below consumes unchanged; int8
+        # pools gather the lane's pages FIRST, then dequantize only
+        # those (never the whole pool)
+        table = paged.page_table
+        c = table.shape[1] * cache["c_kv"].shape[1]
+        if "c_kv_s" in cache:
+            from repro.models.quant import dequantize_rows as _deq
+            ckv = _deq(new_cache["c_kv"][table],
+                       new_cache["c_kv_s"][table]).reshape(b, c, -1)
+            krope = _deq(new_cache["k_rope"][table],
+                         new_cache["k_rope_s"][table]).reshape(b, c, -1)
+        else:
+            ckv = ckv[table].reshape(b, c, -1)
+            krope = krope[table].reshape(b, c, -1)
+        new_pos = new_pos[table].reshape(b, c)
 
     # Absorb W_uk into q: q_c[b,h,r] = sum_n q_nope[b,h,n] W_uk[r, h, n]
     w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)

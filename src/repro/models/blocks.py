@@ -85,20 +85,28 @@ def block_forward(p: dict, x: jax.Array, positions: jax.Array,
 
 
 def block_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
-                 cfg: BlockConfig, eps: float = 1e-5):
-    """One-token step.  x (B,1,D); returns (y, new_cache, aux)."""
+                 cfg: BlockConfig, eps: float = 1e-5,
+                 paged=None, write_mask=None):
+    """One-token step.  x (B,1,D); returns (y, new_cache, aux).
+
+    ``paged``/``write_mask`` switch the attention cache to the paged KV
+    pool (attention.PagedKV); SSM state stays lane-indexed either way —
+    its per-lane masking is the engine's job.
+    """
     aux: dict = {}
     xn = rms_norm(p["norm1"], x, eps)
     new_cache: dict = {}
     if cfg.mixer == "attn":
         mix, new_cache["attn"] = attention.attn_decode(
-            p["attn"], xn, cache["attn"], pos, cfg.attn, eps)
+            p["attn"], xn, cache["attn"], pos, cfg.attn, eps,
+            paged=paged, write_mask=write_mask)
     elif cfg.mixer == "ssm":
         mix, new_cache["ssm"] = ssm_lib.ssm_decode(
             p["ssm"], xn, cache["ssm"], cfg.ssm, eps)
     else:
         ya, new_cache["attn"] = attention.attn_decode(
-            p["attn"], xn, cache["attn"], pos, cfg.attn, eps)
+            p["attn"], xn, cache["attn"], pos, cfg.attn, eps,
+            paged=paged, write_mask=write_mask)
         ys, new_cache["ssm"] = ssm_lib.ssm_decode(
             p["ssm"], xn, cache["ssm"], cfg.ssm, eps)
         mix = 0.5 * (rms_norm(p["attn_out_norm"], ya, eps)

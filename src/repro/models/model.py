@@ -30,8 +30,8 @@ from repro.models.param import ParamDef
 from repro.sharding.ctx import constrain_batch
 
 __all__ = ["model_defs", "forward_train", "prefill", "decode_step",
-           "decode_segment", "cache_specs", "unembed", "decode_unroll",
-           "ramp_readout"]
+           "decode_segment", "cache_specs", "paged_cache_specs", "unembed",
+           "decode_unroll", "ramp_readout"]
 
 # Decode-layer execution (perf hillclimb lever, EXPERIMENTS.md §Perf):
 # scan (default) keeps HLO small; unrolled decode removes the per-step
@@ -245,11 +245,15 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache_len: int, *,
 # --------------------------------------------------------------------------
 
 def decode_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
-                   cache_seg, pos: jax.Array):
+                   cache_seg, pos: jax.Array, paged=None, write_mask=None):
     """Run segment `si` for one token.  x (B,1,D) -> (x', new_cache,
     readout) where readout is None for ramp-less segments and otherwise
     the full `ramp_readout` pair (logits (B,V), loss proxy (B,)) — the
-    serving engine consumes both, so the head matmul runs exactly once."""
+    serving engine consumes both, so the head matmul runs exactly once.
+
+    ``paged`` (attention.PagedKV) + ``write_mask`` route the attention
+    layers at the paged KV pool; the per-lane page table and write
+    target are shared by every layer (page ids are global)."""
     seg = cfg.segments[si]
     p_seg = params["segments"][si]["blocks"]
 
@@ -259,14 +263,17 @@ def decode_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
             p_layer = jax.tree.map(lambda a, li=li: a[li], p_seg)
             cache_layer = jax.tree.map(lambda a, li=li: a[li], cache_seg)
             x, nc, _ = blocks.block_decode(p_layer, x, cache_layer, pos,
-                                           seg.block, cfg.norm_eps)
+                                           seg.block, cfg.norm_eps,
+                                           paged=paged,
+                                           write_mask=write_mask)
             layer_caches.append(nc)
         new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *layer_caches)
     else:
         def body(h, xs):
             p_layer, cache_layer = xs
             y, new_cache, _ = blocks.block_decode(
-                p_layer, h, cache_layer, pos, seg.block, cfg.norm_eps)
+                p_layer, h, cache_layer, pos, seg.block, cfg.norm_eps,
+                paged=paged, write_mask=write_mask)
             return y, new_cache
 
         x, new_cache = jax.lax.scan(body, x, (p_seg, cache_seg))
@@ -300,15 +307,37 @@ def decode_step(params, cfg: ModelConfig, batch: dict, caches, pos):
     return logits, new_caches, jnp.stack(node_losses, axis=1)
 
 
+def _stack_specs(cd: dict, n_layers: int):
+    return jax.tree.map(
+        lambda sd: ((n_layers,) + sd[0], sd[1]),
+        cd, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
 def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> list:
     """(shape, dtype) spec tree for the whole decode cache (per segment,
     stacked over the segment's layers)."""
+    return [_stack_specs(
+        blocks.cache_defs(seg.block, cfg.d_model, batch, cache_len),
+        seg.n_layers) for seg in cfg.segments]
+
+
+def paged_cache_specs(cfg: ModelConfig, n_lanes: int, n_pages: int,
+                      page_size: int) -> list:
+    """Spec tree for the PAGED decode cache (DESIGN.md §8): attention
+    leaves swap the lane axis for the global page pool — ``(L, P,
+    page_size, ...)`` — while SSM state (no sequence axis to page) stays
+    lane-indexed ``(L, n_lanes, ...)``.  Leaf names match `cache_specs`
+    so the quant/dtype plumbing is shared."""
     out = []
     for seg in cfg.segments:
-        cd = blocks.cache_defs(seg.block, cfg.d_model, batch, cache_len)
-        stacked = jax.tree.map(
-            lambda sd: ((seg.n_layers,) + sd[0], sd[1]),
-            cd, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
-            and isinstance(x[0], tuple))
-        out.append(stacked)
+        pooled = blocks.cache_defs(seg.block, cfg.d_model, n_pages,
+                                   page_size)
+        laned = blocks.cache_defs(seg.block, cfg.d_model, n_lanes, 1)
+        entry = {}
+        if "attn" in pooled:
+            entry["attn"] = pooled["attn"]
+        if "ssm" in laned:
+            entry["ssm"] = laned["ssm"]
+        out.append(_stack_specs(entry, seg.n_layers))
     return out

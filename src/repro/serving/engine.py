@@ -80,13 +80,24 @@ class GenerationStats:
     segments_full: int              # full-depth reference
 
 
-def _mask_lane_writes(new_cache, old_cache, active: jax.Array):
+def _mask_lane_writes(new_cache, old_cache, active: jax.Array,
+                      paged: bool = False):
     """Keep inactive lanes' cache bits: leaves are layer-stacked
-    ``(L, B, ...)``, so broadcast the lane mask over axis 1."""
+    ``(L, B, ...)``, so broadcast the lane mask over axis 1.
+
+    In paged mode the attention leaves are page-pool shaped (no lane
+    axis) and the decode path already redirected masked lanes' writes to
+    the garbage page — only the lane-indexed SSM state still needs the
+    where()."""
     def sel(n, o):
         return jnp.where(active.reshape((1, -1) + (1,) * (n.ndim - 2)),
                          n, o)
-    return jax.tree.map(sel, new_cache, old_cache)
+    if not paged:
+        return jax.tree.map(sel, new_cache, old_cache)
+    out = dict(new_cache)
+    if "ssm" in new_cache:
+        out["ssm"] = jax.tree.map(sel, new_cache["ssm"], old_cache["ssm"])
+    return out
 
 
 def bank_observe(strategies, states, node, losses, preds, active, sid):
@@ -118,7 +129,8 @@ def bank_serve(strategies, states, sid):
 
 def make_token_step(params, cfg: ModelConfig, strategies, *,
                     jit: bool = True, donate: bool | None = None,
-                    carry_state: bool = False):
+                    carry_state: bool = False, paged: bool = False,
+                    paged_kernel: bool = False):
     """Build the one-token segment sweep shared by `Engine.generate` and
     the continuous-batching runtime (`repro.serving.runtime`).
 
@@ -148,16 +160,37 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
         `init_lane` — which is also what guarantees, for both kinds, a
         recycled lane can never observe its predecessor's state.
 
+      paged: the caches are the paged KV pool (models.model
+        `paged_cache_specs` layout) and the step takes a
+        `models.attention.PagedKV` handle after ``sid`` — the per-lane
+        page tables plus this token's (page, slot) write targets, both
+        planned host-side by `serving.kvpool.KVPool.prepare_step`.
+        Attention writes of exited/unoccupied lanes are redirected to
+        the garbage page inside the decode (same visibility semantics
+        as the ring path's masked writes).
+      paged_kernel: trace the paged decode against the Pallas
+        paged-attention kernel instead of the jnp page-table gather.
+        The `attention.paged_kernel` contextvar is read at TRACE time,
+        so this must be decided when the step is built — flipping the
+        context manager around calls of an already-compiled step is a
+        silent no-op.  Off by default: on CPU the kernel runs in
+        interpret mode (correctness only); on TPU it is the hot path.
+
     Returns ``step(tok (B,) i32, caches, pos (B,) i32, occupied (B,)
-    bool, sid (B,) i32[, states]) -> (next_tok, new_caches, served_node,
-    seg_batch, seg_policy[, states])`` — seg_* are int32 scalars
-    counting this token's launched segments and per-lane probed
+    bool, sid (B,) i32[, kv][, states]) -> (next_tok, new_caches,
+    served_node, seg_batch, seg_policy[, states])`` — seg_* are int32
+    scalars counting this token's launched segments and per-lane probed
     segments.
     """
+    import contextlib
+
+    from repro.models.attention import paged_kernel as _paged_kernel_ctx
     from repro.strategy.base import reset_lanes
     strategies = tuple(_check_online(s) for s in strategies)
+    kernel_ctx = (_paged_kernel_ctx if (paged and paged_kernel)
+                  else contextlib.nullcontext)
 
-    def step(tok, caches, pos, occupied, sid, states_in=None):
+    def step(tok, caches, pos, occupied, sid, kv=None, states_in=None):
         b = tok.shape[0]
         x = params["embed"]["table"][tok][:, None, :]
         if carry_state:
@@ -178,34 +211,42 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
         seg_policy = jnp.zeros((), jnp.int32)
         new_caches = list(caches)
         node = 0
-        for si, seg in enumerate(cfg.segments):
-            seg_batch = seg_batch + active.any().astype(jnp.int32)
-            seg_policy = seg_policy + active.sum(dtype=jnp.int32)
+        # context entered at TRACE time: selects which attention impl
+        # (jnp gather vs Pallas kernel) gets traced into the program
+        with kernel_ctx():
+            for si, seg in enumerate(cfg.segments):
+                seg_batch = seg_batch + active.any().astype(jnp.int32)
+                seg_policy = seg_policy + active.sum(dtype=jnp.int32)
 
-            def run(ops, si=si, node=node):
-                x, cache, states, act, best = ops
-                x2, nc, ro = M.decode_segment(params, cfg, si, x, cache,
-                                              pos)
-                nc = _mask_lane_writes(nc, cache, act)
-                if ro is not None:
-                    # ramp readout: serve-from-this-node logits for lanes
-                    # whose served node is the current one (one head
-                    # matmul via models.model.ramp_readout; recall
-                    # refreshes happen via serve()'s argmin bookkeeping)
-                    logits, ell = ro
-                    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                    states, act = bank_observe(strategies, states, node,
-                                                ell, preds, act, sid)
-                    take = bank_serve(strategies, states, sid) == node
-                    best = jnp.where(take[:, None],
-                                     logits.astype(jnp.float32), best)
-                return (x2, nc, states, act, best)
+                def run(ops, si=si, node=node):
+                    x, cache, states, act, best = ops
+                    x2, nc, ro = M.decode_segment(
+                        params, cfg, si, x, cache, pos,
+                        paged=kv if paged else None,
+                        write_mask=act if paged else None)
+                    nc = _mask_lane_writes(nc, cache, act, paged=paged)
+                    if ro is not None:
+                        # ramp readout: serve-from-this-node logits for
+                        # lanes whose served node is the current one (one
+                        # head matmul via models.model.ramp_readout;
+                        # recall refreshes happen via serve()'s argmin
+                        # bookkeeping)
+                        logits, ell = ro
+                        preds = jnp.argmax(logits, axis=-1).astype(
+                            jnp.int32)
+                        states, act = bank_observe(strategies, states,
+                                                   node, ell, preds, act,
+                                                   sid)
+                        take = bank_serve(strategies, states, sid) == node
+                        best = jnp.where(take[:, None],
+                                         logits.astype(jnp.float32), best)
+                    return (x2, nc, states, act, best)
 
-            ops = (x, caches[si], states, active, best_logits)
-            x, new_caches[si], states, active, best_logits = jax.lax.cond(
-                active.any(), run, lambda o: o, ops)
-            if seg.ramp:
-                node += 1
+                ops = (x, caches[si], states, active, best_logits)
+                x, new_caches[si], states, active, best_logits = \
+                    jax.lax.cond(active.any(), run, lambda o: o, ops)
+                if seg.ramp:
+                    node += 1
 
         def run_head(ops):
             x, states, act, best = ops

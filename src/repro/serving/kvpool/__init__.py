@@ -1,0 +1,23 @@
+"""Paged KV-cache subsystem (DESIGN.md §8).
+
+Block-granular KV memory for the continuous-batching runtime: instead of
+one private ``lanes x cache_len`` ring buffer per attention layer, every
+layer's K/V lives in a global pool of fixed-size PAGES and each lane
+holds a page TABLE (list of page ids).  Pages are refcounted, so lanes
+whose prompts share a prefix point at the SAME pages (copy-on-write when
+one of them has to append into a shared page), and admission is gated by
+the free-page budget rather than a fixed lane width.
+
+Host/device split: all allocation DECISIONS (free list, refcounts,
+prefix hashing, COW planning) are plain-Python host state in this
+package; everything that touches KV bytes (page gather for attention,
+prompt scatter at admission, page copies for COW) happens on device
+through jit-compatible pytrees — see `KVPool` and
+`models.attention.attn_decode`'s paged path.
+"""
+
+from repro.serving.kvpool.alloc import PageAllocator, PrefixCache
+from repro.serving.kvpool.pool import KVPool, PoolExhausted, StepPlan
+
+__all__ = ["PageAllocator", "PrefixCache", "KVPool", "PoolExhausted",
+           "StepPlan"]

@@ -3,8 +3,10 @@ Strategy engine (DESIGN.md §7).
 
 The runtime turns the one-shot `Engine` into an open-loop server:
 streaming `Request`s queue up (`request.py`), a fixed-width lane
-scheduler admits them into the batched decode step and recycles a lane
-the moment its request completes (`scheduler.py`), synthetic traffic
+scheduler admits them into the batched decode step — gated, in paged-KV
+mode (`repro.serving.kvpool`, DESIGN.md §8), by the pool's free-page
+budget — and recycles a lane the moment its request completes
+(`scheduler.py`), synthetic traffic
 generators drive it (`workload.py`), and serving metrics — throughput,
 token-latency percentiles, TTFT, goodput under an SLO, segments saved —
 come out as JSON (`metrics.py`).  `server.py` ties the loop together

@@ -1,26 +1,35 @@
 """Lane scheduling: fixed-width slots, immediate recycling, static
-shapes (DESIGN.md §7).
+shapes (DESIGN.md §7; paged KV §8).
 
 Two layers:
 
   * `LaneScheduler` — the pure allocator.  `n_lanes` slots; a lane is
     recycled the moment its request finishes (or its stream hits EOS);
-    admission pops the `RequestQueue` into free lanes.  All bookkeeping
-    is host-side numpy, so the device batch keeps one static shape and
-    occupancy is just a mask.
+    admission pops the `RequestQueue` into free lanes, optionally gated
+    by a ``can_admit`` callback (the paged-KV stepper's page-budget
+    reservation: when the pool can't cover a request's worst case, the
+    request STAYS QUEUED — head-of-line, deterministic — instead of
+    being dropped).  All bookkeeping is host-side numpy, so the device
+    batch keeps one static shape and occupancy is just a mask.
 
   * `EngineStepper` — the device-state surgery for the REAL model.  It
     owns the batched decode caches / current tokens / positions / the
     carried strategy-bank states, admits one request by prefilling it
     at batch 1 and pytree-scattering the results into the lane slot, and
     steps all lanes through the shared `serving.engine.make_token_step`
-    program (carry_state mode).  A recycled lane's strategy state is
-    sliced back to fresh-init at admission via `strategy.init_lane`;
-    per-token strategies are additionally re-sliced at every token
-    boundary inside the step, while ``persistent = True`` strategies
-    carry state across a request's tokens and rely on the admission
-    reset alone — either way, state from a previous occupant can never
-    leak into the next request.
+    program (carry_state mode).  ``kv="paged"`` swaps the per-lane ring
+    caches for the `serving.kvpool` page pool: admission scatters the
+    prefill KV into allocated pages (shared-prefix tokens skip straight
+    to the sink — their pages already hold the bytes), each token step
+    first executes the pool's host-planned page ops (fresh-page position
+    resets, copy-on-write splits) and then decodes against per-lane page
+    tables.  A recycled lane's strategy state is sliced back to
+    fresh-init at admission via `strategy.init_lane`; per-token
+    strategies are additionally re-sliced at every token boundary inside
+    the step, while ``persistent = True`` strategies carry state across
+    a request's tokens and rely on the admission reset alone — either
+    way, state from a previous occupant can never leak into the next
+    request.
 
 Per-lane masked cache writes inside the token step make each lane's
 output stream a function of its own request only, so the scheduler's
@@ -35,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.models.attention import PagedKV
 from repro.serving.engine import make_token_step
 from repro.serving.runtime.request import Request, RequestQueue
 from repro.strategy.base import init_lane
@@ -63,19 +73,27 @@ class LaneScheduler:
         return [i for i, r in enumerate(self.lane_req) if r is None]
 
     def admit(self, queue: RequestQueue, sid_of, *,
-              static_batching: bool = False) -> list[tuple[int, Request]]:
+              static_batching: bool = False,
+              can_admit=None) -> list[tuple[int, Request]]:
         """Pop queued requests into free lanes; returns assignments.
 
         ``static_batching=True`` reproduces the fixed-batch
         `Engine.generate` discipline (the bench baseline): a new batch
         is admitted only once EVERY lane is free, so stragglers idle the
         whole width.
+
+        ``can_admit(req)`` gates (and RESERVES resources for) each pop —
+        the paged-KV page budget.  A False verdict stops admission at
+        the queue head: the request waits, later arrivals wait behind it
+        (deterministic head-of-line order; no starvation, no drops).
         """
         if static_batching and self.busy():
             return []
         out = []
         for lane in self.free_lanes():
             if not len(queue):
+                break
+            if can_admit is not None and not can_admit(queue.peek()):
                 break
             req = queue.pop()
             self.lane_req[lane] = req
@@ -117,7 +135,11 @@ class EngineStepper:
     emits_tokens = True    # `emitted` really is token ids (EOS applies)
 
     def __init__(self, params, cfg, strategies: tuple, *, n_lanes: int,
-                 cache_len: int, prompt_len: int, jit: bool = True):
+                 cache_len: int, prompt_len: int, jit: bool = True,
+                 kv: str = "ring", page_size: int = 16,
+                 n_pages: int | None = None, paged_kernel: bool = False):
+        if kv not in ("ring", "paged"):
+            raise ValueError(f"unknown kv mode {kv!r} (ring|paged)")
         self.params = params
         self.cfg = cfg
         self.strategies = strategies
@@ -125,31 +147,126 @@ class EngineStepper:
         self.cache_len = int(cache_len)
         self.prompt_len = int(prompt_len)
         self.full_depth = len(cfg.segments)
+        self.kv = kv
         self._step = make_token_step(params, cfg, strategies, jit=jit,
-                                     donate=False, carry_state=True)
+                                     donate=False, carry_state=True,
+                                     paged=(kv == "paged"),
+                                     paged_kernel=paged_kernel)
+        if kv == "paged":
+            from repro.serving.kvpool import KVPool
+            lane_pages = -(-self.cache_len // page_size)
+            self.pool = KVPool(n_lanes=self.n_lanes, page_size=page_size,
+                               lane_pages=lane_pages, n_pages=n_pages)
+            admit_fn = self._make_paged_admit()
+            self._prep = jax.jit(self._paged_prep) if jit \
+                else self._paged_prep
+        else:
+            self.pool = None
 
-        def admit_fn(caches, tok, pos, prompt, lane):
-            logits, pc, _, npos = M.prefill(params, cfg,
-                                            {"tokens": prompt}, cache_len)
-            t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+            def admit_fn(caches, tok, pos, prompt, lane):
+                logits, pc, _, npos = M.prefill(params, cfg,
+                                                {"tokens": prompt},
+                                                cache_len)
+                t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
 
-            def scatter(full, one):
-                return full.at[:, lane].set(one[:, 0].astype(full.dtype))
+                def scatter(full, one):
+                    return full.at[:, lane].set(one[:, 0].astype(full.dtype))
 
-            caches = jax.tree.map(scatter, caches, pc)
-            return (caches, tok.at[lane].set(t0),
-                    pos.at[lane].set(npos[0].astype(jnp.int32)))
+                caches = jax.tree.map(scatter, caches, pc)
+                return (caches, tok.at[lane].set(t0),
+                        pos.at[lane].set(npos[0].astype(jnp.int32)))
 
         self._admit = jax.jit(admit_fn) if jit else admit_fn
         self.alloc()
 
+    # ---- paged device programs ----------------------------------------
+
+    def _make_paged_admit(self):
+        params, cfg, prompt_len = self.params, self.cfg, self.prompt_len
+
+        def admit_fn(caches, tok, pos, prompt, lane, dest_page, dest_slot,
+                     pos_vals, new_pages):
+            # prefill at cache_len == prompt_len: the ring layout is the
+            # identity (slot t <- position t), so the per-token page
+            # scatter below reads positions straight through
+            logits, pc, _, npos = M.prefill(params, cfg,
+                                            {"tokens": prompt}, prompt_len)
+            t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+            out = []
+            for si in range(len(cfg.segments)):
+                seg_c = dict(caches[si])
+                if "attn" in seg_c:
+                    attn = dict(seg_c["attn"])
+                    # gate stale bytes of freshly allocated pages
+                    # (garbage-page padding makes this idempotent)
+                    attn["pos"] = attn["pos"].at[:, new_pages].set(-1)
+                    for name, pool_leaf in attn.items():
+                        if name == "pos":
+                            attn["pos"] = attn["pos"].at[
+                                :, dest_page, dest_slot].set(pos_vals)
+                        else:
+                            attn[name] = pool_leaf.at[
+                                :, dest_page, dest_slot].set(
+                                    pc[si]["attn"][name][:, 0].astype(
+                                        pool_leaf.dtype))
+                    seg_c["attn"] = attn
+                if "ssm" in seg_c:
+                    seg_c["ssm"] = jax.tree.map(
+                        lambda full, one: full.at[:, lane].set(
+                            one[:, 0].astype(full.dtype)),
+                        seg_c["ssm"], pc[si]["ssm"])
+                out.append(seg_c)
+            return (out, tok.at[lane].set(t0),
+                    pos.at[lane].set(npos[0].astype(jnp.int32)))
+
+        return admit_fn
+
+    @staticmethod
+    def _paged_prep(caches, fresh, cow_src, cow_dst):
+        """Pre-step page ops: COW page copies (src -> dst across every
+        attention layer — page ids are global) and fresh-page position
+        resets.  Idle entries are garbage-page pairs (0 -> 0), which
+        copy the sink onto itself."""
+        out = []
+        for seg_c in caches:
+            seg_c = dict(seg_c)
+            if "attn" in seg_c:
+                attn = {name: leaf.at[:, cow_dst].set(leaf[:, cow_src])
+                        for name, leaf in seg_c["attn"].items()}
+                attn["pos"] = attn["pos"].at[:, fresh].set(-1)
+                seg_c["attn"] = attn
+            out.append(seg_c)
+        return out
+
+    # ---- lane state ----------------------------------------------------
+
     def alloc(self) -> None:
         """(Re)build empty lane state: zero caches, fresh bank states."""
-        specs = M.cache_specs(self.cfg, self.n_lanes, self.cache_len)
+        if self.pool is not None:
+            self.pool.reset()
+            specs = M.paged_cache_specs(self.cfg, self.n_lanes,
+                                        self.pool.n_pages,
+                                        self.pool.page_size)
+        else:
+            specs = M.cache_specs(self.cfg, self.n_lanes, self.cache_len)
         self.caches = [_materialize_cache(s) for s in specs]
         self.tok = jnp.zeros((self.n_lanes,), jnp.int32)
         self.pos = jnp.zeros((self.n_lanes,), jnp.int32)
         self.states = tuple(s.init(self.n_lanes) for s in self.strategies)
+
+    def reserve(self, req: Request) -> bool:
+        """Admission gate (the scheduler's ``can_admit``): reserve the
+        request's worst-case page need.  Ring mode has nothing to
+        reserve — lane availability is the only constraint."""
+        if self.pool is None:
+            return True
+        return self.pool.reserve(req.prompt, req.max_tokens)
+
+    def release(self, lane: int) -> None:
+        """Return the lane's pages to the pool (prefix-cache refs keep
+        shared prompt pages warm).  Ring lanes have nothing to return."""
+        if self.pool is not None:
+            self.pool.release(lane)
 
     def admit(self, lane: int, req: Request) -> None:
         """Prefill the request at batch 1 and scatter it into ``lane``."""
@@ -158,21 +275,41 @@ class EngineStepper:
                 f"request {req.rid}: prompt length {req.prompt.shape[0]} "
                 f"!= stepper bucket {self.prompt_len} (static shapes)")
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        self.caches, self.tok, self.pos = self._admit(
-            self.caches, self.tok, self.pos, prompt,
-            jnp.int32(lane))
+        if self.pool is not None:
+            plan = self.pool.admit(lane, req.prompt, req.max_tokens)
+            self.caches, self.tok, self.pos = self._admit(
+                self.caches, self.tok, self.pos, prompt, jnp.int32(lane),
+                jnp.asarray(plan.dest_page), jnp.asarray(plan.dest_slot),
+                jnp.asarray(plan.pos_vals), jnp.asarray(plan.new_pages))
+        else:
+            self.caches, self.tok, self.pos = self._admit(
+                self.caches, self.tok, self.pos, prompt,
+                jnp.int32(lane))
         # pytree-sliced per-lane reset: the recycled lane starts from
         # fresh strategy state no matter what its predecessor observed
         self.states = tuple(init_lane(s, st, lane)
                             for s, st in zip(self.strategies, self.states))
 
     def warmup(self) -> None:
-        """Compile the admit + step programs off the serving clock."""
+        """Compile the admit + prep + step programs off the serving
+        clock."""
         dummy = Request(rid=-1, prompt=np.zeros(self.prompt_len, np.int32),
                         max_tokens=1)
+        if not self.reserve(dummy):
+            from repro.serving.kvpool import PoolExhausted
+            raise PoolExhausted(
+                f"kv pool of {self.pool.n_pages} pages x "
+                f"{self.pool.page_size} tokens cannot fit even one "
+                f"{self.prompt_len}-token request — raise --pages or "
+                "--page-size")
         self.admit(0, dummy)
         occ = np.zeros((self.n_lanes,), bool)
         occ[0] = True
+        if self.pool is not None:
+            # compile the page-ops program too (an all-garbage plan is a
+            # no-op: it copies the sink onto itself)
+            idle = jnp.zeros((self.n_lanes,), jnp.int32)
+            self.caches = self._prep(self.caches, idle, idle, idle)
         self.step(occ, np.zeros((self.n_lanes,), np.int32))
         self.alloc()
 
@@ -183,9 +320,26 @@ class EngineStepper:
         seg_policy)`` — a single device sync for the whole token.
         """
         occ = jnp.asarray(occupied, bool)
-        tok, self.caches, served, sb, sp, self.states = self._step(
-            self.tok, self.caches, self.pos, occ,
-            jnp.asarray(sid, jnp.int32), self.states)
+        if self.pool is not None:
+            plan = self.pool.prepare_step(occupied)
+            if plan.fresh.any() or plan.cow_dst.any():
+                # page ops only when the plan has any (steady-state
+                # mid-page decode skips the dispatch + pool rewrite)
+                self.caches = self._prep(self.caches,
+                                         jnp.asarray(plan.fresh),
+                                         jnp.asarray(plan.cow_src),
+                                         jnp.asarray(plan.cow_dst))
+            kv = PagedKV(page_table=jnp.asarray(self.pool.table),
+                         write_page=jnp.asarray(plan.write_page),
+                         write_slot=jnp.asarray(plan.write_slot))
+            tok, self.caches, served, sb, sp, self.states = self._step(
+                self.tok, self.caches, self.pos, occ,
+                jnp.asarray(sid, jnp.int32), kv, self.states)
+            self.pool.note_written(occupied)
+        else:
+            tok, self.caches, served, sb, sp, self.states = self._step(
+                self.tok, self.caches, self.pos, occ,
+                jnp.asarray(sid, jnp.int32), None, self.states)
         self.tok = tok
         self.pos = self.pos + occ.astype(jnp.int32)
         tok_h, served_h, sb_h, sp_h = jax.device_get((tok, served, sb, sp))

@@ -226,16 +226,33 @@ class Server:
         self._t0 = time.perf_counter()
         metrics.t_start = self._now()
 
+        # paged-KV steppers gate admission on their free-page budget
+        # (reserve-at-pop); a blocked request waits at the queue head
+        gate = getattr(stepper, "reserve", None)
+        release = getattr(stepper, "release", None)
+
         while pending or len(queue) or sched.busy():
             now = self._now()
             while pending and pending[0].arrival <= now:
                 queue.push(pending.pop(0))
             for lane, req in sched.admit(
                     queue, self.sid_of,
-                    static_batching=self.static_batching):
+                    static_batching=self.static_batching,
+                    can_admit=gate):
                 stepper.admit(lane, req)
                 metrics.on_admit(req, self._now())
             if not sched.busy():
+                if not pending:
+                    # nothing running, nothing arriving — but the queue
+                    # may still hold page-blocked requests; one more
+                    # admit pass runs next iteration after lanes/pages
+                    # freed (len(queue) keeps the loop alive).  Guard
+                    # against a request that can NEVER be admitted.
+                    if len(queue):
+                        raise RuntimeError(
+                            "admission deadlock: queued requests but no "
+                            "lane busy and no pending arrivals")
+                    break
                 # every lane idle and nothing admissible: jump (sim) or
                 # sleep (real) to the next arrival
                 self._advance_to(pending[0].arrival)
@@ -261,6 +278,8 @@ class Server:
                     done = True  # stream early-exit: recycle immediately
                 if done:
                     metrics.on_finish(req.rid, tnow)
+                    if release is not None:
+                        release(lane)   # paged KV: pages back to the pool
                     sched.release(lane)
 
         metrics.t_end = self._now()

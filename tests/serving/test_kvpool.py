@@ -1,0 +1,442 @@
+"""Paged KV-cache subsystem tests (DESIGN.md §8):
+
+  * allocator invariants — atomic alloc, refcounts, double-free guard,
+  * prefix cache — longest-match lookup, LRU eviction, ref accounting,
+  * pool planning — reservation math, COW split refcount correctness,
+    allocator exhaustion surfaces as a False reservation (queued) and
+    never as a mid-stream failure,
+  * runtime integration on the real smoke model — shared-prefix
+    requests use fewer pages than disjoint ones while emitting tokens
+    IDENTICAL to the ring-cache path, and a pool too small for the
+    offered load queues requests instead of dropping them.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import strategy
+from repro.serving import runtime as rt
+from repro.serving.kvpool import KVPool, PageAllocator, PoolExhausted
+from repro.serving.kvpool.alloc import PrefixCache
+from repro.serving.runtime.request import Request
+
+
+# --------------------------------------------------------------------------
+# allocator
+# --------------------------------------------------------------------------
+
+def test_allocator_alloc_is_atomic_and_deterministic():
+    a = PageAllocator(6)          # pages 1..5 usable (0 = garbage sink)
+    assert a.free_count == 5
+    got = a.alloc(3)
+    assert got == [1, 2, 3]
+    assert a.alloc(3) is None     # only 2 left: nothing handed out
+    assert a.free_count == 2
+    assert a.alloc(0) == []
+
+
+def test_allocator_refcounts_and_double_free_guard():
+    a = PageAllocator(4)
+    (pid,) = a.alloc(1)
+    a.incref(pid)
+    assert a.refcount(pid) == 2
+    assert not a.decref(pid)      # still held
+    assert a.decref(pid)          # now free
+    with pytest.raises(ValueError, match="double free"):
+        a.decref(pid)
+    with pytest.raises(ValueError, match="incref of free"):
+        a.incref(pid)
+    with pytest.raises(ValueError, match="garbage sink"):
+        a.decref(0)
+    assert a.pages_in_use == 0
+
+
+def test_allocator_free_pages_recycle():
+    a = PageAllocator(3)
+    p1 = a.alloc(2)
+    for pid in p1:
+        a.decref(pid)
+    assert sorted(a.alloc(2)) == sorted(p1)
+
+
+# --------------------------------------------------------------------------
+# prefix cache
+# --------------------------------------------------------------------------
+
+def test_prefix_cache_longest_match_and_refs():
+    a = PageAllocator(10)
+    pc = PrefixCache(a)
+    prompt = np.arange(10, dtype=np.int32)
+    pages = a.alloc(3)            # 2 full pages of 4 + partial tail of 2
+    pc.insert(prompt, pages, page_size=4)
+    # cache holds one ref per page per entry: page 0 of the chain is in
+    # three entries (len-4, len-8, len-10), the tail only in the full one
+    assert a.refcount(pages[0]) == 1 + 3
+    assert a.refcount(pages[2]) == 1 + 1
+
+    # exact match: whole chain incl. the partial tail
+    got, n = pc.lookup(prompt, 4)
+    assert (got, n) == (pages, 10)
+    assert a.refcount(pages[2]) == 1 + 1 + 1   # caller's ref added
+    # page-aligned prefix match for a diverging prompt
+    other = prompt.copy()
+    other[9] = 99
+    got2, n2 = pc.lookup(other, 4)
+    assert (got2, n2) == (pages[:2], 8)
+    # no match at all
+    assert pc.lookup(np.ones(6, np.int32), 4) == ([], 0)
+    # peek never increfs
+    before = a.refcount(pages[0])
+    pc.lookup(prompt, 4, peek=True)
+    assert a.refcount(pages[0]) == before
+
+
+def test_prefix_cache_eviction_frees_only_unheld_pages():
+    a = PageAllocator(8)
+    pc = PrefixCache(a)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = a.alloc(2)
+    pc.insert(prompt, pages, page_size=4)
+    # owner releases its refs -> pages now cache-only
+    for pid in pages:
+        a.decref(pid)
+    freed = pc.evict(2)
+    assert freed == 2 and a.pages_in_use == 0 and len(pc) == 0
+
+
+# --------------------------------------------------------------------------
+# pool planning
+# --------------------------------------------------------------------------
+
+def _reserve_admit(pool, lane, prompt, max_tokens):
+    assert pool.reserve(prompt, max_tokens)
+    return pool.admit(lane, prompt, max_tokens)
+
+
+def test_pool_cow_split_is_refcount_correct():
+    """Two lanes share a partial prompt-tail page (the cache holds it
+    too).  The first decode step must split it FOR BOTH writers — a page
+    with any other reference is immutable, so the cached copy stays an
+    exact prompt snapshot — with refcounts landing exactly right and
+    nothing double-freeing."""
+    pool = KVPool(n_lanes=2, page_size=4, lane_pages=4)
+    prompt = np.arange(6, dtype=np.int32)     # 1 full + partial(2)
+    plan0 = _reserve_admit(pool, 0, prompt, 4)
+    plan1 = _reserve_admit(pool, 1, prompt, 4)
+    assert plan0.n_shared_tokens == 0 and plan1.n_shared_tokens == 6
+    tail = int(pool.table[0, 1])
+    assert pool.table[1, 1] == tail           # genuinely shared
+    # refs: lane0 + lane1 + the full-prompt cache entry
+    assert pool.allocator.refcount(tail) == 3
+
+    step = pool.prepare_step(np.asarray([True, True]))
+    assert pool.cow_splits == 2               # both writers split
+    new0, new1 = int(pool.table[0, 1]), int(pool.table[1, 1])
+    assert len({new0, new1, tail}) == 3       # three distinct pages now
+    assert (step.write_page[0], step.write_page[1]) == (new0, new1)
+    assert step.write_slot[0] == step.write_slot[1] == 6 % 4
+    # the cached page kept exactly its cache ref; copies are private
+    assert pool.allocator.refcount(tail) == 1
+    assert pool.allocator.refcount(new0) == 1
+    assert pool.allocator.refcount(new1) == 1
+    assert (step.cow_src[0], step.cow_dst[0]) == (tail, new0)
+    assert (step.cow_src[1], step.cow_dst[1]) == (tail, new1)
+
+    pool.note_written(np.asarray([True, True]))
+    # subsequent steps: no further splits (tails now private)
+    pool.prepare_step(np.asarray([True, True]))
+    assert pool.cow_splits == 2
+    # releases must not double-free anything
+    pool.release(0)
+    pool.release(1)
+    pool.prefix.clear()
+    assert pool.allocator.pages_in_use == 0
+
+
+def test_pool_reservation_covers_decode_growth_and_cow():
+    """Worst-case budgets: decode can never hit an empty free list when
+    reserve() said yes — even with COW splits and page-boundary growth."""
+    pool = KVPool(n_lanes=2, page_size=4, lane_pages=8, n_pages=32)
+    prompt = np.arange(6, dtype=np.int32)
+    _reserve_admit(pool, 0, prompt, 12)
+    _reserve_admit(pool, 1, prompt, 12)
+    occ = np.asarray([True, True])
+    for _ in range(12):                        # full decode, no raise
+        pool.prepare_step(occ)
+        pool.note_written(occ)
+    assert pool.seq_len.tolist() == [18, 18]
+
+
+def test_pool_exhaustion_reserve_false_then_recovers():
+    """A pool with room for one request must refuse (not crash on) the
+    second reservation, then accept it after release."""
+    pool = KVPool(n_lanes=2, page_size=4, lane_pages=4, n_pages=6)
+    prompt = np.arange(8, dtype=np.int32)     # 2 pages + 1 growth + COW
+    assert pool.reserve(prompt, 4)
+    pool.admit(0, prompt, 4)
+    disjoint = 100 + np.arange(8, dtype=np.int32)
+    assert not pool.reserve(disjoint, 4)      # stays queued, not dropped
+    # ... but an identical prompt SHARES and still fits
+    assert pool.reserve(prompt.copy(), 4)
+    pool.admit(1, prompt.copy(), 4)
+    pool.release(0)
+    pool.release(1)
+    # cache entries evict on demand: the disjoint request now fits
+    assert pool.reserve(disjoint, 4)
+
+
+def test_reserve_eviction_pins_its_own_match():
+    """reserve() computes its need from a cached prefix match; its
+    eviction pass must never evict THAT match to fake headroom — doing
+    so would admit with an under-sized reservation and blow up as
+    PoolExhausted mid-decode.  The honest answer under pressure is
+    False (stay queued), with the match intact for later."""
+    pool = KVPool(n_lanes=2, page_size=8, lane_pages=5, n_pages=6)
+    a = np.arange(24, dtype=np.int32)          # 3 aligned pages
+    _reserve_admit(pool, 0, a, 8)
+    pool.release(0)                            # pages now cache-held only
+    d = 100 + np.arange(8, dtype=np.int32)
+    _reserve_admit(pool, 1, d, 8)              # 1 page + 1 growth budget
+    assert not pool.reserve(a.copy(), 8)       # wait — don't self-evict
+    _, n = pool.prefix.lookup(a, 8, peek=True)
+    assert n == 24                             # match survived the try
+    # drain D, then the queued request admits WITH its sharing
+    occ = np.asarray([False, True])
+    for _ in range(8):
+        pool.prepare_step(occ)
+        pool.note_written(occ)
+    pool.release(1)
+    plan = _reserve_admit(pool, 0, a.copy(), 8)
+    assert plan.n_shared_tokens == 24
+    occ = np.asarray([True, False])
+    for _ in range(8):                         # decodes within budget
+        pool.prepare_step(occ)
+        pool.note_written(occ)
+
+
+def test_pool_oversized_request_raises():
+    pool = KVPool(n_lanes=1, page_size=4, lane_pages=2)
+    with pytest.raises(PoolExhausted, match="at most"):
+        pool.reserve(np.arange(7, dtype=np.int32), 4)
+
+
+# --------------------------------------------------------------------------
+# runtime integration (real smoke model)
+# --------------------------------------------------------------------------
+
+PROMPT_LEN = 12
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models.param import materialize
+    cfg = get_config("paper-ee-100m", smoke=True)
+    params = materialize(M.model_defs(cfg), jax.random.PRNGKey(0))
+    casc = strategy.Cascade.calibrate(params, cfg, jax.random.PRNGKey(1),
+                                      lam=0.5, k=8, t=64, seq=16)
+    return cfg, params, casc
+
+
+def _serve(setup, requests, kv, *, lanes=2, page_size=8, n_pages=None,
+           cache_len=32):
+    cfg, params, casc = setup
+    bank, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                 ("recall_index", None))
+    stepper = rt.EngineStepper(params, cfg, bank, n_lanes=lanes,
+                               cache_len=cache_len, prompt_len=PROMPT_LEN,
+                               kv=kv, page_size=page_size, n_pages=n_pages)
+    server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of, slo=5.0)
+    return server.serve(requests), stepper
+
+
+def test_shared_prefix_uses_fewer_pages_and_identical_tokens(engine_setup):
+    """The acceptance scenario: two requests with a common prompt use
+    fewer total pages than two disjoint requests, and both paged runs
+    emit exactly the ring path's tokens."""
+    cfg = engine_setup[0]
+    rng = np.random.default_rng(11)
+    base = rng.integers(0, cfg.vocab, PROMPT_LEN, dtype=np.int32)
+    shared = [Request(rid=0, prompt=base, max_tokens=4),
+              Request(rid=1, prompt=base.copy(), max_tokens=4)]
+    disjoint = [Request(rid=0, prompt=base, max_tokens=4),
+                Request(rid=1,
+                        prompt=rng.integers(0, cfg.vocab, PROMPT_LEN,
+                                            dtype=np.int32),
+                        max_tokens=4)]
+    m_ring, _ = _serve(engine_setup, shared, "ring")
+    m_shared, st_shared = _serve(engine_setup, shared, "paged")
+    _, st_disjoint = _serve(engine_setup, disjoint, "paged")
+
+    s1, s2 = st_shared.pool.stats(), st_disjoint.pool.stats()
+    assert s1["pages_peak"] < s2["pages_peak"]
+    assert s1["shared_tokens"] == PROMPT_LEN and s1["prefix_hits"] == 1
+    # PROMPT_LEN=12, page 8: the shared partial tail page must have COW'd
+    assert s1["cow_splits"] >= 1
+    for r in shared:
+        assert m_shared.records[r.rid].tokens == \
+            m_ring.records[r.rid].tokens, f"request {r.rid}"
+
+
+def test_paged_matches_ring_across_recycling(engine_setup):
+    """A longer session with lane recycling and mixed prompts: every
+    request's paged tokens == its ring tokens."""
+    cfg = engine_setup[0]
+    rng = np.random.default_rng(23)
+    base = rng.integers(0, cfg.vocab, PROMPT_LEN, dtype=np.int32)
+    reqs = []
+    for rid in range(6):
+        prompt = base.copy() if rid % 2 else rng.integers(
+            0, cfg.vocab, PROMPT_LEN, dtype=np.int32)
+        reqs.append(Request(rid=rid, prompt=prompt,
+                            max_tokens=2 + rid % 3,
+                            arrival=rid * 0.01))
+    m_ring, _ = _serve(engine_setup, reqs, "ring")
+    m_paged, _ = _serve(engine_setup, reqs, "paged")
+    for r in reqs:
+        assert m_paged.records[r.rid].tokens == \
+            m_ring.records[r.rid].tokens, f"request {r.rid}"
+
+
+class _ShallowFirstAlternator:
+    """Probe depth alternates per token (shallow, deep, shallow, ...) —
+    the probe-depth churn that would expose per-layer KV holes if shared
+    pages were ever appended to in place.
+
+    A lane's shallow token leaves deep-layer holes at its position; its
+    next (deep) token then ATTENDS those deep layers.  If the previous
+    occupant of a shared page had appended its own decode KV there, the
+    hole would read back the other request's entries instead of ring's
+    masked -1 — so this strategy makes paged-vs-ring token equality a
+    cross-request isolation test, not just a gather test.
+    """
+
+    online = True
+    persistent = True   # token parity lives in the carried state
+    lam = 1.0
+
+    def __init__(self, n_nodes: int):
+        self.n_nodes = int(n_nodes)
+
+    def init(self, batch: int):
+        from repro.strategy.line import FixedState
+        import jax.numpy as jnp
+        return FixedState(served=jnp.zeros((batch,), jnp.int32),
+                          explore_cost=jnp.zeros((batch,), jnp.float32),
+                          n_probed=jnp.zeros((batch,), jnp.int32))
+
+    def observe(self, state, node, losses, active, aux=None):
+        import jax.numpy as jnp
+        from repro.strategy.line import FixedState
+        first = jnp.equal(node, 0)
+        tok = state.explore_cost + jnp.where(
+            first, active.astype(jnp.float32), 0.0)
+        deep_tok = (tok.astype(jnp.int32) % 2) == 0   # tokens 2, 4, ...
+        deep = self.n_nodes - 1
+        served = jnp.where(deep_tok, deep, 0).astype(jnp.int32)
+        cont = active & deep_tok & (node < deep)
+        return FixedState(served=served, explore_cost=tok,
+                          n_probed=state.n_probed + active), cont
+
+    def serve(self, state):
+        return state.served
+
+
+def test_no_cross_request_leak_through_shared_pages(engine_setup):
+    """Cross-request isolation through a reused prefix page: request O
+    (full depth every token) decodes past its prompt, releases, then
+    request S admits with the SAME prompt and alternates probe depth.
+    S's deep tokens attend layers its shallow tokens skipped — any
+    in-place append O had made to the cached page would surface there.
+    Paged tokens must equal ring tokens for both requests."""
+    cfg, params, casc = engine_setup
+    n_nodes = cfg.n_ramps + 1
+    rng = np.random.default_rng(41)
+    base = rng.integers(0, cfg.vocab, PROMPT_LEN, dtype=np.int32)
+    reqs = [Request(rid=0, prompt=base, max_tokens=5,
+                    strategy="always_last"),
+            Request(rid=1, prompt=base.copy(), max_tokens=6, arrival=0.0,
+                    strategy="alt")]
+
+    def mk(name, lam):
+        if name == "alt":
+            return _ShallowFirstAlternator(n_nodes)
+        return strategy.make(name, casc)
+
+    out = {}
+    for kv in ("ring", "paged"):
+        bank, sid_of = rt.build_bank(reqs, mk, ("always_last", None))
+        stepper = rt.EngineStepper(params, cfg, bank, n_lanes=1,
+                                   cache_len=32, prompt_len=PROMPT_LEN,
+                                   kv=kv, page_size=16, n_pages=8)
+        server = rt.Server(stepper, rt.LaneScheduler(1), sid_of, slo=5.0)
+        out[kv] = server.serve(reqs)
+    for r in reqs:
+        assert out["paged"].records[r.rid].tokens == \
+            out["ring"].records[r.rid].tokens, f"request {r.rid}"
+
+
+def test_cached_pages_are_immutable_after_prefill(engine_setup):
+    """The isolation invariant behind prefix sharing: once a page chain
+    is registered in the prefix cache, decode must NEVER mutate those
+    pages (appends go through a COW split instead).  Otherwise the
+    owner's decode KV — written only in the layers it probed — leaks
+    into later sharers wherever their probe pattern differs (ring has a
+    masked hole there).  Checked bit-for-bit on the device pools."""
+    cfg, params, casc = engine_setup
+    rng = np.random.default_rng(43)
+    req = Request(rid=0,
+                  prompt=rng.integers(0, cfg.vocab, PROMPT_LEN,
+                                      dtype=np.int32),
+                  max_tokens=6)
+    bank, sid_of = rt.build_bank([req], rt.cascade_factory(casc),
+                                 ("always_last", None))
+    stepper = rt.EngineStepper(params, cfg, bank, n_lanes=1,
+                               cache_len=32, prompt_len=PROMPT_LEN,
+                               kv="paged", page_size=16, n_pages=8)
+    assert stepper.reserve(req)
+    stepper.admit(0, req)
+    pool = stepper.pool
+    cached = [int(p) for p in pool.table[0, :pool.n_held[0]]]
+
+    def snapshot():
+        out = []
+        for seg_c in stepper.caches:
+            if "attn" in seg_c:
+                for name, leaf in seg_c["attn"].items():
+                    out.append((name, np.asarray(leaf[:, cached])))
+        return out
+
+    before = snapshot()
+    occ = np.asarray([True])
+    for _ in range(req.max_tokens):
+        stepper.step(occ, np.zeros(1, np.int32))
+    assert pool.cow_splits >= 1        # the partial tail split, not wrote
+    for (name, a), (_, b) in zip(before, snapshot()):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"cached page leaf {name!r} mutated by decode")
+
+
+def test_page_pressure_queues_requests_instead_of_dropping(engine_setup):
+    """A pool with pages for ~one disjoint request at a time: admission
+    blocks on the free-page budget, requests wait in the queue, and ALL
+    of them still complete (and match ring tokens)."""
+    cfg = engine_setup[0]
+    rng = np.random.default_rng(31)
+    reqs = [Request(rid=rid,
+                    prompt=rng.integers(0, cfg.vocab, PROMPT_LEN,
+                                        dtype=np.int32),
+                    max_tokens=4)
+            for rid in range(3)]
+    m_ring, _ = _serve(engine_setup, reqs, "ring")
+    # lane capacity 4 pages of 8; worst case need = 3 pages/request
+    # (2 prompt + contested tail) -> 4-page pool fits one at a time
+    m_paged, st = _serve(engine_setup, reqs, "paged", n_pages=5)
+    s = m_paged.summary()
+    assert s["completed"] == len(reqs)
+    assert st.pool.stats()["evictions"] > 0
+    for r in reqs:
+        assert m_paged.records[r.rid].tokens == \
+            m_ring.records[r.rid].tokens, f"request {r.rid}"

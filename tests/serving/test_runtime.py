@@ -52,6 +52,77 @@ def test_queue_fifo_and_edf_orderings():
         RequestQueue("lifo")
 
 
+def test_edf_tie_breaking_is_deterministic():
+    """Equal deadlines break on (arrival, rid); equal everything breaks
+    on rid — so EDF admission is a pure function of the request set,
+    independent of push order."""
+    import itertools
+    reqs = [
+        _req(3, arrival=1.0, deadline=5.0),
+        _req(1, arrival=1.0, deadline=5.0),   # deadline+arrival tie: rid
+        _req(2, arrival=0.5, deadline=5.0),   # deadline tie: arrival
+        _req(0, arrival=2.0, deadline=4.0),   # strictly tighter deadline
+    ]
+    expect = [0, 2, 1, 3]
+    for perm in itertools.permutations(reqs):
+        q = RequestQueue("edf")
+        for r in perm:
+            q.push(r)
+        assert [q.pop().rid for _ in range(len(reqs))] == expect, perm
+
+
+def test_edf_deadline_of_fallback_applied_at_push():
+    """Requests without a deadline get ``deadline_of`` (arrival + SLO)
+    at push time, without mutating the request."""
+    q = RequestQueue("edf", deadline_of=lambda r: r.arrival + 1.0)
+    a = _req(0, arrival=5.0)                  # fallback deadline 6.0
+    b = _req(1, arrival=0.0, deadline=7.0)
+    q.push(a)
+    q.push(b)
+    assert [q.pop().rid, q.pop().rid] == [0, 1]
+    assert a.deadline is None
+
+
+def test_runtime_metrics_empty_window():
+    """A serve window with no requests at all: summary must be all
+    zeros/Nones, never a crash or a NaN."""
+    from repro.serving.runtime.metrics import RuntimeMetrics
+    m = RuntimeMetrics(full_depth=4, n_lanes=2)
+    s = m.summary(slo=1.0)
+    assert s["requests"] == s["completed"] == s["tokens"] == 0
+    assert s["throughput_tok_s"] == 0.0
+    for q in ("p50", "p95", "p99"):
+        assert s["ttft"][q] is None and s["token_latency"][q] is None
+    assert s["goodput_tok_s"] == 0.0 and s["slo_attainment"] == 0.0
+    assert s["segments_saved_batch"] is None
+    assert s["segments_saved_lane"] is None
+    assert s["mean_served_node"] is None
+
+
+def test_runtime_metrics_single_sample_percentiles():
+    """One request, one token: every percentile collapses to the single
+    sample; inter-token latency has no samples yet."""
+    from repro.serving.runtime.metrics import RuntimeMetrics
+    m = RuntimeMetrics(full_depth=4, n_lanes=1)
+    m.t_start = 0.0
+    req = _req(7, arrival=1.0)
+    m.on_admit(req, 1.5)
+    m.on_step(3, 3, 1)
+    m.on_token(7, served_node=2, now=2.0, token=42)
+    m.on_finish(7, 2.0)
+    m.t_end = 4.0
+    s = m.summary(slo=1.5)
+    assert s["ttft"]["p50"] == s["ttft"]["p95"] == s["ttft"]["p99"] \
+        == pytest.approx(1.0)
+    for q in ("p50", "p95", "p99"):
+        assert s["token_latency"][q] is None
+    assert s["slo_attainment"] == 1.0
+    assert s["goodput_tok_s"] == pytest.approx(1 / 4.0)
+    assert s["mean_served_node"] == 2.0
+    rec = m.records[7].as_dict()
+    assert rec["tokens"] == [42] and rec["e2e"] == pytest.approx(1.0)
+
+
 @pytest.mark.parametrize("name", ["poisson", "bursty", "diurnal"])
 def test_workloads_seeded_deterministic(name):
     spec = WorkloadSpec(rate=20.0, duration=10.0, prompt_len=8, seed=5)
