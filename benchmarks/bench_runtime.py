@@ -18,6 +18,14 @@
      reports goodput/TTFT side by side plus pages-in-use, prefix hit
      rate, and COW splits — the memory headroom prefix sharing frees is
      the admission capacity the ring discipline burns on duplicates.
+     A third leg serves the same workload with CHUNKED PREFILL enabled
+     (DESIGN.md §9) — same streams, plus the chunk/skip counters.
+
+  4. Chunked vs stop-the-world admission (``chunked_vs_stopworld``):
+     a rate x prompt-length-mix sweep under the sim cost model, where
+     stop-the-world prefill is a serial stall and the co-scheduled
+     chunk is priced at the piggyback roofline max(decode, chunk) —
+     TTFT p50/p99 and goodput as load approaches the wall.
 
 Run standalone for the CI smoke + JSON artifacts:
 
@@ -25,10 +33,13 @@ Run standalone for the CI smoke + JSON artifacts:
       --json
 
 ``--json`` (over)writes the stable ``BENCH_runtime.json`` at the repo
-root (schema ``bench_runtime/v1``: one row per rate x strategy x
-kv-mode with goodput / TTFT p50/p99 / pages-in-use).  Each run is one
-snapshot; the trajectory accumulates across commits via git history and
-the per-run CI artifact upload.
+root (schema ``bench_runtime/v2``: one row per rate x strategy x
+kv-mode x prefill-mode with goodput / TTFT p50/p99 / pages-in-use; the
+v1 fields are unchanged, v2 adds the ``prefill`` axis + chunk token
+counters).  Each run is one snapshot; the trajectory accumulates across
+commits via git history and the per-run CI artifact upload, and
+``benchmarks/check_regression.py`` (CI) fails >20% goodput drops at
+matching virtual-clock points.
 """
 
 from __future__ import annotations
@@ -48,9 +59,11 @@ from repro.serving.runtime.workload import WorkloadSpec, make_workload
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 # virtual cost model: one node-probe on one lane costs SEG_TIME/lane,
-# plus a fixed per-step dispatch overhead (both in sim seconds)
+# plus a fixed per-step dispatch overhead (both in sim seconds);
+# PREFILL_TOK prices one prompt token of admission prefill
 SEG_TIME = 0.01
 OVERHEAD = 0.002
+PREFILL_TOK = 0.0025
 SLO = 0.5
 LANES = 4
 N_NODES = 6
@@ -191,6 +204,60 @@ def recycling_vs_engine_real(*, n_requests=12, lanes=LANES, seed=0):
     ]
 
 
+def mixed_prompt_requests(rate, duration, seed, *, short_len=8,
+                          long_len=64, strategy="recall_index"):
+    """A rate x prompt-length MIX: 3/4 of the arrival rate carries
+    short prompts, 1/4 long ones — the workload where stop-the-world
+    admission hurts most (every long prefill stalls every decode lane)
+    and where the chunk planner's prompt-length buckets matter."""
+    short = make_workload("poisson", WorkloadSpec(
+        rate=rate * 0.75, duration=duration, prompt_len=short_len,
+        max_tokens=(4, 24), seed=seed + 101, strategy=strategy))
+    long = make_workload("poisson", WorkloadSpec(
+        rate=rate * 0.25, duration=duration, prompt_len=long_len,
+        max_tokens=(4, 24), seed=seed + 103, strategy=strategy))
+    merged = sorted(short + long, key=lambda r: (r.arrival, len(r.prompt)))
+    return [Request(rid=rid, prompt=r.prompt, max_tokens=r.max_tokens,
+                    arrival=r.arrival, lam=r.lam, strategy=r.strategy)
+            for rid, r in enumerate(merged)]
+
+
+def chunked_vs_stopworld(*, rates, duration, seed=0, chunk=16, budget=32):
+    """Chunked prefill co-scheduled with decode vs stop-the-world
+    admission, same virtual cost model, same mixed-prompt workload
+    (DESIGN.md §9).  Token decisions are (rid, token)-keyed in sim, so
+    the two modes emit bit-identical streams by construction — this
+    sweep measures what the restructuring buys on the CLOCK: TTFT
+    p50/p99 and goodput as the arrival rate approaches the wall."""
+    casc, bank_traces = _sim_setup(seed)
+    rows = []
+    for rate in rates:
+        requests = mixed_prompt_requests(rate, duration, seed)
+        for mode in ("stopworld", "chunked"):
+            bank, sid_of = rt.build_bank(requests,
+                                         rt.cascade_factory(casc),
+                                         ("recall_index", None))
+            stepper = rt.SimStepper(
+                bank, bank_traces, n_lanes=LANES, seg_time=SEG_TIME,
+                overhead=OVERHEAD, prefill_tok_time=PREFILL_TOK,
+                prefill_chunk=(chunk if mode == "chunked" else None),
+                prefill_budget=budget)
+            server = rt.Server(stepper, rt.LaneScheduler(LANES), sid_of,
+                               slo=SLO)
+            s = server.serve(requests).summary(slo=SLO)
+            rows.append({
+                "name": f"runtime_sim_prefill_{mode}_r{rate:g}",
+                "us_per_call": s["duration"] / max(s["tokens"], 1) * 1e6,
+                "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
+                            f"ttft_p50={s['ttft']['p50']:.3f}s "
+                            f"ttft_p99={s['ttft']['p99']:.3f}s "
+                            f"slo_att={100 * s['slo_attainment']:.0f}%"),
+                "summary": s, "rate": rate, "strategy": "recall_index",
+                "kv": "sim", "prefill": mode,
+            })
+    return rows
+
+
 def _shared_prefix_requests(vocab, *, n_requests, prompt_len, seed):
     """Deterministic mix: 3 of every 4 requests reuse one of two base
     prompts (what a shared system preamble looks like), the rest are
@@ -231,23 +298,30 @@ def paged_vs_ring_real(*, n_requests=8, lanes=2, prompt_len=16,
     requests = _shared_prefix_requests(cfg.vocab, n_requests=n_requests,
                                        prompt_len=prompt_len, seed=seed)
     rows = []
-    for kv in ("ring", "paged"):
+    for kv, chunk in (("ring", None), ("paged", None),
+                      ("paged", page_size)):
         bank, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
                                      ("recall_index", None))
         stepper = rt.EngineStepper(params, cfg, bank, n_lanes=lanes,
                                    cache_len=cache_len,
                                    prompt_len=prompt_len, kv=kv,
-                                   page_size=page_size)
+                                   page_size=page_size,
+                                   prefill_chunk=chunk,
+                                   prefill_budget=(None if chunk is None
+                                                   else 2 * chunk))
         server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
                            slo=SLO)
         s = server.serve(requests).summary(slo=SLO)
+        name = f"runtime_engine_kv_{kv}" + \
+            ("_chunked" if chunk is not None else "")
         row = {
-            "name": f"runtime_engine_kv_{kv}",
+            "name": name,
             "us_per_call": 1e6 / max(s["throughput_tok_s"], 1e-9),
             "derived": (f"thru={s['throughput_tok_s']:.1f}tok_s "
                         f"goodput={s['goodput_tok_s']:.1f}tok_s "
                         f"tokens={s['tokens']}"),
             "summary": s, "strategy": "recall_index", "kv": kv,
+            "prefill": "chunked" if chunk is not None else "stopworld",
         }
         if stepper.pool is not None:
             ps = stepper.pool.stats()
@@ -256,18 +330,27 @@ def paged_vs_ring_real(*, n_requests=8, lanes=2, prompt_len=16,
                 f" pages_peak={ps['pages_peak']}/{ps['n_pages'] - 1}"
                 f" prefix_hit={100 * ps['prefix_hit_rate']:.0f}%"
                 f" cow={ps['cow_splits']}")
+        if chunk is not None:
+            cs = stepper.chunk_stats
+            row["chunked_prefill"] = cs
+            row["derived"] += (
+                f" chunk_tokens={cs['tokens_computed']}"
+                f" chunk_skipped={cs['tokens_skipped']}")
         rows.append(row)
     return rows
 
 
 def stable_report(rows: list[dict]) -> dict:
     """The accumulating perf-trajectory schema (BENCH_runtime.json):
-    one flat row per rate x strategy x kv-mode.  Keys are stable across
-    commits; absent dimensions are null."""
+    one flat row per rate x strategy x kv-mode x prefill-mode.  The v1
+    keys are stable across commits (absent dimensions are null); v2
+    adds the ``prefill`` axis (``chunked`` | ``stopworld`` | null) and
+    the chunked-prefill token counters."""
     out = []
     for row in rows:
         s = row.get("summary") or {}
         pool = row.get("kv_pool") or {}
+        chunk = row.get("chunked_prefill") or {}
         ttft = s.get("ttft") or {}
         out.append({
             "name": row["name"],
@@ -281,8 +364,12 @@ def stable_report(rows: list[dict]) -> dict:
             "pages_in_use": pool.get("pages_peak"),
             "prefix_hit_rate": pool.get("prefix_hit_rate"),
             "cow_splits": pool.get("cow_splits"),
+            # v2 axis: chunked-prefill co-scheduling (DESIGN.md §9)
+            "prefill": row.get("prefill"),
+            "prefill_tokens_computed": chunk.get("tokens_computed"),
+            "prefill_tokens_skipped": chunk.get("tokens_skipped"),
         })
-    return {"schema": "bench_runtime/v1", "rows": out}
+    return {"schema": "bench_runtime/v2", "rows": out}
 
 
 def run(smoke: bool = False) -> list[dict]:
@@ -291,6 +378,7 @@ def run(smoke: bool = False) -> list[dict]:
                                    names=("recall_index", "always_last"),
                                    duration=15.0)
         rows += recycling_vs_static_sim(n_requests=24)
+        rows += chunked_vs_stopworld(rates=(2.0, 6.0), duration=15.0)
         rows += paged_vs_ring_real(n_requests=6)
     else:
         rows = sweep_rate_strategy(
@@ -298,6 +386,8 @@ def run(smoke: bool = False) -> list[dict]:
             names=("recall_index", "tree_index", "always_last"),
             duration=30.0)
         rows += recycling_vs_static_sim(n_requests=48)
+        rows += chunked_vs_stopworld(rates=(2.0, 4.0, 6.0),
+                                     duration=30.0)
         rows += recycling_vs_engine_real()
         rows += paged_vs_ring_real(n_requests=16, lanes=4)
     return rows

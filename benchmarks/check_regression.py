@@ -1,0 +1,104 @@
+"""Perf-trajectory guardrail: compare a freshly produced
+``BENCH_runtime.json`` against the committed snapshot and FAIL on a
+goodput regression at matching (rate, strategy, kv, prefill) points.
+
+Rows are matched by their stable ``name`` (which encodes the sweep
+point) and cross-checked on the axis fields, so a renamed or re-scoped
+row never silently compares apples to oranges.  Two thresholds:
+
+  * virtual-clock rows (``kv == "sim"``) are DETERMINISTIC — seeded
+    workloads, virtual time — so any drop beyond ``--max-drop``
+    (default 20%) is a real scheduling/cost regression, not noise;
+  * wall-clock rows (the real-model runs) breathe with the runner —
+    the committed baseline may come from a different machine entirely —
+    so they WARN above ``--max-drop`` and never fail unless an
+    explicit ``--max-drop-wall`` threshold is opted into (e.g. on a
+    dedicated perf box where the baseline is same-hardware).
+
+Usage (what CI runs after regenerating the snapshot):
+
+    git show HEAD:BENCH_runtime.json > /tmp/bench-committed.json
+    python -m benchmarks.check_regression /tmp/bench-committed.json \
+        BENCH_runtime.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+AXES = ("rate", "strategy", "kv", "prefill")
+
+
+def compare(old: dict, new: dict, *, max_drop: float = 0.20,
+            max_drop_wall: float | None = None):
+    """Returns (failures, warnings, n_checked) comparing goodput per
+    matching row.  Rows present on only one side are skipped (schema
+    evolution is allowed; the guard protects existing points).
+    ``max_drop_wall=None`` (the default) makes wall-clock rows
+    warn-only — they cannot fail a run whose baseline was produced on
+    different hardware."""
+    old_rows = {r["name"]: r for r in old.get("rows", [])}
+    failures: list[str] = []
+    warnings: list[str] = []
+    checked = 0
+    for row in new.get("rows", []):
+        ref = old_rows.get(row["name"])
+        if ref is None:
+            continue
+        mismatch = [a for a in AXES
+                    if a in ref and ref.get(a) != row.get(a)]
+        if mismatch:
+            failures.append(
+                f"{row['name']}: axis drift on {mismatch} "
+                f"(committed {[ref.get(a) for a in mismatch]} vs "
+                f"{[row.get(a) for a in mismatch]}) — rename the row "
+                "instead of repointing it")
+            continue
+        g_old = ref.get("goodput_tok_s")
+        g_new = row.get("goodput_tok_s")
+        if not g_old or g_new is None:
+            continue
+        checked += 1
+        drop = 1.0 - g_new / g_old
+        wall = row.get("kv") != "sim"
+        limit = max_drop_wall if wall else max_drop
+        msg = (f"{row['name']}: goodput {g_old:.2f} -> {g_new:.2f} tok/s "
+               f"({100 * drop:.0f}% drop"
+               f"{', wall-clock' if wall else ''})")
+        if limit is not None and drop > limit:
+            failures.append(msg)
+        elif drop > max_drop:
+            warnings.append(msg)
+    return failures, warnings, checked
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("committed", help="the committed BENCH_runtime.json")
+    ap.add_argument("fresh", help="the freshly produced snapshot")
+    ap.add_argument("--max-drop", type=float, default=0.20,
+                    help="max goodput drop for virtual-clock rows")
+    ap.add_argument("--max-drop-wall", type=float, default=None,
+                    help="opt-in hard limit for wall-clock rows "
+                         "(default: warn-only — baselines may come "
+                         "from different hardware)")
+    args = ap.parse_args()
+    with open(args.committed) as f:
+        old = json.load(f)
+    with open(args.fresh) as f:
+        new = json.load(f)
+    failures, warnings, checked = compare(
+        old, new, max_drop=args.max_drop, max_drop_wall=args.max_drop_wall)
+    for msg in warnings:
+        print(f"WARN  {msg}")
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    print(f"checked {checked} matching goodput points "
+          f"({len(failures)} failures, {len(warnings)} warnings)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

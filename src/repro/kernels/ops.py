@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import (bellman_backup as _bb, flash_attention as _fa,
-                           paged_attention as _pa, ramp_exit as _re,
+                           paged_attention as _pa,
+                           paged_prefill as _pp, ramp_exit as _re,
                            ssd_chunk as _sc)
 
-__all__ = ["flash_attention", "paged_attention", "bellman_backup",
-           "ssd_chunk", "ramp_exit", "on_cpu"]
+__all__ = ["flash_attention", "paged_attention", "paged_prefill",
+           "bellman_backup", "ssd_chunk", "ramp_exit", "on_cpu"]
 
 
 def on_cpu() -> bool:
@@ -84,6 +85,48 @@ def paged_attention(q, k_pages, v_pages, pos_pages, page_table, q_pos, *,
         page_table.astype(jnp.int32), q_pos, n_used, scale=scale,
         window=window, interpret=interpret)
     return out[:, :, :g, :hd].reshape(b, h, hd)
+
+
+def paged_prefill(q, k_pages, v_pages, pos_pages, page_table, q_pos,
+                  chunk_start, ck, cv, c_pos, *, scale: float,
+                  window: int | None = None,
+                  interpret: bool | None = None):
+    """Chunked-prefill attention over the paged pool — model layout.
+
+    q (B, C, H, hd) chunk queries with H = G * Hkv and per-row positions
+    q_pos (B, C) i32 (-1 = padded row); k/v_pages (P, page, Hkv, hd) —
+    the pool layout models/attention.py scatters into; pos_pages
+    (P, page) i32; page_table (B, maxp) i32; chunk_start (B,) i32
+    (history clipped to kpos < start); ck/cv (B, C, Hkv, hd) the chunk's
+    own in-flight keys/values at positions c_pos (B, C).  Pads hd to
+    128, the q group to a sublane multiple of 8, and the chunk-key axis
+    to 128, derives the history page count from chunk_start, and hands
+    the kernel the (P, Hkv, page, hd) transpose.  Returns (B, C, H, hd).
+    """
+    interpret = on_cpu() if interpret is None else interpret
+    b, c, h, hd = q.shape
+    ps = k_pages.shape[1]
+    hkv = k_pages.shape[2]
+    g = h // hkv
+    gp = -(-g // 8) * 8
+    # (B, C, H, hd) -> (B, Hkv, C, G, hd): row c*G + g is query (c, g)
+    qg = q.reshape(b, c, hkv, g, hd).transpose(0, 2, 1, 3, 4)
+    qg = _pad_to(_pad_to(qg, 4, 128), 3, gp)
+    qg = qg.reshape(b, hkv, c * gp, hd + (-hd) % 128)
+    kt = _pad_to(k_pages.transpose(0, 2, 1, 3), 3, 128)
+    vt = _pad_to(v_pages.transpose(0, 2, 1, 3), 3, 128)
+    cp = -(-c // 128) * 128
+    ckt = _pad_to(_pad_to(ck.transpose(0, 2, 1, 3), 3, 128), 2, cp)
+    cvt = _pad_to(_pad_to(cv.transpose(0, 2, 1, 3), 3, 128), 2, cp)
+    c_pos_p = _pad_to(c_pos.astype(jnp.int32), 1, cp, value=-1)
+    chunk_start = chunk_start.astype(jnp.int32)
+    n_hist = jnp.clip(-(-chunk_start // ps), 0, page_table.shape[1])
+    out = _pp.paged_prefill_kernel(
+        qg, q_pos.astype(jnp.int32), kt, vt, pos_pages.astype(jnp.int32),
+        page_table.astype(jnp.int32), chunk_start, n_hist, ckt, cvt,
+        c_pos_p, scale=scale, window=window, interpret=interpret)
+    out = out.reshape(b, hkv, c, gp, hd + (-hd) % 128)[:, :, :, :g, :hd]
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, hd)
 
 
 def bellman_backup(phi_next, trans, cost, mi_t, *,

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["flash_attention_ref", "paged_attention_ref",
-           "bellman_backup_ref", "ssd_chunk_ref", "ramp_exit_ref"]
+           "paged_prefill_ref", "bellman_backup_ref", "ssd_chunk_ref",
+           "ramp_exit_ref"]
 
 
 def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
@@ -64,6 +65,52 @@ def paged_attention_ref(q, k_pages, v_pages, pos_pages, page_table, q_pos,
     w = jax.nn.softmax(logits, axis=-1)
     w = jnp.where(valid, w, 0.0)
     out = jnp.einsum("bkgt,bktd->bkgd", w, v)
+    return out.astype(q.dtype)
+
+
+def paged_prefill_ref(q, q_pos, k_pages, v_pages, pos_pages, page_table,
+                      chunk_start, n_hist, ck, cv, c_pos, *, scale: float,
+                      window: int | None = None):
+    """Chunked-prefill attention over the paged pool (paged_prefill.py
+    contract).
+
+    q (B, Hkv, C, G, hd) chunk queries; q_pos (B, C) i32 (-1 = padded
+    row, returns zeros); k/v_pages (P, Hkv, ps, hd); pos_pages (P, ps)
+    i32 (-1 empty); page_table (B, maxp) i32; chunk_start (B,) i32 —
+    pool history is clipped to kpos < start (the chunk's own positions
+    come from the in-flight block, even if already scattered);
+    n_hist (B,) i32 — table entries at index >= n_hist are ignored;
+    ck/cv (B, Hkv, Cp, hd) in-flight chunk keys/values with positions
+    c_pos (B, Cp) i32 (-1 padding), attended causally per query row.
+    Returns (B, Hkv, C, G, hd).
+    """
+    b, hkv, c, g, hd = q.shape
+    ps = k_pages.shape[2]
+    maxp = page_table.shape[1]
+    kh = k_pages[page_table].astype(jnp.float32)    # (B, maxp, Hkv, ps, hd)
+    vh = v_pages[page_table].astype(jnp.float32)
+    kpos = pos_pages[page_table].reshape(b, maxp * ps)
+    kh = kh.transpose(0, 2, 1, 3, 4).reshape(b, hkv, maxp * ps, hd)
+    vh = vh.transpose(0, 2, 1, 3, 4).reshape(b, hkv, maxp * ps, hd)
+    page_ok = jnp.repeat(jnp.arange(maxp)[None, :] < n_hist[:, None], ps,
+                         axis=1)                    # (B, maxp*ps)
+    hist_ok = (kpos >= 0) & (kpos < chunk_start[:, None]) & page_ok
+    k_all = jnp.concatenate([kh, ck.astype(jnp.float32)], axis=2)
+    v_all = jnp.concatenate([vh, cv.astype(jnp.float32)], axis=2)
+    pos_all = jnp.concatenate([kpos, c_pos], axis=1)  # (B, T)
+    ok_all = jnp.concatenate([hist_ok, c_pos >= 0], axis=1)
+    valid = ok_all[:, None, :] & (pos_all[:, None, :]
+                                  <= q_pos[:, :, None]) \
+        & (q_pos[:, :, None] >= 0)                  # (B, C, T)
+    if window is not None:
+        valid &= pos_all[:, None, :] > (q_pos[:, :, None] - window)
+    logits = jnp.einsum("bkcgd,bktd->bkcgt", q.astype(jnp.float32),
+                        k_all) * scale
+    valid = valid[:, None, :, None, :]              # (B, 1, C, 1, T)
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    out = jnp.einsum("bkcgt,bktd->bkcgd", w, v_all)
     return out.astype(q.dtype)
 
 

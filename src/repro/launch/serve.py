@@ -133,12 +133,17 @@ def _serve_traffic(args, cfg, params, casc) -> None:
                                prompt_len=args.prompt_len,
                                kv=args.kv, page_size=args.page_size,
                                n_pages=args.pages,
-                               paged_kernel=args.paged_kernel)
+                               paged_kernel=args.paged_kernel,
+                               prefill_chunk=args.prefill_chunk,
+                               prefill_budget=args.prefill_budget)
     slo = args.slo_ms / 1e3
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos)
     kv_desc = args.kv if args.kv == "ring" else (
         f"paged ({stepper.pool.n_pages} pages x {args.page_size} tokens)")
+    if args.prefill_chunk:
+        kv_desc += (f", chunked prefill ({args.prefill_chunk}-token "
+                    f"chunks, {stepper.planner.budget} tokens/step)")
     print(f"serving {len(requests)} {args.workload} requests "
           f"(rate {args.rate}/s x {args.duration}s) on {args.lanes} lanes, "
           f"policy {name}, kv {kv_desc}, "
@@ -175,11 +180,20 @@ def _serve_traffic(args, cfg, params, casc) -> None:
               f"({pool_stats['shared_tokens']} shared tokens), "
               f"{pool_stats['cow_splits']} COW splits, "
               f"{pool_stats['evictions']} evictions")
+    if args.prefill_chunk:
+        cs = stepper.chunk_stats
+        total = cs["tokens_computed"] + cs["tokens_skipped"]
+        print(f"chunked prefill: {cs['tokens_computed']} prompt tokens "
+              f"computed over {cs['chunk_steps']} co-scheduled chunk "
+              f"steps, {cs['tokens_skipped']}/{max(total, 1)} skipped "
+              f"via prefix cache ({cs['prefills']} admissions)")
     if args.json:
         extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
-                 "kv": args.kv}
+                 "kv": args.kv, "prefill_chunk": args.prefill_chunk}
         if pool_stats is not None:
             extra["kv_pool"] = pool_stats
+        if args.prefill_chunk:
+            extra["chunked_prefill"] = stepper.chunk_stats
         metrics.to_json(args.json, slo=slo, extra=extra)
         print(f"wrote metrics JSON to {args.json}")
 
@@ -231,6 +245,18 @@ def main() -> None:
                     help="decode through the Pallas paged-attention "
                          "kernel (--kv paged; TPU hot path — on CPU it "
                          "runs in slow interpret mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="co-schedule admission prefill with decode in "
+                         "chunks of this many prompt tokens instead of "
+                         "stop-the-world batch-1 prefill programs "
+                         "(--kv paged; DESIGN.md §9).  Also lifts the "
+                         "fixed prompt bucket: any prompt that fits a "
+                         "lane's pages is admissible")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefilled per step across "
+                         "all admitting lanes (default: --prefill-"
+                         "chunk), split fairly over prompt-length "
+                         "buckets")
     ap.add_argument("--json", default=None,
                     help="write runtime metrics JSON here")
     args = ap.parse_args()

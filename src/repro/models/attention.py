@@ -38,8 +38,9 @@ from repro.models.common import causal_mask, rms_norm, rope, rope_cos_sin
 from repro.models.config import AttnConfig
 from repro.models.param import ParamDef
 
-__all__ = ["attn_defs", "attn_forward", "attn_decode", "init_cache_defs",
-           "PagedKV", "paged_kernel"]
+__all__ = ["attn_defs", "attn_forward", "attn_decode",
+           "attn_prefill_chunk", "init_cache_defs", "PagedKV",
+           "PrefillChunk", "paged_kernel"]
 
 # must agree with serving.kvpool.alloc.GARBAGE_PAGE (kept as a literal so
 # the model layer never imports the serving layer)
@@ -53,6 +54,26 @@ class PagedKV(NamedTuple):
     page_table: jax.Array   # (B, lane_pages) i32, garbage-page padded
     write_page: jax.Array   # (B,) i32 page receiving this token's KV
     write_slot: jax.Array   # (B,) i32 slot within that page
+
+
+class PrefillChunk(NamedTuple):
+    """Per-step device view of the prefill chunks co-scheduled with
+    decode (DESIGN.md §9): up to C prompt tokens per admitting lane,
+    planned host-side by the scheduler's chunk planner.  All arrays are
+    (B, C) / (B,) with idle lanes and ragged tails padded: position -1
+    rows are inert, garbage-page destinations swallow their writes."""
+
+    tok: jax.Array          # (B, C) i32 chunk tokens (0 for padding)
+    pos: jax.Array          # (B, C) i32 absolute positions (-1 = pad)
+    dest_page: jax.Array    # (B, C) i32 pool page per token (garbage =
+                            #   prefix-cache hit / padding: no write)
+    dest_slot: jax.Array    # (B, C) i32 slot within the page
+    start: jax.Array        # (B,) i32 chunk-start position (pool
+                            #   history is read strictly below this)
+    last_idx: jax.Array     # (B,) i32 row of the chunk's final valid
+                            #   token (the readout position when emit)
+    emit: jax.Array         # (B,) bool final chunk: emit first token
+    active: jax.Array       # (B,) bool lanes prefilling this step
 
 
 # --------------------------------------------------------------------------
@@ -395,6 +416,101 @@ def _gqa_decode_paged(p, x, cache, pos, cfg: AttnConfig, eps,
         mask &= pos_full[:, None, :] >= 0
         out = _sdpa(q, k_full, v_full, mask, scale)
     y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, new_cache
+
+
+def attn_prefill_chunk(p: dict, x: jax.Array, cache: dict,
+                       cfg: AttnConfig, eps: float, table: jax.Array,
+                       chunk: PrefillChunk):
+    """One prefill CHUNK against the paged pool (DESIGN.md §9): compute
+    the chunk's q/k/v, scatter K/V into the per-token (page, slot)
+    targets, then attend over the lane's page-table history (committed
+    by earlier chunks — or shared prefix pages, which is why
+    prefix-cache hits can skip their chunks entirely) PLUS the chunk's
+    own in-flight keys, causally.
+
+    The in-flight self-attention deliberately reads the ACTIVATION-dtype
+    k/v (not the pool round-trip): a chunk covering the whole prompt
+    then computes exactly what `attn_forward` computes, so the
+    stop-the-world admission path stays the bit-reference.  History
+    reads are clipped to ``kpos < chunk.start`` so the chunk's own
+    just-scattered positions are attended exactly once (in-flight).
+
+    x (B, C, D); table (B, maxp) i32 page table; returns
+    (y (B, C, D), new_cache).  MLA segments are not yet chunkable —
+    serve them through the stop-the-world admission path.
+    """
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            "chunked prefill supports GQA attention only; MLA segments "
+            "must admit through the whole-prompt prefill path")
+    b, c, _ = x.shape
+    ps = cache["k"].shape[1]
+    rpos = jnp.maximum(chunk.pos, 0)          # rope of pad rows: masked
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm({"scale": p["q_norm"]}, q, eps)
+        k = rms_norm({"scale": p["k_norm"]}, k, eps)
+    cos, sin = rope_cos_sin(rpos, cfg.head_dim, cfg.rope_theta)
+    q = rope(q, cos, sin)
+    k = rope(k, cos, sin)
+
+    # scatter targets: prefix-cache hits / pad rows / inactive lanes are
+    # redirected to the garbage sink with stored position -1 (the paged
+    # analogue of the engine's masked ring writes)
+    live = chunk.active[:, None] & (chunk.pos >= 0) \
+        & (chunk.dest_page != _GARBAGE_PAGE)
+    dp = jnp.where(live, chunk.dest_page, _GARBAGE_PAGE)
+    pw = jnp.where(live, chunk.pos, -1)
+    ds = chunk.dest_slot
+    new_cache = dict(cache)
+    if "k_s" in cache:  # int8 pool path (models.quant)
+        from repro.models.quant import dequantize_rows, quantize_rows
+        kq, ks = quantize_rows(k)
+        vq, vs = quantize_rows(v)
+        new_cache["k"] = cache["k"].at[dp, ds].set(kq)
+        new_cache["v"] = cache["v"].at[dp, ds].set(vq)
+        new_cache["k_s"] = cache["k_s"].at[dp, ds].set(ks)
+        new_cache["v_s"] = cache["v_s"].at[dp, ds].set(vs)
+    else:
+        new_cache["k"] = cache["k"].at[dp, ds].set(
+            k.astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[dp, ds].set(
+            v.astype(cache["v"].dtype))
+    new_cache["pos"] = cache["pos"].at[dp, ds].set(pw)
+
+    scale = cfg.softmax_scale or 1.0 / math.sqrt(cfg.head_dim)
+    if _PAGED_KERNEL.get() and "k_s" not in cache:
+        from repro.kernels import ops as kops
+        out = kops.paged_prefill(
+            q, new_cache["k"], new_cache["v"], new_cache["pos"], table,
+            chunk.pos, chunk.start, k, v, chunk.pos, scale=scale,
+            window=cfg.window)
+    else:
+        maxp = table.shape[1]
+        if "k_s" in cache:
+            k_hist = dequantize_rows(new_cache["k"][table],
+                                     new_cache["k_s"][table], q.dtype)
+            v_hist = dequantize_rows(new_cache["v"][table],
+                                     new_cache["v_s"][table], q.dtype)
+        else:
+            k_hist = new_cache["k"][table].astype(q.dtype)
+            v_hist = new_cache["v"][table].astype(q.dtype)
+        t = maxp * ps
+        k_hist = k_hist.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+        v_hist = v_hist.reshape(b, t, cfg.n_kv_heads, -1)
+        pos_hist = new_cache["pos"][table].reshape(b, t)
+        hist_ok = (pos_hist >= 0) & (pos_hist < chunk.start[:, None])
+        k_all = jnp.concatenate([k_hist, k], axis=1)
+        v_all = jnp.concatenate([v_hist, v], axis=1)
+        pos_all = jnp.concatenate([pos_hist, chunk.pos], axis=1)
+        ok_all = jnp.concatenate([hist_ok, chunk.pos >= 0], axis=1)
+        mask = causal_mask(chunk.pos, pos_all, cfg.window) \
+            & ok_all[:, None, :]
+        out = _sdpa(q, k_all, v_all, mask, scale)
+    y = out.reshape(b, c, -1) @ p["wo"]
     return y, new_cache
 
 

@@ -11,8 +11,8 @@ from repro.models.common import rms_norm, rms_norm_def
 from repro.models.config import BlockConfig
 from repro.models.param import ParamDef
 
-__all__ = ["block_defs", "block_forward", "block_decode", "cache_defs",
-           "build_ring_cache"]
+__all__ = ["block_defs", "block_forward", "block_decode",
+           "block_prefill_chunk", "cache_defs", "build_ring_cache"]
 
 
 def block_defs(cfg: BlockConfig, d_model: int) -> dict:
@@ -120,6 +120,33 @@ def block_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                                      cfg.moe, cfg.act)
         x = x + y
     return x, new_cache, aux
+
+
+def block_prefill_chunk(p: dict, x: jax.Array, cache: dict,
+                        cfg: BlockConfig, eps: float, table: jax.Array,
+                        chunk) -> tuple[jax.Array, dict]:
+    """One prefill CHUNK through a block against the paged pool
+    (DESIGN.md §9).  x (B, C, D); returns (y, new_cache).  Only
+    attention mixers are chunkable — SSM state is inherently sequential
+    over the whole prompt, so ssm/hybrid models admit through the
+    stop-the-world prefill path (gated at EngineStepper construction).
+    """
+    if cfg.mixer != "attn":
+        raise NotImplementedError(
+            f"chunked prefill supports attention blocks only, not "
+            f"{cfg.mixer!r}")
+    xn = rms_norm(p["norm1"], x, eps)
+    mix, new_attn = attention.attn_prefill_chunk(
+        p["attn"], xn, cache["attn"], cfg.attn, eps, table, chunk)
+    x = x + mix
+    if cfg.mlp == "dense":
+        x = x + mlp_lib.mlp_forward(p["mlp"], rms_norm(p["norm2"], x, eps),
+                                    cfg.act)
+    elif cfg.mlp == "moe":
+        y, _ = moe_lib.moe_forward(p["moe"], rms_norm(p["norm2"], x, eps),
+                                   cfg.moe, cfg.act)
+        x = x + y
+    return x, {"attn": new_attn}
 
 
 def build_ring_cache(cache_entry: dict, positions: jax.Array,

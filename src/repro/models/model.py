@@ -30,8 +30,8 @@ from repro.models.param import ParamDef
 from repro.sharding.ctx import constrain_batch
 
 __all__ = ["model_defs", "forward_train", "prefill", "decode_step",
-           "decode_segment", "cache_specs", "paged_cache_specs", "unembed",
-           "decode_unroll", "ramp_readout"]
+           "decode_segment", "prefill_chunk_segment", "cache_specs",
+           "paged_cache_specs", "unembed", "decode_unroll", "ramp_readout"]
 
 # Decode-layer execution (perf hillclimb lever, EXPERIMENTS.md §Perf):
 # scan (default) keeps HLO small; unrolled decode removes the per-step
@@ -281,6 +281,28 @@ def decode_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
     if seg.ramp:
         readout = ramp_readout(params, cfg, x[:, 0, :], segment=si)
     return x, new_cache, readout
+
+
+def prefill_chunk_segment(params, cfg: ModelConfig, si: int, x: jax.Array,
+                          cache_seg, table: jax.Array, chunk):
+    """Run segment ``si`` for one PREFILL CHUNK against the paged pool
+    (DESIGN.md §9).  x (B, C, D) -> (x', new_cache).  Chunks always run
+    full depth (no early exit during prefill: every layer's KV must be
+    complete before decode can share the pages), so there is no ramp
+    readout here — the engine reads the final head once, on the chunk
+    that finishes the prompt."""
+    seg = cfg.segments[si]
+    p_seg = params["segments"][si]["blocks"]
+
+    def body(h, xs):
+        p_layer, cache_layer = xs
+        y, new_cache = blocks.block_prefill_chunk(
+            p_layer, h, cache_layer, seg.block, cfg.norm_eps, table,
+            chunk)
+        return y, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (p_seg, cache_seg))
+    return constrain_batch(x), new_cache
 
 
 def decode_step(params, cfg: ModelConfig, batch: dict, caches, pos):

@@ -51,7 +51,7 @@ from repro.models.config import ModelConfig
 from repro.strategy.base import Strategy
 
 __all__ = ["Engine", "GenerationStats", "Classifier", "make_token_step",
-           "bank_observe", "bank_serve"]
+           "bank_observe", "bank_serve", "fold_readout"]
 
 
 def _check_online(strategy: Strategy) -> Strategy:
@@ -127,10 +127,27 @@ def bank_serve(strategies, states, sid):
     return served
 
 
+def fold_readout(strategies, states, node, logits, ell, active, sid, best):
+    """Fold one ramp/head readout into the bank: observe the loss proxy,
+    then refresh ``best`` with this node's logits for exactly the lanes
+    whose SERVED node is this one (post-observe serve() mask — an
+    earlier-exited lane's logits are never overwritten by deeper ramps
+    or the head).  Shared by the engine's token step and
+    `Classifier.classify` so the serve semantics cannot drift apart.
+
+    Returns (states, active, best)."""
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    states, active = bank_observe(strategies, states, node, ell, preds,
+                                  active, sid)
+    take = bank_serve(strategies, states, sid) == node
+    best = jnp.where(take[:, None], logits.astype(jnp.float32), best)
+    return states, active, best
+
+
 def make_token_step(params, cfg: ModelConfig, strategies, *,
                     jit: bool = True, donate: bool | None = None,
                     carry_state: bool = False, paged: bool = False,
-                    paged_kernel: bool = False):
+                    paged_kernel: bool = False, prefill_slots: int = 0):
     """Build the one-token segment sweep shared by `Engine.generate` and
     the continuous-batching runtime (`repro.serving.runtime`).
 
@@ -175,12 +192,23 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
         context manager around calls of an already-compiled step is a
         silent no-op.  Off by default: on CPU the kernel runs in
         interpret mode (correctness only); on TPU it is the hot path.
+      prefill_slots: > 0 (paged mode only) grows the step with CHUNKED
+        PREFILL co-scheduled with decode (DESIGN.md §9): the step takes
+        a `models.attention.PrefillChunk` of up to ``prefill_slots``
+        prompt tokens per admitting lane after ``states`` and, inside
+        the SAME device program, runs the full-depth chunk sweep
+        against the paged pool — no separate batch-1 prefill program,
+        no extra host sync, decode lanes keep decoding.  Lanes whose
+        chunk finishes the prompt (``chunk.emit``) get their first
+        token (argmax of the final-position head logits) returned in
+        ``next_tok`` — exactly what the stop-the-world admission would
+        have seeded the lane with.
 
     Returns ``step(tok (B,) i32, caches, pos (B,) i32, occupied (B,)
-    bool, sid (B,) i32[, kv][, states]) -> (next_tok, new_caches,
-    served_node, seg_batch, seg_policy[, states])`` — seg_* are int32
-    scalars counting this token's launched segments and per-lane probed
-    segments.
+    bool, sid (B,) i32[, kv][, states][, chunk]) -> (next_tok,
+    new_caches, served_node, seg_batch, seg_policy[, states])`` — seg_*
+    are int32 scalars counting this token's launched segments and
+    per-lane probed segments.
     """
     import contextlib
 
@@ -189,8 +217,12 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
     strategies = tuple(_check_online(s) for s in strategies)
     kernel_ctx = (_paged_kernel_ctx if (paged and paged_kernel)
                   else contextlib.nullcontext)
+    if prefill_slots and not paged:
+        raise ValueError("prefill_slots needs the paged KV pool "
+                         "(chunks are committed page by page)")
 
-    def step(tok, caches, pos, occupied, sid, kv=None, states_in=None):
+    def step(tok, caches, pos, occupied, sid, kv=None, states_in=None,
+             chunk=None):
         b = tok.shape[0]
         x = params["embed"]["table"][tok][:, None, :]
         if carry_state:
@@ -231,15 +263,8 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
                         # head matmul via models.model.ramp_readout;
                         # recall refreshes happen via serve()'s argmin
                         # bookkeeping)
-                        logits, ell = ro
-                        preds = jnp.argmax(logits, axis=-1).astype(
-                            jnp.int32)
-                        states, act = bank_observe(strategies, states,
-                                                   node, ell, preds, act,
-                                                   sid)
-                        take = bank_serve(strategies, states, sid) == node
-                        best = jnp.where(take[:, None],
-                                         logits.astype(jnp.float32), best)
+                        states, act, best = fold_readout(
+                            strategies, states, node, *ro, act, sid, best)
                     return (x2, nc, states, act, best)
 
                 ops = (x, caches[si], states, active, best_logits)
@@ -251,12 +276,8 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
         def run_head(ops):
             x, states, act, best = ops
             logits, ell = M.ramp_readout(params, cfg, x[:, 0, :])
-            preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            states, act = bank_observe(strategies, states, node, ell,
-                                        preds, act, sid)
-            take = bank_serve(strategies, states, sid) == node
-            best = jnp.where(take[:, None], logits.astype(jnp.float32),
-                             best)
+            states, act, best = fold_readout(strategies, states, node,
+                                             logits, ell, act, sid, best)
             return (x, states, act, best)
 
         ops = (x, states, active, best_logits)
@@ -264,6 +285,38 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
             active.any(), run_head, lambda o: o, ops)
 
         next_tok = jnp.argmax(best_logits, axis=-1).astype(jnp.int32)
+
+        if prefill_slots:
+            # the co-scheduled prefill chunk: full-depth sweep over the
+            # admitting lanes' chunk tokens, traced into the SAME
+            # program — the whole step is still one device launch and
+            # one host sync.  Decode above never touches these lanes
+            # (occupied excludes them), so the only shared state is the
+            # page pool, where writes land in disjoint pages.
+            with kernel_ctx():
+                def run_chunk(cs):
+                    xc = params["embed"]["table"][chunk.tok]
+                    cs = list(cs)
+                    for si in range(len(cfg.segments)):
+                        xc, cs[si] = M.prefill_chunk_segment(
+                            params, cfg, si, xc, cs[si], kv.page_table,
+                            chunk)
+                    h = xc[jnp.arange(b), chunk.last_idx, :]
+                    logits, _ = M.ramp_readout(params, cfg, h)
+                    return (tuple(cs),
+                            jnp.argmax(logits, axis=-1).astype(jnp.int32))
+
+                def skip_chunk(cs):
+                    return tuple(cs), jnp.zeros((b,), jnp.int32)
+
+                chunk_caches, t0 = jax.lax.cond(
+                    chunk.active.any(), run_chunk, skip_chunk,
+                    tuple(new_caches))
+            new_caches = list(chunk_caches)
+            # finishing lanes: seed the lane with its first token, just
+            # like the stop-the-world admission would have
+            next_tok = jnp.where(chunk.emit, t0, next_tok)
+
         served = bank_serve(strategies, states, sid)
         if carry_state:
             return next_tok, new_caches, served, seg_batch, seg_policy, \
@@ -368,28 +421,19 @@ class Classifier:
             seg_run += 1
             seg_policy += int(active.sum())
             if seg.ramp:
+                # the engine's shared fold: observe, then refresh best
+                # logits for lanes whose SERVED node is this ramp
                 logits, loss = M.ramp_readout(params, cfg, x[:, -1, :],
                                               segment=si)
-                preds = jnp.argmax(logits, axis=-1)
-                state, active = strategy.observe(
-                    state, node, loss, active, aux=preds.astype(jnp.int32))
-                # post-observe serve() mask: only lanes whose SERVED node
-                # is this ramp refresh — an earlier-exited lane's logits
-                # are never overwritten by deeper ramps or the head
-                take = strategy.serve(state) == node
-                best_logits = jnp.where(take[:, None],
-                                        logits.astype(jnp.float32),
-                                        best_logits)
+                (state,), active, best_logits = fold_readout(
+                    (strategy,), (state,), node, logits, loss, active,
+                    None, best_logits)
                 node += 1
         if bool(active.any()):
             logits, loss = M.ramp_readout(params, cfg, x[:, -1, :])
-            preds = jnp.argmax(logits, axis=-1)
-            state, active = strategy.observe(
-                state, node, loss, active,
-                aux=preds.astype(jnp.int32))
-            take = strategy.serve(state) == node
-            best_logits = jnp.where(take[:, None],
-                                    logits.astype(jnp.float32), best_logits)
+            (state,), active, best_logits = fold_readout(
+                (strategy,), (state,), node, logits, loss, active, None,
+                best_logits)
         return {
             "labels": np.asarray(jnp.argmax(best_logits, axis=-1)),
             "served_node": np.asarray(strategy.serve(state)),

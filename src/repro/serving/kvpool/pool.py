@@ -162,11 +162,19 @@ class KVPool:
         self._pending.append((need, tuple(match)))
         return True
 
-    def admit(self, lane: int, prompt, max_tokens: int) -> AdmitPlan:
+    def admit(self, lane: int, prompt, max_tokens: int, *,
+              register_prefix: bool = True) -> AdmitPlan:
         """Consume the oldest `reserve` and build the request's prefill
         scatter plan.  Sharing can only have IMPROVED since the reserve
         (earlier admissions of this round insert their prefixes), so the
-        reservation is an upper bound on what gets allocated here."""
+        reservation is an upper bound on what gets allocated here.
+
+        ``register_prefix=False`` defers the prefix-cache insert —
+        chunked prefill admits BEFORE the prompt's KV bytes exist in the
+        pool, and registering the chain early would let a concurrent
+        admission share pages whose contents are still being written
+        chunk by chunk.  The stepper calls `commit_prefix` once the
+        final chunk has committed."""
         prompt = np.asarray(prompt, np.int32)
         lp, ps = len(prompt), self.page_size
         if self.n_held[lane]:
@@ -205,13 +213,31 @@ class KVPool:
         new_pages[:len(got)] = got
 
         # future identical/extending prompts share these pages
-        self.prefix.insert(prompt, pages, ps)
+        if register_prefix:
+            self.prefix.insert(prompt, pages, ps)
         self.prompt_tokens += lp
         self.peak_pages = max(self.peak_pages, self.allocator.pages_in_use)
         return AdmitPlan(lane=lane, dest_page=dest_page,
                          dest_slot=(tok % ps).astype(np.int32),
                          pos_vals=pos_vals, new_pages=new_pages,
                          n_shared_tokens=n_shared)
+
+    def commit_prefix(self, lane: int, prompt) -> None:
+        """Register a deferred-admit lane's prompt chain in the prefix
+        cache — called by the chunked-prefill stepper AFTER the final
+        chunk's writes committed, at which point the pages hold exactly
+        the prompt's KV across every layer (chunks run full depth) and
+        sharing them is sound.  The lane has not decoded yet, so its
+        table still holds exactly the prompt chain."""
+        prompt = np.asarray(prompt, np.int32)
+        n_prompt_pages = -(-len(prompt) // self.page_size)
+        if n_prompt_pages > self.n_held[lane]:
+            raise ValueError(
+                f"lane {lane} holds {self.n_held[lane]} pages but the "
+                f"prompt needs {n_prompt_pages} — commit_prefix before "
+                "the final chunk?")
+        pages = [int(p) for p in self.table[lane, :n_prompt_pages]]
+        self.prefix.insert(prompt, pages, self.page_size)
 
     # ------------------------------------------------------------------
     # decode

@@ -17,14 +17,16 @@ milliseconds.
 
 from repro.serving.runtime.metrics import RuntimeMetrics
 from repro.serving.runtime.request import Request, RequestQueue
-from repro.serving.runtime.scheduler import EngineStepper, LaneScheduler
+from repro.serving.runtime.scheduler import (ChunkPlanner, EngineStepper,
+                                             LaneScheduler)
 from repro.serving.runtime.server import (Server, SimStepper, build_bank,
                                           cascade_factory)
 from repro.serving.runtime.workload import (available_workloads,
                                             make_workload)
 
 __all__ = [
-    "Request", "RequestQueue", "LaneScheduler", "EngineStepper",
-    "Server", "SimStepper", "RuntimeMetrics", "build_bank",
-    "cascade_factory", "make_workload", "available_workloads",
+    "Request", "RequestQueue", "LaneScheduler", "ChunkPlanner",
+    "EngineStepper", "Server", "SimStepper", "RuntimeMetrics",
+    "build_bank", "cascade_factory", "make_workload",
+    "available_workloads",
 ]

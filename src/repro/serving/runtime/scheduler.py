@@ -1,7 +1,7 @@
 """Lane scheduling: fixed-width slots, immediate recycling, static
-shapes (DESIGN.md §7; paged KV §8).
+shapes (DESIGN.md §7; paged KV §8; chunked prefill §9).
 
-Two layers:
+Three layers:
 
   * `LaneScheduler` — the pure allocator.  `n_lanes` slots; a lane is
     recycled the moment its request finishes (or its stream hits EOS);
@@ -29,7 +29,15 @@ Two layers:
     the step, while ``persistent = True`` strategies carry state across
     a request's tokens and rely on the admission reset alone — either
     way, state from a previous occupant can never leak into the next
-    request.
+    request.  ``prefill_chunk=N`` replaces the batch-1 admission
+    prefill with CHUNKED prefill co-scheduled with decode (§9): admit
+    only allocates pages and registers a cursor; each `step` then runs
+    decode AND a planner-budgeted prefill chunk in one fused program.
+
+  * `ChunkPlanner` — the per-step token budget for those chunks, split
+    fairly across prompt-length buckets (long prompts can't starve
+    short ones); shared with the sim stepper so sweeps exercise the
+    served discipline.
 
 Per-lane masked cache writes inside the token step make each lane's
 output stream a function of its own request only, so the scheduler's
@@ -44,12 +52,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
-from repro.models.attention import PagedKV
+from repro.models.attention import PagedKV, PrefillChunk
 from repro.serving.engine import make_token_step
 from repro.serving.runtime.request import Request, RequestQueue
 from repro.strategy.base import init_lane
 
-__all__ = ["LaneScheduler", "EngineStepper"]
+__all__ = ["LaneScheduler", "ChunkPlanner", "EngineStepper"]
 
 
 class LaneScheduler:
@@ -117,6 +125,84 @@ class LaneScheduler:
         return req
 
 
+class ChunkPlanner:
+    """Per-step prefill-chunk planning under a token budget with
+    prompt-length-bucketed fairness (DESIGN.md §9).
+
+    Each step, at most ``budget`` prompt tokens are spread over the
+    lanes currently mid-prefill, every lane capped at ``chunk`` tokens
+    (the device chunk width).  Lanes are grouped into power-of-two
+    prompt-length BUCKETS (in units of ``chunk``) and the budget is
+    split evenly across the nonempty buckets — a lane prefilling a
+    4096-token prompt can take at most its bucket's share, so freshly
+    admitted short prompts always find budget and reach their first
+    token in O(1) steps instead of queueing behind the long prefill
+    (and vice versa: the long prompt keeps its share no matter how many
+    shorts arrive, so neither side starves).  Within a bucket a
+    rotating round-robin pointer decides who goes first; the
+    budget-split remainder rotates across buckets.  Unused share flows
+    to the next bucket, then tops up any lane still under its cap —
+    the budget is never wasted while work remains.
+
+    Used by both the real `EngineStepper` and the virtual-clock
+    `SimStepper`, so the sim sweeps exercise the exact admission
+    discipline the engine serves with.
+    """
+
+    def __init__(self, chunk: int, budget: int | None = None):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.chunk = int(chunk)
+        self.budget = int(budget) if budget is not None else self.chunk
+        if self.budget < 1:
+            raise ValueError("budget must be >= 1")
+        self._rr = 0
+
+    def bucket(self, prompt_len: int) -> int:
+        """Power-of-two bucket index: 0 for prompts up to one chunk,
+        then doubling (chunk, 2*chunk] -> 1, (2c, 4c] -> 2, ..."""
+        return max(0, -(-int(prompt_len) // self.chunk) - 1).bit_length()
+
+    def plan(self, lanes: dict) -> dict:
+        """``lanes``: lane -> (remaining_tokens, prompt_len).  Returns
+        lane -> tokens to prefill this step (each in [1, chunk], total
+        <= budget)."""
+        if not lanes:
+            return {}
+        buckets: dict[int, list[int]] = {}
+        for lane in sorted(lanes):
+            buckets.setdefault(self.bucket(lanes[lane][1]), []).append(lane)
+        keys = sorted(buckets)
+        base, rem = divmod(self.budget, len(keys))
+        rem_at = self._rr % len(keys)
+
+        def rotated(seq):
+            off = self._rr % len(seq)
+            return seq[off:] + seq[:off]
+
+        out: dict[int, int] = {}
+        leftover = 0
+        for i, bk in enumerate(keys):
+            share = base + (rem if i == rem_at else 0) + leftover
+            for lane in rotated(buckets[bk]):
+                w = min(self.chunk, lanes[lane][0], share)
+                if w > 0:
+                    out[lane] = w
+                    share -= w
+            leftover = share
+        if leftover > 0:       # top-up pass: no budget left stranded
+            for lane in rotated(sorted(lanes)):
+                got = out.get(lane, 0)
+                add = min(self.chunk - got, lanes[lane][0] - got, leftover)
+                if add > 0:
+                    out[lane] = got + add
+                    leftover -= add
+                if leftover == 0:
+                    break
+        self._rr += 1
+        return out
+
+
 def _materialize_cache(spec, key=None):
     """Zero-filled decode cache from a `models.model.cache_specs` tree
     (attention ``pos`` buffers start at -1 == empty slot)."""
@@ -137,9 +223,25 @@ class EngineStepper:
     def __init__(self, params, cfg, strategies: tuple, *, n_lanes: int,
                  cache_len: int, prompt_len: int, jit: bool = True,
                  kv: str = "ring", page_size: int = 16,
-                 n_pages: int | None = None, paged_kernel: bool = False):
+                 n_pages: int | None = None, paged_kernel: bool = False,
+                 prefill_chunk: int | None = None,
+                 prefill_budget: int | None = None):
         if kv not in ("ring", "paged"):
             raise ValueError(f"unknown kv mode {kv!r} (ring|paged)")
+        prefill_chunk = prefill_chunk or None      # 0 == disabled
+        if prefill_chunk is not None:
+            if kv != "paged":
+                raise ValueError("chunked prefill needs --kv paged "
+                                 "(chunks commit into the page pool)")
+            for seg in cfg.segments:
+                if seg.block.mixer != "attn" \
+                        or seg.block.attn.mla is not None:
+                    raise ValueError(
+                        "chunked prefill currently supports GQA "
+                        "attention segments only (SSM state is "
+                        "sequential over the prompt; MLA chunking is a "
+                        "ROADMAP item) — drop --prefill-chunk for "
+                        f"mixer {seg.block.mixer!r}")
         self.params = params
         self.cfg = cfg
         self.strategies = strategies
@@ -148,10 +250,15 @@ class EngineStepper:
         self.prompt_len = int(prompt_len)
         self.full_depth = len(cfg.segments)
         self.kv = kv
+        self.prefill_chunk = None if prefill_chunk is None \
+            else int(prefill_chunk)
+        self.planner = None if prefill_chunk is None else ChunkPlanner(
+            self.prefill_chunk, prefill_budget)
         self._step = make_token_step(params, cfg, strategies, jit=jit,
                                      donate=False, carry_state=True,
                                      paged=(kv == "paged"),
-                                     paged_kernel=paged_kernel)
+                                     paged_kernel=paged_kernel,
+                                     prefill_slots=self.prefill_chunk or 0)
         if kv == "paged":
             from repro.serving.kvpool import KVPool
             lane_pages = -(-self.cache_len // page_size)
@@ -160,6 +267,8 @@ class EngineStepper:
             admit_fn = self._make_paged_admit()
             self._prep = jax.jit(self._paged_prep) if jit \
                 else self._paged_prep
+            self._reset = jax.jit(self._reset_pages) if jit \
+                else self._reset_pages
         else:
             self.pool = None
 
@@ -222,6 +331,23 @@ class EngineStepper:
         return admit_fn
 
     @staticmethod
+    def _reset_pages(caches, pages):
+        """Gate the stale bytes of freshly allocated pages before a
+        chunked admission starts writing into them: pos[:, pages] = -1
+        across every attention layer.  ``pages`` is garbage-padded
+        (the sink's positions are -1 by construction, so re-resetting
+        it is a no-op)."""
+        out = []
+        for seg_c in caches:
+            seg_c = dict(seg_c)
+            if "attn" in seg_c:
+                attn = dict(seg_c["attn"])
+                attn["pos"] = attn["pos"].at[:, pages].set(-1)
+                seg_c["attn"] = attn
+            out.append(seg_c)
+        return out
+
+    @staticmethod
     def _paged_prep(caches, fresh, cow_src, cow_dst):
         """Pre-step page ops: COW page copies (src -> dst across every
         attention layer — page ids are global) and fresh-page position
@@ -253,6 +379,11 @@ class EngineStepper:
         self.tok = jnp.zeros((self.n_lanes,), jnp.int32)
         self.pos = jnp.zeros((self.n_lanes,), jnp.int32)
         self.states = tuple(s.init(self.n_lanes) for s in self.strategies)
+        # chunked-prefill lane state: lane -> {prompt, plan, cursor, lp}
+        self._prefilling = {}
+        self._idle_chunk = None
+        self.chunk_stats = {"tokens_computed": 0, "tokens_skipped": 0,
+                            "chunk_steps": 0, "prefills": 0}
 
     def reserve(self, req: Request) -> bool:
         """Admission gate (the scheduler's ``can_admit``): reserve the
@@ -269,7 +400,36 @@ class EngineStepper:
             self.pool.release(lane)
 
     def admit(self, lane: int, req: Request) -> None:
-        """Prefill the request at batch 1 and scatter it into ``lane``."""
+        """Admit the request into ``lane``.
+
+        Stop-the-world mode: prefill at batch 1 and scatter the result
+        into the lane slot (stalls every decode lane for the whole
+        prompt).  Chunked mode (``prefill_chunk``): allocate the
+        prompt's pages NOW, but defer the compute — the prompt is fed
+        through the fused token step ``prefill_chunk`` tokens at a
+        time, co-scheduled with decode, and prefix-cache hits skip
+        their already-cached chunks entirely.  Chunked admission also
+        lifts the fixed prompt bucket: any prompt that fits the lane's
+        page capacity is admissible (chunks are the static shape, not
+        the prompt)."""
+        if self.prefill_chunk is not None:
+            plan = self.pool.admit(lane, req.prompt, req.max_tokens,
+                                   register_prefix=False)
+            self.caches = self._reset(self.caches,
+                                      jnp.asarray(plan.new_pages))
+            lp = int(req.prompt.shape[0])
+            # full prefix hit still recomputes the final token: the
+            # first-token logits need the last position's hidden state
+            cursor = min(plan.n_shared_tokens, lp - 1)
+            self.chunk_stats["tokens_skipped"] += cursor
+            self.chunk_stats["prefills"] += 1
+            self._prefilling[lane] = {
+                "prompt": np.asarray(req.prompt, np.int32),
+                "plan": plan, "cursor": cursor, "lp": lp}
+            self.states = tuple(
+                init_lane(s, st, lane)
+                for s, st in zip(self.strategies, self.states))
+            return
         if req.prompt.shape[0] != self.prompt_len:
             raise ValueError(
                 f"request {req.rid}: prompt length {req.prompt.shape[0]} "
@@ -310,18 +470,91 @@ class EngineStepper:
             # no-op: it copies the sink onto itself)
             idle = jnp.zeros((self.n_lanes,), jnp.int32)
             self.caches = self._prep(self.caches, idle, idle, idle)
-        self.step(occ, np.zeros((self.n_lanes,), np.int32))
+        sid0 = np.zeros((self.n_lanes,), np.int32)
+        # chunked mode: drive the dummy's whole prefill through the
+        # fused step (compiles the chunk-active branch), then decode
+        # once (compiles the chunk-idle + decode branch)
+        for _ in range(2 * self.prompt_len + 2):
+            if not self._prefilling:
+                break
+            self.step(occ, sid0)
+        self.step(occ, sid0)
         self.alloc()
 
+    def _build_chunk(self, widths: dict):
+        """Turn the planner's lane -> width map into the device
+        `PrefillChunk` (all-idle when nothing is prefilling: position
+        -1 rows, garbage destinations — the step's lax.cond skips the
+        sweep).  Advances the per-lane cursors and returns the lanes
+        whose prompt finishes with this chunk."""
+        n, c = self.n_lanes, self.prefill_chunk
+        if not widths:
+            if self._idle_chunk is None:
+                zi = jnp.zeros((n, c), jnp.int32)
+                zb = jnp.zeros((n,), bool)
+                z1 = jnp.zeros((n,), jnp.int32)
+                self._idle_chunk = PrefillChunk(
+                    tok=zi, pos=jnp.full((n, c), -1, jnp.int32),
+                    dest_page=zi, dest_slot=zi, start=z1, last_idx=z1,
+                    emit=zb, active=zb)
+            return self._idle_chunk, []
+        tok = np.zeros((n, c), np.int32)
+        pos = np.full((n, c), -1, np.int32)
+        dp = np.zeros((n, c), np.int32)     # 0 == the garbage sink
+        ds = np.zeros((n, c), np.int32)
+        start = np.zeros(n, np.int32)
+        last = np.zeros(n, np.int32)
+        emit = np.zeros(n, bool)
+        act = np.zeros(n, bool)
+        finished = []
+        for lane, w in widths.items():
+            st = self._prefilling[lane]
+            cur = st["cursor"]
+            sl = slice(cur, cur + w)
+            tok[lane, :w] = st["prompt"][sl]
+            pos[lane, :w] = np.arange(cur, cur + w, dtype=np.int32)
+            dp[lane, :w] = st["plan"].dest_page[sl]
+            ds[lane, :w] = st["plan"].dest_slot[sl]
+            start[lane] = cur
+            last[lane] = w - 1
+            act[lane] = True
+            st["cursor"] = cur + w
+            if st["cursor"] == st["lp"]:
+                emit[lane] = True
+                finished.append(lane)
+            self.chunk_stats["tokens_computed"] += w
+        self.chunk_stats["chunk_steps"] += 1
+        chunk = PrefillChunk(
+            tok=jnp.asarray(tok), pos=jnp.asarray(pos),
+            dest_page=jnp.asarray(dp), dest_slot=jnp.asarray(ds),
+            start=jnp.asarray(start), last_idx=jnp.asarray(last),
+            emit=jnp.asarray(emit), active=jnp.asarray(act))
+        return chunk, finished
+
     def step(self, occupied: np.ndarray, sid: np.ndarray):
-        """One decode token for every occupied lane.
+        """One fused step: a decode token for every occupied DECODING
+        lane and — in chunked mode — a budgeted prefill chunk for the
+        admitting lanes, in one device program.
 
         Returns host-side ``(emitted (B,), served (B,), seg_batch,
-        seg_policy)`` — a single device sync for the whole token.
+        seg_policy, emit_mask (B,) bool)`` — a single device sync for
+        the whole step.  ``emit_mask`` marks the lanes whose ``emitted``
+        entry is a real token (lanes mid-prefill emit nothing).
         """
-        occ = jnp.asarray(occupied, bool)
+        occ_np = np.asarray(occupied, bool)
+        decode = occ_np.copy()
+        widths: dict = {}
+        if self.prefill_chunk is not None and self._prefilling:
+            for lane in self._prefilling:
+                decode[lane] = False
+            widths = self.planner.plan({
+                lane: (st["lp"] - st["cursor"], st["lp"])
+                for lane, st in self._prefilling.items()})
+        occ = jnp.asarray(decode, bool)
+        sid_d = jnp.asarray(sid, jnp.int32)
+        finished: list = []
         if self.pool is not None:
-            plan = self.pool.prepare_step(occupied)
+            plan = self.pool.prepare_step(decode)
             if plan.fresh.any() or plan.cow_dst.any():
                 # page ops only when the plan has any (steady-state
                 # mid-page decode skips the dispatch + pool rewrite)
@@ -332,15 +565,32 @@ class EngineStepper:
             kv = PagedKV(page_table=jnp.asarray(self.pool.table),
                          write_page=jnp.asarray(plan.write_page),
                          write_slot=jnp.asarray(plan.write_slot))
-            tok, self.caches, served, sb, sp, self.states = self._step(
-                self.tok, self.caches, self.pos, occ,
-                jnp.asarray(sid, jnp.int32), kv, self.states)
-            self.pool.note_written(occupied)
+            if self.prefill_chunk is not None:
+                chunk, finished = self._build_chunk(widths)
+                tok, self.caches, served, sb, sp, self.states = \
+                    self._step(self.tok, self.caches, self.pos, occ,
+                               sid_d, kv, self.states, chunk)
+            else:
+                tok, self.caches, served, sb, sp, self.states = \
+                    self._step(self.tok, self.caches, self.pos, occ,
+                               sid_d, kv, self.states)
+            self.pool.note_written(decode)
         else:
             tok, self.caches, served, sb, sp, self.states = self._step(
-                self.tok, self.caches, self.pos, occ,
-                jnp.asarray(sid, jnp.int32), None, self.states)
+                self.tok, self.caches, self.pos, occ, sid_d, None,
+                self.states)
         self.tok = tok
         self.pos = self.pos + occ.astype(jnp.int32)
+        if finished:
+            # the final chunk seeded tok[lane] with the first token
+            # (inside the fused step); point the lane past its prompt
+            # and make its pages shareable now that every byte exists
+            lanes = jnp.asarray(finished, jnp.int32)
+            lps = jnp.asarray(
+                [self._prefilling[ln]["lp"] for ln in finished], jnp.int32)
+            self.pos = self.pos.at[lanes].set(lps)
+            for lane in finished:
+                st = self._prefilling.pop(lane)
+                self.pool.commit_prefix(lane, st["prompt"])
         tok_h, served_h, sb_h, sp_h = jax.device_get((tok, served, sb, sp))
-        return tok_h, served_h, int(sb_h), int(sp_h)
+        return tok_h, served_h, int(sb_h), int(sp_h), decode

@@ -91,6 +91,24 @@ class SimStepper:
     request ``rid``'s token ``t`` deterministically reads row
     ``(rid * 9973 + t) % T``, so a request's decisions are independent
     of lane placement and arrival order by construction.
+
+    Prefill cost model (DESIGN.md §9): ``prefill_tok_time`` prices one
+    prompt token.  By default admission is STOP-THE-WORLD — the whole
+    prompt's cost lands on the virtual clock as a SERIAL stall before
+    the next step, exactly like the engine's batch-1 prefill program
+    blocking the device queue.  With ``prefill_chunk`` set, admission
+    is CHUNKED instead: the same `ChunkPlanner` the real engine uses
+    spreads up to ``prefill_budget`` prompt tokens per step across
+    admitting lanes, and the fused step is priced at the PIGGYBACK
+    ROOFLINE ``max(decode cost, chunk cost)`` — single-token decode is
+    memory-bound while the prefill chunk is compute-bound, so the
+    co-scheduled chunk hides under the decode step's bandwidth time
+    until it grows past it (the Sarathi observation; the budget knob
+    is exactly the lever that keeps it hidden).  Lanes emit their
+    first token on the step after their prefill completes.  Token
+    DECISIONS are (rid, t)-keyed either way, so the two admission
+    modes produce bit-identical streams by construction — only the
+    clock moves.
     """
 
     virtual_time = True
@@ -98,9 +116,18 @@ class SimStepper:
 
     def __init__(self, strategies: tuple, trace_bank, *, n_lanes: int,
                  seg_time: float = 1.0, overhead: float = 0.25,
-                 cost: str = "lane"):
+                 cost: str = "lane", prefill_tok_time: float = 0.0,
+                 prefill_chunk: int | None = None,
+                 prefill_budget: int | None = None):
         if cost not in ("lane", "batch"):
             raise ValueError(f"unknown cost model {cost!r}")
+        from repro.serving.runtime.scheduler import ChunkPlanner
+        self.prefill_tok_time = float(prefill_tok_time)
+        prefill_chunk = prefill_chunk or None      # 0 == disabled
+        self.prefill_chunk = None if prefill_chunk is None \
+            else int(prefill_chunk)
+        self.planner = None if prefill_chunk is None else ChunkPlanner(
+            self.prefill_chunk, prefill_budget)
         self.strategies = strategies
         self.bank = np.asarray(trace_bank, np.float32)
         self.n_nodes = self.bank.shape[1]
@@ -140,10 +167,18 @@ class SimStepper:
     def alloc(self) -> None:
         self.lane_req: list[Request | None] = [None] * self.n_lanes
         self.lane_tidx = np.zeros(self.n_lanes, np.int64)
+        self.lane_prefill = np.zeros(self.n_lanes, np.int64)
+        self._stall = 0.0          # stop-the-world prefill debt
 
     def admit(self, lane: int, req: Request) -> None:
         self.lane_req[lane] = req
         self.lane_tidx[lane] = 0
+        lp = len(req.prompt)
+        if self.prefill_chunk is not None:
+            self.lane_prefill[lane] = lp
+        elif self.prefill_tok_time > 0.0:
+            # stop-the-world: the whole prompt stalls the next step
+            self._stall += lp * self.prefill_tok_time
 
     def warmup(self) -> None:
         """Compile the decision program (virtual time is unaffected)."""
@@ -156,19 +191,41 @@ class SimStepper:
         return self.bank[(req.rid * _ROW_PRIME + tidx) % len(self.bank)]
 
     def step(self, occupied: np.ndarray, sid: np.ndarray):
-        """Returns ``(emitted, served, seg_batch, seg_policy, cost)``."""
+        """Returns ``(emitted, served, seg_batch, seg_policy, cost,
+        emit_mask)`` — lanes mid-prefill are occupied but emit nothing
+        and consume no trace row."""
+        occupied = np.asarray(occupied, bool)
+        emit = occupied.copy()
+        stall = self._stall                 # stop-the-world: serial
+        self._stall = 0.0
+        chunk_cost = 0.0                    # chunked: piggybacked
+        if self.prefill_chunk is not None:
+            prefilling = occupied & (self.lane_prefill > 0)
+            emit &= ~prefilling
+            if prefilling.any():
+                widths = self.planner.plan({
+                    int(lane): (int(self.lane_prefill[lane]),
+                                len(self.lane_req[lane].prompt))
+                    for lane in np.flatnonzero(prefilling)})
+                for lane, w in widths.items():
+                    self.lane_prefill[lane] -= w
+                    chunk_cost += w * self.prefill_tok_time
         losses = np.zeros((self.n_lanes, self.n_nodes), np.float32)
-        for lane in np.flatnonzero(occupied):
+        for lane in np.flatnonzero(emit):
             losses[lane] = self._row(self.lane_req[lane],
                                      int(self.lane_tidx[lane]))
             self.lane_tidx[lane] += 1
         served, depth, policy = jax.device_get(self._decide(
-            jnp.asarray(losses), jnp.asarray(occupied, bool),
+            jnp.asarray(losses), jnp.asarray(emit, bool),
             jnp.asarray(sid, jnp.int32)))
         work = (policy / self.n_lanes) if self.cost == "lane" else depth
-        cost = self.overhead + self.seg_time * float(work)
+        # piggyback roofline: the compute-bound chunk hides under the
+        # memory-bound decode sweep; the serial stop-the-world stall
+        # cannot (it is its own batch-1 program on the device queue)
+        cost = self.overhead + max(self.seg_time * float(work),
+                                   chunk_cost) + stall
         # sim tokens have no content; the served node stands in
-        return served, served, int(depth), int(policy), cost
+        return served, served, int(depth), int(policy), cost, emit
 
 
 class Server:
@@ -261,13 +318,15 @@ class Server:
             occupied = sched.occupied_mask()
             out = stepper.step(occupied, sched.sid)
             if stepper.virtual_time:
-                emitted, served, sb, sp, cost = out
+                emitted, served, sb, sp, cost, emit = out
                 self._vt += cost
             else:
-                emitted, served, sb, sp = out
+                emitted, served, sb, sp, emit = out
             tnow = self._now()
-            metrics.on_step(sb, sp, int(occupied.sum()))
-            for lane in np.flatnonzero(occupied):
+            # emit marks lanes whose entry is a real token this step;
+            # lanes mid-(chunked-)prefill are occupied but still silent
+            metrics.on_step(sb, sp, int(np.asarray(emit).sum()))
+            for lane in np.flatnonzero(emit):
                 req = sched.lane_req[lane]
                 metrics.on_token(req.rid, int(served[lane]), tnow,
                                  token=int(emitted[lane]))

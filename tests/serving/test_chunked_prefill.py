@@ -1,0 +1,301 @@
+"""Chunked prefill co-scheduled with decode (DESIGN.md §9):
+
+  * `ChunkPlanner` budget accounting under bursty arrivals: per-step
+    totals never exceed the budget, per-lane allocations never exceed
+    the chunk width, prompt-length buckets keep long prompts from
+    starving short ones (and vice versa), every prefill completes.
+  * Real engine: the same workload served with ``prefill_chunk`` on vs
+    off emits BIT-IDENTICAL token streams; prefix-cache hits skip their
+    already-cached chunks entirely (tokens-skipped counter); admission
+    order cannot change any stream; chunked admission lifts the fixed
+    prompt bucket (mixed prompt lengths in one server).
+  * Sim/CPU acceptance (the bench's `chunked_vs_stopworld` sweep, ISSUE
+    4): chunked vs stop-the-world admission produce identical streams
+    by construction while TTFT p99 and goodput IMPROVE at the highest
+    pre-wall arrival rate.
+"""
+
+import numpy as np
+import pytest
+
+from repro import strategy
+from repro.serving import runtime as rt
+from repro.serving.runtime.request import Request
+from repro.serving.runtime.scheduler import ChunkPlanner
+
+jax = pytest.importorskip("jax")
+
+
+# --------------------------------------------------------------------------
+# ChunkPlanner (pure host logic)
+# --------------------------------------------------------------------------
+
+def test_planner_budget_and_chunk_caps_under_bursty_arrivals():
+    """Random bursts of admissions: every step's plan respects the
+    token budget and per-lane chunk cap, never over-serves a lane past
+    its remaining prompt, and drains every prefill."""
+    rng = np.random.default_rng(0)
+    chunk, budget = 8, 16
+    planner = ChunkPlanner(chunk, budget)
+    remaining: dict[int, int] = {}
+    prompt_len: dict[int, int] = {}
+    next_lane = 0
+    served_steps: dict[int, int] = {}
+    for step in range(400):
+        if rng.random() < 0.3:             # a burst of admissions
+            for _ in range(int(rng.integers(1, 4))):
+                if len(remaining) >= 8:    # lane-width admission cap
+                    break
+                lp = int(rng.integers(1, 70))
+                remaining[next_lane] = lp
+                prompt_len[next_lane] = lp
+                served_steps[next_lane] = 0
+                next_lane += 1
+        if not remaining:
+            continue
+        plan = planner.plan({lane: (rem, prompt_len[lane])
+                             for lane, rem in remaining.items()})
+        assert sum(plan.values()) <= budget
+        for lane, w in plan.items():
+            assert 1 <= w <= chunk
+            assert w <= remaining[lane]
+            remaining[lane] -= w
+            if remaining[lane] == 0:
+                del remaining[lane]
+        for lane in remaining:
+            served_steps[lane] += 1
+            # anti-starvation: nobody waits unboundedly while holding
+            # unfinished prefill work
+            assert served_steps[lane] < 64, f"lane {lane} starved"
+    # drain whatever the arrival window left behind
+    for _ in range(200):
+        if not remaining:
+            break
+        plan = planner.plan({lane: (rem, prompt_len[lane])
+                             for lane, rem in remaining.items()})
+        for lane, w in plan.items():
+            remaining[lane] -= w
+            if remaining[lane] == 0:
+                del remaining[lane]
+    assert not remaining
+
+
+def test_planner_buckets_keep_short_prompts_alive():
+    """A long prompt mid-prefill cannot monopolize the budget: a newly
+    admitted short prompt gets tokens on its very first step (and the
+    long prompt still progresses — neither side starves)."""
+    planner = ChunkPlanner(8, 16)
+    lanes = {0: (512, 512)}                # long prompt, mid-prefill
+    plan = planner.plan(lanes)
+    assert plan[0] == 8                    # capped at the chunk width
+    lanes = {0: (504, 512), 1: (6, 6)}     # short prompt arrives
+    plan = planner.plan(lanes)
+    assert plan[1] == 6                    # short finishes immediately
+    assert plan.get(0, 0) >= 1             # long still progresses
+
+
+def test_planner_topup_uses_full_budget():
+    """Leftover bucket share flows to lanes that can still take tokens
+    (never stranded while work remains)."""
+    planner = ChunkPlanner(8, 32)
+    plan = planner.plan({0: (100, 100), 1: (100, 100)})
+    assert sum(plan.values()) == 16        # both capped at chunk=8
+    plan = planner.plan({0: (3, 100), 1: (100, 100), 2: (2, 4)})
+    assert sum(plan.values()) == 13        # 3 + 8 + 2: all drained
+
+
+# --------------------------------------------------------------------------
+# real engine: bit-identical streams, prefix skipping, mixed lengths
+# --------------------------------------------------------------------------
+
+PROMPT_LEN = 12
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models.param import materialize
+    cfg = get_config("paper-ee-100m", smoke=True)
+    params = materialize(M.model_defs(cfg), jax.random.PRNGKey(0))
+    casc = strategy.Cascade.calibrate(params, cfg, jax.random.PRNGKey(1),
+                                      lam=0.5, k=8, t=64, seq=16)
+    return cfg, params, casc
+
+
+def _shared_prefix_requests(cfg, n, seed=7, arrivals=None):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab, PROMPT_LEN, dtype=np.int32)
+    out = []
+    for rid in range(n):
+        prompt = base.copy() if rid % 2 == 0 else rng.integers(
+            0, cfg.vocab, PROMPT_LEN, dtype=np.int32)
+        out.append(Request(rid=rid, prompt=prompt,
+                           max_tokens=2 + rid % 3,
+                           arrival=(arrivals[rid] if arrivals
+                                    else rid * 0.01),
+                           strategy="recall_index"))
+    return out
+
+
+def _make_stepper(cfg, params, bank, *, chunk):
+    return rt.EngineStepper(params, cfg, bank, n_lanes=2, cache_len=32,
+                            prompt_len=PROMPT_LEN, kv="paged",
+                            page_size=8, prefill_chunk=chunk,
+                            prefill_budget=None if chunk is None else 8)
+
+
+def _serve(cfg, params, casc, requests, stepper=None, *, chunk=None):
+    bank, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                 ("recall_index", None))
+    if stepper is None:
+        stepper = _make_stepper(cfg, params, bank, chunk=chunk)
+    server = rt.Server(stepper, rt.LaneScheduler(2), sid_of, slo=5.0)
+    return server.serve(requests), stepper
+
+
+def test_chunked_engine_streams_and_prefix_skip(engine_setup):
+    cfg, params, casc = engine_setup
+    requests = _shared_prefix_requests(cfg, 6)
+
+    m_stop, _ = _serve(cfg, params, casc, requests, chunk=None)
+    m_chunk, stepper = _serve(cfg, params, casc, requests, chunk=5)
+
+    # 1. bit-identical decode token streams, chunk on vs off
+    for req in requests:
+        assert m_chunk.records[req.rid].tokens == \
+            m_stop.records[req.rid].tokens, f"request {req.rid}"
+        assert m_chunk.records[req.rid].n_tokens == req.max_tokens
+
+    # 2. prefix-cache hits skipped their cached chunks entirely: the
+    # shared-prompt repeats recompute only the final readout token
+    cs = stepper.chunk_stats
+    assert cs["tokens_skipped"] > 0
+    assert cs["prefills"] == len(requests)
+    total = cs["tokens_computed"] + cs["tokens_skipped"]
+    assert total == len(requests) * PROMPT_LEN
+    # every repeat of the 2 base prompts skips PROMPT_LEN - 1 tokens
+    n_repeats = 3 - 1  # rids 0,2,4 share one base: 2 repeat admissions
+    assert cs["tokens_skipped"] >= n_repeats * (PROMPT_LEN - 1)
+
+    # 3. admission-order invariance WITH chunking: reversed, staggered
+    # arrivals place requests in different lanes with different chunk
+    # interleavings — streams must not move (reuse stepper: no
+    # recompile)
+    shuffled = _shared_prefix_requests(
+        cfg, 6, arrivals=[(5 - i) * 0.05 for i in range(6)])
+    m_shuf, _ = _serve(cfg, params, casc, shuffled, stepper=stepper)
+    for req in requests:
+        assert m_shuf.records[req.rid].tokens == \
+            m_chunk.records[req.rid].tokens, f"request {req.rid}"
+
+
+def test_chunked_admission_lifts_prompt_bucket(engine_setup):
+    """Chunked mode admits ANY prompt that fits the lane's pages (the
+    chunk is the static shape, not the prompt) — stop-the-world mode
+    still enforces the bucket."""
+    cfg, params, casc = engine_setup
+    rng = np.random.default_rng(11)
+    mixed = [Request(rid=rid,
+                     prompt=rng.integers(0, cfg.vocab, lp,
+                                         dtype=np.int32),
+                     max_tokens=2, arrival=rid * 0.01,
+                     strategy="recall_index")
+             for rid, lp in enumerate((5, 19, 12, 26))]
+    m, stepper = _serve(cfg, params, casc, mixed, chunk=5)
+    s = m.summary()
+    assert s["completed"] == len(mixed)
+    assert s["tokens"] == sum(r.max_tokens for r in mixed)
+    assert not stepper._prefilling          # all prefills drained
+
+    bank, _ = rt.build_bank(mixed, rt.cascade_factory(casc),
+                            ("recall_index", None))
+    stop = _make_stepper(cfg, params, bank, chunk=None)
+    with pytest.raises(ValueError, match="prompt length"):
+        stop.admit(0, mixed[1])
+
+
+def test_chunked_requires_paged_and_attention(engine_setup):
+    cfg, params, casc = engine_setup
+    bank = (strategy.make("recall_index", casc),)
+    with pytest.raises(ValueError, match="paged"):
+        rt.EngineStepper(params, cfg, bank, n_lanes=1, cache_len=32,
+                         prompt_len=8, kv="ring", prefill_chunk=4)
+
+
+# --------------------------------------------------------------------------
+# sim/CPU acceptance: identical streams + TTFT p99 win at the wall
+# --------------------------------------------------------------------------
+
+def test_sim_chunked_bit_identical_and_faster_at_high_rate():
+    """The ISSUE 4 acceptance gate, on the bench's own sim sweep: at
+    the highest pre-wall rate, chunked prefill emits bit-identical
+    streams and improves BOTH TTFT p99 and goodput over stop-the-world
+    admission (recorded as ``runtime_sim_prefill_*`` rows in
+    BENCH_runtime.json v2)."""
+    from benchmarks.bench_runtime import (LANES, OVERHEAD, PREFILL_TOK,
+                                          SEG_TIME, SLO, _sim_setup,
+                                          mixed_prompt_requests)
+    casc, bank_traces = _sim_setup(0)
+    requests = mixed_prompt_requests(6.0, 15.0, 0)
+    out = {}
+    for mode in ("stopworld", "chunked"):
+        bank, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                     ("recall_index", None))
+        stepper = rt.SimStepper(
+            bank, bank_traces, n_lanes=LANES, seg_time=SEG_TIME,
+            overhead=OVERHEAD, prefill_tok_time=PREFILL_TOK,
+            prefill_chunk=(16 if mode == "chunked" else None),
+            prefill_budget=32)
+        server = rt.Server(stepper, rt.LaneScheduler(LANES), sid_of,
+                           slo=SLO)
+        out[mode] = server.serve(requests)
+    for req in requests:
+        assert out["chunked"].records[req.rid].tokens == \
+            out["stopworld"].records[req.rid].tokens, f"rid {req.rid}"
+    s_chunk = out["chunked"].summary(slo=SLO)
+    s_stop = out["stopworld"].summary(slo=SLO)
+    assert s_chunk["tokens"] == s_stop["tokens"]
+    assert s_chunk["ttft"]["p99"] < s_stop["ttft"]["p99"]
+    assert s_chunk["goodput_tok_s"] > s_stop["goodput_tok_s"]
+
+
+# --------------------------------------------------------------------------
+# perf-guardrail comparator (benchmarks/check_regression.py)
+# --------------------------------------------------------------------------
+
+def test_bench_regression_guard_logic():
+    from benchmarks.check_regression import compare
+
+    def report(goodputs, kv="sim"):
+        return {"rows": [{"name": n, "rate": 2.0,
+                          "strategy": "recall_index", "kv": kv,
+                          "prefill": None, "goodput_tok_s": g}
+                         for n, g in goodputs.items()]}
+
+    old = report({"a": 10.0, "b": 20.0})
+    ok = report({"a": 9.0, "b": 19.0})
+    failures, warnings, checked = compare(old, ok)
+    assert not failures and checked == 2
+
+    bad = report({"a": 7.0, "b": 20.0})       # 30% sim drop -> fail
+    failures, _, _ = compare(old, bad)
+    assert len(failures) == 1 and "a" in failures[0]
+
+    # wall-clock rows are warn-only by default (the committed baseline
+    # may come from different hardware); an explicit opt-in threshold
+    # turns them into failures
+    old_w = report({"a": 10.0}, kv="paged")
+    failures, warnings, _ = compare(old_w, report({"a": 3.0}, kv="paged"))
+    assert not failures and len(warnings) == 1
+    failures, _, _ = compare(old_w, report({"a": 3.0}, kv="paged"),
+                             max_drop_wall=0.6)
+    assert len(failures) == 1
+
+    # new rows (schema growth) are allowed; axis drift is not
+    failures, _, checked = compare(old, report({"a": 10.0, "c": 1.0}))
+    assert not failures and checked == 1
+    drifted = report({"a": 10.0})
+    drifted["rows"][0]["strategy"] = "always_last"
+    failures, _, _ = compare(old, drifted)
+    assert len(failures) == 1 and "axis drift" in failures[0]
