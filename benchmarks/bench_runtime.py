@@ -258,6 +258,157 @@ def chunked_vs_stopworld(*, rates, duration, seed=0, chunk=16, budget=32):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# multi-model cascade vs monoliths (serving.cascade, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# the ladder's virtual cost model: the large model is 4x the small
+# model per node-probe, with fewer lanes (scarce escalation capacity —
+# what the no-recall commit policy hoards for request lifetimes and the
+# recall policy's de-escalations recycle).  Prefill/catch-up tokens are
+# priced far below decode probes: compute-bound chunks amortize (the
+# same physics as §9's piggyback roofline).
+N_SMALL, N_LARGE = 3, 3
+SEG_SMALL, SEG_LARGE = SEG_TIME, 4 * SEG_TIME
+PT_SMALL, PT_LARGE = 0.001, 0.004
+LANES_LARGE = 3
+CASCADE_LAM = 0.92
+NR_THRESHOLD = 0.45            # no-recall cascade's escalation trigger
+CASCADE_PATIENCE = 8           # recall: release a rung idle this long
+CASCADE_CHUNK = 64             # catch-up chunk cap (1-step catch-ups)
+CASCADE_BUDGETS = (64, 128)    # per-model catch-up tokens per step
+HEAD_OVERTHINK = 0.35          # extra overthink prob on model heads
+# effective node depths: each model is a COMPLETE network — a small
+# model's ramps sit near its own head, while a deep model's FIRST ramp
+# is far from its head: a committed no-recall ladder that must serve
+# whatever node it stopped on cannot reach the frontier there
+DEPTHS = ((2.2, 2.8, 3.2), (4.0, 8.0, 12.0))
+
+
+def _cascade_sim_setup(seed: int = 0):
+    """Multi-model calibration traces: one (T, 6) bank whose first 3
+    columns are the small model's ramps+head and last 3 the large
+    model's (`core.traces.cascade_traces`) — the large model is better
+    ON AVERAGE, but both heads overthink a sizable fraction of tokens
+    (the §6 regime): a no-recall server is stuck serving the last node
+    it probed, while recall serves the argmin over everything it
+    probed, exits the small model early on easy tokens, and escalates
+    only the hard ones.  That asymmetry is what the frontier
+    measures."""
+    from repro.serving.cascade import ModelBank, ModelSpec
+    rng = np.random.default_rng(seed)
+    losses, boundaries = traces.cascade_traces(
+        rng, 6_000, DEPTHS, overthink_prob=0.15,
+        head_overthink=HEAD_OVERTHINK)
+    assert boundaries == (N_SMALL, N_LARGE)
+    lam = CASCADE_LAM
+    # objective-unit node costs mirror the seg-time ratio: uniform
+    # per-segment cost within a model, the large model 4x per node
+    costs = np.concatenate([np.full(N_SMALL, 1.0 / N_SMALL),
+                            np.full(N_LARGE, 4.0 / N_LARGE)])
+    casc = strategy.Cascade.from_traces(
+        losses[:3_000], (1 - lam) * costs, k=16, lam=lam,
+        boundaries=(N_SMALL, N_LARGE))
+    bank = ModelBank([
+        ModelSpec("small", N_SMALL, n_lanes=LANES,
+                  seg_time=SEG_SMALL, prefill_tok_time=PT_SMALL),
+        ModelSpec("large", N_LARGE, n_lanes=LANES_LARGE,
+                  seg_time=SEG_LARGE, prefill_tok_time=PT_LARGE),
+    ])
+    return casc, bank, losses[3_000:]
+
+
+def _cascade_variant_stepper(variant, casc, bank, bank_traces, requests):
+    """One sweep leg: a (stepper, sid_of, n_slots, label) quadruple."""
+    from repro.serving.cascade import CascadeSimStepper
+
+    if variant in ("small_only", "large_only"):
+        # a monolith serves its model at full depth (always_last) over
+        # its OWN trace columns, lanes, and per-token cost
+        lo, hi = ((0, N_SMALL) if variant == "small_only"
+                  else (N_SMALL, N_SMALL + N_LARGE))
+        n = hi - lo
+        lanes = LANES if variant == "small_only" else LANES_LARGE
+        seg = SEG_SMALL if variant == "small_only" else SEG_LARGE
+        pt = PT_SMALL if variant == "small_only" else PT_LARGE
+        mono = strategy.Cascade.uniform(n, lam=1.0)
+        bank_s, sid_of = rt.build_bank(
+            requests, lambda name, lam: strategy.make(
+                "always_last", mono), ("always_last", None))
+        stepper = rt.SimStepper(bank_s, bank_traces[:, lo:hi],
+                                n_lanes=lanes, seg_time=seg,
+                                overhead=OVERHEAD, prefill_tok_time=pt,
+                                prefill_chunk=16, prefill_budget=32)
+        return stepper, sid_of, lanes
+    if variant == "cascade_recall":
+        def mk(name, lam):
+            return strategy.make("skip_recall", casc, mode="cascade")
+        policy = "recall"
+    elif variant == "cascade_norecall":
+        def mk(name, lam):
+            return strategy.make("norecall_threshold", casc,
+                                 threshold=NR_THRESHOLD, lam=1.0)
+        policy = "commit"
+    else:
+        raise ValueError(f"unknown cascade variant {variant!r}")
+    bank_s, sid_of = rt.build_bank(requests, mk, ("cascade", None))
+    stepper = CascadeSimStepper(bank, bank_s, bank_traces,
+                                overhead=OVERHEAD, policy=policy,
+                                patience=CASCADE_PATIENCE,
+                                chunk=CASCADE_CHUNK,
+                                budgets=list(CASCADE_BUDGETS))
+    return stepper, sid_of, LANES
+
+
+CASCADE_VARIANTS = ("small_only", "large_only", "cascade_norecall",
+                    "cascade_recall")
+
+
+def cascade_vs_monolith(*, rates, duration, seed=0,
+                        variants=CASCADE_VARIANTS):
+    """Rate x variant sweep: {small-only, large-only, cascade-no-recall,
+    cascade-recall} on the SAME request stream and trace rows, reporting
+    goodput AND mean served trace loss — the two Pareto axes.  The
+    recall cascade's argmin serving plus retained-residency re-pins are
+    what let it dominate both monoliths and the no-recall ladder at the
+    pre-wall rates (pinned by the CI cascade smoke)."""
+    casc, bank, bank_traces = _cascade_sim_setup(seed)
+    rows = []
+    for rate in rates:
+        spec = WorkloadSpec(rate=rate, duration=duration, prompt_len=8,
+                            max_tokens=(4, 32), seed=seed + 41)
+        requests = make_workload("poisson", spec)
+        for variant in variants:
+            stepper, sid_of, lanes = _cascade_variant_stepper(
+                variant, casc, bank, bank_traces, requests)
+            server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
+                               slo=SLO)
+            s = server.serve(requests).summary(slo=SLO)
+            cs = stepper.cascade_stats() \
+                if hasattr(stepper, "cascade_stats") else None
+            loss = (cs["mean_served_loss"] if cs
+                    else stepper.mean_served_loss)
+            row = {
+                "name": f"runtime_sim_cascade_{variant}_r{rate:g}",
+                "us_per_call": s["duration"] / max(s["tokens"], 1) * 1e6,
+                "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
+                            f"loss={loss:.3f} "
+                            f"ttft_p99={s['ttft']['p99']:.2f}s "
+                            f"slo_att={100 * s['slo_attainment']:.0f}%"),
+                "summary": s, "rate": rate, "strategy": "cascade",
+                "kv": "sim", "cascade": variant,
+                "served_loss_mean": loss,
+            }
+            if cs:
+                row["cascade_stats"] = cs
+                row["derived"] += (
+                    f" esc={cs['escalations']}"
+                    f" recalls={cs['recalls']}"
+                    f" repin={cs['repin_tokens']}")
+            rows.append(row)
+    return rows
+
+
 def _shared_prefix_requests(vocab, *, n_requests, prompt_len, seed):
     """Deterministic mix: 3 of every 4 requests reuse one of two base
     prompts (what a shared system preamble looks like), the rest are
@@ -342,15 +493,18 @@ def paged_vs_ring_real(*, n_requests=8, lanes=2, prompt_len=16,
 
 def stable_report(rows: list[dict]) -> dict:
     """The accumulating perf-trajectory schema (BENCH_runtime.json):
-    one flat row per rate x strategy x kv-mode x prefill-mode.  The v1
-    keys are stable across commits (absent dimensions are null); v2
-    adds the ``prefill`` axis (``chunked`` | ``stopworld`` | null) and
-    the chunked-prefill token counters."""
+    one flat row per rate x strategy x kv-mode x prefill-mode x
+    cascade-variant.  The v1/v2 keys are stable across commits (absent
+    dimensions are null); v2 added the ``prefill`` axis + chunk token
+    counters, v3 adds the ``cascade`` axis (``small_only`` |
+    ``large_only`` | ``cascade_norecall`` | ``cascade_recall`` | null)
+    with the served-loss quality axis and escalation/recall counters."""
     out = []
     for row in rows:
         s = row.get("summary") or {}
         pool = row.get("kv_pool") or {}
         chunk = row.get("chunked_prefill") or {}
+        casc = row.get("cascade_stats") or {}
         ttft = s.get("ttft") or {}
         out.append({
             "name": row["name"],
@@ -368,8 +522,14 @@ def stable_report(rows: list[dict]) -> dict:
             "prefill": row.get("prefill"),
             "prefill_tokens_computed": chunk.get("tokens_computed"),
             "prefill_tokens_skipped": chunk.get("tokens_skipped"),
+            # v3 axis: multi-model cascade serving (DESIGN.md §10)
+            "cascade": row.get("cascade"),
+            "served_loss_mean": row.get("served_loss_mean"),
+            "escalations": casc.get("escalations"),
+            "recalls": casc.get("recalls"),
+            "repin_tokens": casc.get("repin_tokens"),
         })
-    return {"schema": "bench_runtime/v2", "rows": out}
+    return {"schema": "bench_runtime/v3", "rows": out}
 
 
 def run(smoke: bool = False) -> list[dict]:
@@ -379,6 +539,7 @@ def run(smoke: bool = False) -> list[dict]:
                                    duration=15.0)
         rows += recycling_vs_static_sim(n_requests=24)
         rows += chunked_vs_stopworld(rates=(2.0, 6.0), duration=15.0)
+        rows += cascade_vs_monolith(rates=(2.0, 3.0), duration=30.0)
         rows += paged_vs_ring_real(n_requests=6)
     else:
         rows = sweep_rate_strategy(
@@ -388,6 +549,8 @@ def run(smoke: bool = False) -> list[dict]:
         rows += recycling_vs_static_sim(n_requests=48)
         rows += chunked_vs_stopworld(rates=(2.0, 4.0, 6.0),
                                      duration=30.0)
+        rows += cascade_vs_monolith(rates=(1.0, 2.0, 3.0, 4.0),
+                                    duration=30.0)
         rows += recycling_vs_engine_real()
         rows += paged_vs_ring_real(n_requests=16, lanes=4)
     return rows

@@ -28,7 +28,7 @@ import argparse
 import json
 import sys
 
-AXES = ("rate", "strategy", "kv", "prefill")
+AXES = ("rate", "strategy", "kv", "prefill", "cascade")
 
 
 def compare(old: dict, new: dict, *, max_drop: float = 0.20,

@@ -27,7 +27,7 @@ from repro.core.markov import MarkovChain
 from repro.core.support import Support
 
 __all__ = ["SkipTables", "solve_skip", "edge_costs_skip_free",
-           "edge_costs_cumulative"]
+           "edge_costs_cumulative", "edge_costs_cascade"]
 
 STOP = -1  # NEXT-table entry meaning "stop and serve the argmin"
 
@@ -68,6 +68,63 @@ def edge_costs_cumulative(costs: np.ndarray) -> np.ndarray:
     for i in range(n + 1):
         for j in range(i + 1, n + 1):
             c[i, j] = pref[j] - pref[i]
+    return c.astype(np.float32)
+
+
+def edge_costs_cascade(costs: np.ndarray, boundaries,
+                       entry_costs=None) -> np.ndarray:
+    """Multi-MODEL cascade edge costs: the node line is partitioned into
+    consecutive per-model groups (``boundaries`` = nodes per model, in
+    ladder order) and the cost of an edge depends on whether it stays
+    inside one model or crosses into a later one.
+
+      * WITHIN model m (i, j in m): cumulative — skipping intermediate
+        ramps still pays their backbone segments (exactly
+        `edge_costs_cumulative` restricted to the model).
+      * INTO model m' from an earlier model (or the root): the target
+        model runs from ITS OWN first segment through node j — the
+        source model's remaining segments are never executed
+        (``skip_free`` across the boundary), and none of m''s segments
+        can be skipped because the escalation prefill/backbone must
+        traverse them all.  ``entry_costs[m']`` (optional, per model)
+        adds a fixed escalation charge — the amortized catch-up prefill
+        of moving a stream onto m'.
+
+    Edges BACK to earlier models do not exist in the DP (the line is
+    directed); recall — *serving* an earlier model's already-probed node
+    — is free by construction (argmin bookkeeping), which is the runtime
+    claim the cascade subsystem makes physical: retained pages make the
+    recall a page-table re-pin, not a recompute.
+
+    With a single model this reduces exactly to `edge_costs_cumulative`.
+    """
+    costs = np.asarray(costs, np.float64)
+    n = len(costs)
+    boundaries = tuple(int(b) for b in boundaries)
+    if any(b < 1 for b in boundaries) or sum(boundaries) != n:
+        raise ValueError(f"boundaries {boundaries} must be positive and "
+                         f"sum to n_nodes={n}")
+    if entry_costs is None:
+        entry_costs = np.zeros(len(boundaries), np.float64)
+    entry_costs = np.asarray(entry_costs, np.float64)
+    if entry_costs.shape != (len(boundaries),):
+        raise ValueError(f"entry_costs shape {entry_costs.shape} != "
+                         f"({len(boundaries)},)")
+    model_of = np.repeat(np.arange(len(boundaries)), boundaries)
+    # cum[j] = model-local cumulative cost from model(j)'s first segment
+    # through node j's segment (inclusive)
+    cum = np.zeros(n, np.float64)
+    start = 0
+    for b in boundaries:
+        cum[start:start + b] = np.cumsum(costs[start:start + b])
+        start += b
+    c = np.zeros((n + 1, n + 1), np.float64)
+    for j in range(n):
+        for i in range(-1, j):
+            if i >= 0 and model_of[i] == model_of[j]:
+                c[i + 1, j + 1] = cum[j] - cum[i]
+            else:
+                c[i + 1, j + 1] = cum[j] + entry_costs[model_of[j]]
     return c.astype(np.float32)
 
 

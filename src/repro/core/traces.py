@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["random_instance", "ee_like_traces"]
+__all__ = ["random_instance", "ee_like_traces", "cascade_traces"]
 
 
 def random_instance(rng: np.random.Generator, n: int, k: int,
@@ -74,3 +74,47 @@ def ee_like_traces(rng: np.random.Generator, t: int, n: int,
     # per-node incremental cost (segment i alone)
     inc = np.diff(np.concatenate([[0.0], flops]))
     return losses.astype(np.float64), correct, inc.astype(np.float64)
+
+
+def cascade_traces(rng: np.random.Generator, t: int, depths,
+                   overthink_prob: float = 0.15,
+                   head_overthink: float = 0.0,
+                   difficulty_spread: float = 1.0):
+    """Multi-MODEL cascade loss traces: one (t, sum(n_m)) bank whose
+    column groups are the node ladders of several models evaluated on
+    the SAME inputs.
+
+    ``depths`` is a list of per-model effective-depth vectors (one entry
+    per node, ladder order).  Unlike `ee_like_traces` — where the first
+    nodes are the shallow prefix of ONE network — each model here is a
+    complete network: a small model's ramps sit close to its own head
+    (flat depth profile), while a larger model's nodes are much deeper.
+    All models share each sample's latent difficulty, and noise is
+    AR(1)-correlated across the whole ladder (a hard token is hard for
+    everyone; App. D.3's positive correlation).
+
+    ``head_overthink`` adds extra overthinking probability on each
+    model's LAST node — the §6 regime where a bigger model's head is
+    sometimes beaten by an earlier node, which only recall can exploit.
+
+    Returns (losses (t, n_total), boundaries tuple).
+    """
+    depths = [np.asarray(d, np.float64) for d in depths]
+    boundaries = tuple(len(d) for d in depths)
+    depth = np.concatenate(depths)[None, :]
+    n = depth.shape[1]
+    d = rng.lognormal(mean=0.0, sigma=difficulty_spread, size=(t, 1))
+    base = d / (d + depth)
+    noise = rng.normal(0.0, 0.05, size=(t, n))
+    for i in range(1, n):
+        noise[:, i] = 0.7 * noise[:, i - 1] + 0.3 * noise[:, i]
+    bump = (rng.uniform(size=(t, n)) < overthink_prob) * \
+        rng.uniform(0.05, 0.4, size=(t, n))
+    bump[:, 0] = 0.0
+    if head_overthink > 0.0:
+        heads = np.cumsum(boundaries) - 1
+        extra = (rng.uniform(size=(t, len(heads))) < head_overthink) * \
+            rng.uniform(0.05, 0.45, size=(t, len(heads)))
+        bump[:, heads] += extra
+    losses = np.clip(base + noise + bump, 1e-4, 1.0)
+    return losses.astype(np.float64), boundaries

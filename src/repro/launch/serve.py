@@ -16,6 +16,16 @@ strategies (§5) that share the line calibration.  ``--server`` replays a
 seeded open-loop workload (``--workload poisson|bursty|diurnal``) into
 the lane scheduler and reports throughput, latency percentiles, goodput
 under ``--slo-ms``, and segments saved (repro.serving.runtime).
+
+``--cascade small:large`` serves a MULTI-MODEL ladder in one process
+(repro.serving.cascade, DESIGN.md §10): the strategy's node line spans
+every model, escalation chunk-prefills the stream onto deeper models,
+and ``--escalate-policy recall`` makes revisiting an earlier model a
+page-table re-pin:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --server \
+      --cascade paper-ee-100m:paper-ee-100m --policy skip_recall \
+      --rate 4 --duration 5 --lanes 4 --cascade-lanes 2
 """
 
 from __future__ import annotations
@@ -64,10 +74,13 @@ def build_strategy(name: str, casc: strategy.Cascade, *, threshold: float,
             return strategy.make(name, casc, patience=patience, lam=1.0)
         return strategy.make(name, casc, threshold=threshold, lam=1.0)
     if name == "skip_recall":
-        # intra-model early exit: skipped segments still pay backbone
+        # edge-cost semantics by cascade shape: multi-model ladders pay
+        # skip_free-style cross-model edges ("cascade"); a single model
+        # pays cumulative backbone for skipped segments
+        mode = "cascade" if casc.boundaries is not None else "cumulative"
         if lam is not None:
-            return strategy.make(name, casc, mode="cumulative", lam=lam)
-        return strategy.make(name, casc, mode="cumulative")
+            return strategy.make(name, casc, mode=mode, lam=lam)
+        return strategy.make(name, casc, mode=mode)
     if lam is not None:
         return strategy.make(name, casc, lam=lam)
     return strategy.make(name, casc)
@@ -105,6 +118,170 @@ def _serve_batch(args, cfg, params, strat) -> None:
                           lane_steps=args.tokens * args.batch)
     print(f"served-node histogram: "
           f"{np.bincount(stats.served_nodes.ravel(), minlength=n_nodes)}")
+
+
+def _print_latency_summary(args, s) -> None:
+    """Shared --server report block (single-model and cascade)."""
+    def ms(v):
+        return "n/a" if v is None else f"{1e3 * v:.0f}ms"
+
+    print(f"completed {s['completed']}/{s['requests']} requests, "
+          f"{s['tokens']} tokens in {s['duration']:.2f}s")
+    print(f"throughput: {s['throughput_tok_s']:.1f} tok/s "
+          f"({s['throughput_req_s']:.2f} req/s)")
+    print(f"latency: ttft p50 {ms(s['ttft']['p50'])} "
+          f"p95 {ms(s['ttft']['p95'])} p99 {ms(s['ttft']['p99'])}; "
+          f"token p50 {ms(s['token_latency']['p50'])} "
+          f"p95 {ms(s['token_latency']['p95'])} "
+          f"p99 {ms(s['token_latency']['p99'])}")
+    att = s["slo_attainment"]
+    print(f"goodput (ttft<={args.slo_ms:.0f}ms): "
+          f"{s['goodput_tok_s']:.1f} tok/s "
+          f"(attainment {100 * att:.0f}%)" if att is not None else
+          "goodput: n/a")
+
+
+def _calibrate_multi(cfgs, params_list, key, lam, *, k: int = 16,
+                     t: int = 128, seq: int = 32) -> strategy.Cascade:
+    """Multi-model calibration: every ladder model prefills the SAME
+    random prompts; the concatenated per-node losses become one
+    `Cascade` with model boundaries (strategy/cascade.py), per-node
+    costs weighted by each model's backbone FLOPs share."""
+    toks = jax.random.randint(key, (t, seq), 0, cfgs[0].vocab)
+    model_losses, weights = [], []
+    for cfg, params in zip(cfgs, params_list):
+        _, _, node_losses, _ = M.prefill(params, cfg, {"tokens": toks},
+                                         cache_len=seq + 8)
+        model_losses.append(np.asarray(node_losses))
+        # FLOPs proxy: layers x d_model^2 (dense decode cost order)
+        layers = sum(seg.n_layers for seg in cfg.segments)
+        weights.append(layers * cfg.d_model ** 2)
+    base = weights[0]
+    model_costs = [
+        (1.0 - lam) * np.full((ls.shape[1],),
+                              (w / base) / ls.shape[1])
+        for ls, w in zip(model_losses, weights)]
+    return strategy.Cascade.from_model_traces(model_losses, model_costs,
+                                              k=k, lam=lam, solve=False)
+
+
+def _serve_cascade(args) -> None:
+    """--cascade small:large — a ladder of models in ONE process,
+    served as a T-Tamer multi-stage decision process
+    (repro.serving.cascade, DESIGN.md §10)."""
+    from repro.serving import runtime as rt
+    from repro.serving.cascade import CascadeEngineStepper, ModelBank, \
+        ModelSpec
+    from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+    arch_names = args.cascade.split(":")
+    if len(arch_names) < 2:
+        raise SystemExit("--cascade needs at least two ':'-separated "
+                         "arch names (e.g. qwen3-4b:qwen3-14b)")
+    cfgs = [get_config(a, smoke=args.smoke) for a in arch_names]
+    vocabs = {cfg.vocab for cfg in cfgs}
+    if len(vocabs) > 1:
+        # fail BEFORE the expensive multi-model calibration: JAX clamps
+        # out-of-range token ids silently, so a mismatched ladder would
+        # burn minutes prefilling garbage before ModelBank errors
+        raise SystemExit(
+            f"--cascade models must share tokenization (one vocab); "
+            f"got {sorted(vocabs)} for {arch_names}")
+    key = jax.random.PRNGKey(0)
+    params_list = []
+    for i, cfg in enumerate(cfgs):
+        params_list.append(materialize(M.model_defs(cfg),
+                                       jax.random.PRNGKey(i)))
+    ladder = " -> ".join(f"{a} ({cfg.n_ramps + 1} nodes)"
+                         for a, cfg in zip(arch_names, cfgs))
+    print(f"cascade ladder: {ladder} (random init demo — per-model "
+          "checkpoints are a ROADMAP item)")
+
+    name = ALIASES.get(args.policy, args.policy)
+    if strategy.needs_tables(name):
+        casc = _calibrate_multi(cfgs, params_list,
+                                jax.random.PRNGKey(args.seed + 1),
+                                args.lam)
+    else:
+        casc = strategy.Cascade.uniform(
+            sum(cfg.n_ramps + 1 for cfg in cfgs), lam=args.lam,
+            boundaries=tuple(cfg.n_ramps + 1 for cfg in cfgs))
+
+    lanes = [args.lanes] + [args.cascade_lanes] * (len(cfgs) - 1)
+    # rung-indexed spec names keep prefix caches isolated even when the
+    # same arch appears twice (distinct params = distinct KV bytes)
+    bank = ModelBank([
+        ModelSpec(f"{i}:{a}", cfg.n_ramps + 1, n_lanes=n, cfg=cfg,
+                  params=p)
+        for i, (a, cfg, p, n) in enumerate(
+            zip(arch_names, cfgs, params_list, lanes))])
+
+    lo = max(1, min(4, args.tokens))
+    spec = WorkloadSpec(rate=args.rate, duration=args.duration,
+                        prompt_len=args.prompt_len, vocab=cfgs[0].vocab,
+                        max_tokens=(lo, args.tokens), seed=args.seed,
+                        strategy=name)
+    requests = make_workload(args.workload, spec)
+    if not requests:
+        print("workload produced no arrivals; raise --rate or --duration")
+        return
+
+    def make_strategy(sname, lam):
+        return build_strategy(sname, casc, threshold=args.threshold,
+                              patience=args.patience, lam=lam)
+
+    strat_bank, sid_of = rt.build_bank(requests, make_strategy,
+                                       (name, None))
+    stepper = CascadeEngineStepper(
+        bank, strat_bank, cache_len=args.cache_len,
+        prompt_len=args.prompt_len, page_size=args.page_size,
+        chunk=args.prefill_chunk or 8,
+        budgets=([args.prefill_budget] * len(cfgs)
+                 if args.prefill_budget else None),
+        pages=([args.pages] * len(cfgs) if args.pages else None),
+        policy=args.escalate_policy, patience=args.escalate_patience,
+        paged_kernel=args.paged_kernel)
+    slo = args.slo_ms / 1e3
+    server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
+                       order=args.order, slo=slo, eos=args.eos)
+    print(f"serving {len(requests)} {args.workload} requests "
+          f"(rate {args.rate}/s x {args.duration}s) on a "
+          f"{'->'.join(arch_names)} cascade "
+          f"({'+'.join(str(n) for n in lanes)} lanes), policy {name}, "
+          f"escalate-policy {args.escalate_policy} "
+          f"(patience {args.escalate_patience}), "
+          f"SLO ttft<={args.slo_ms:.0f}ms ...")
+    metrics = server.serve(requests)
+    s = metrics.summary(slo=slo)
+    _print_latency_summary(args, s)
+    _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
+                          steps=metrics.steps, n_seg=bank.n_total,
+                          lane_steps=metrics.lane_steps)
+    cs = stepper.cascade_stats()
+    total = max(sum(cs["tokens_served"]), 1)
+    print("cascade: " + ", ".join(
+        f"{m} served {n} tokens ({100 * n / total:.0f}%)"
+        for m, n in zip(cs["models"], cs["tokens_served"])))
+    print(f"escalations {cs['escalations']}, recalls {cs['recalls']}, "
+          f"de-escalations {cs['deescalations']}, commits "
+          f"{cs['commits']}, re-pinned catch-up tokens "
+          f"{cs['repin_tokens']}")
+    for mname in cs["models"]:
+        ps = cs["pools"][mname]
+        print(f"kv pool [{mname}]: peak {ps['pages_peak']}/"
+              f"{ps['n_pages'] - 1} pages, prefix hit rate "
+              f"{100 * ps['prefix_hit_rate']:.0f}%, "
+              f"{ps['cow_splits']} COW splits, {ps['grows']} grows")
+    if args.json:
+        extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
+                 "cascade": args.cascade,
+                 "escalate_policy": args.escalate_policy,
+                 "cascade_stats": {k: v for k, v in cs.items()
+                                   if k != "pools"} | {
+                     "pools": {m: dict(p)
+                               for m, p in cs["pools"].items()}}}
+        metrics.to_json(args.json, slo=slo, extra=extra)
+        print(f"wrote metrics JSON to {args.json}")
 
 
 def _serve_traffic(args, cfg, params, casc) -> None:
@@ -150,24 +327,7 @@ def _serve_traffic(args, cfg, params, casc) -> None:
           f"SLO ttft<={args.slo_ms:.0f}ms ...")
     metrics = server.serve(requests)
     s = metrics.summary(slo=slo)
-
-    def ms(v):
-        return "n/a" if v is None else f"{1e3 * v:.0f}ms"
-
-    print(f"completed {s['completed']}/{s['requests']} requests, "
-          f"{s['tokens']} tokens in {s['duration']:.2f}s")
-    print(f"throughput: {s['throughput_tok_s']:.1f} tok/s "
-          f"({s['throughput_req_s']:.2f} req/s)")
-    print(f"latency: ttft p50 {ms(s['ttft']['p50'])} "
-          f"p95 {ms(s['ttft']['p95'])} p99 {ms(s['ttft']['p99'])}; "
-          f"token p50 {ms(s['token_latency']['p50'])} "
-          f"p95 {ms(s['token_latency']['p95'])} "
-          f"p99 {ms(s['token_latency']['p99'])}")
-    att = s["slo_attainment"]
-    print(f"goodput (ttft<={args.slo_ms:.0f}ms): "
-          f"{s['goodput_tok_s']:.1f} tok/s "
-          f"(attainment {100 * att:.0f}%)" if att is not None else
-          "goodput: n/a")
+    _print_latency_summary(args, s)
     _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
                           steps=metrics.steps, n_seg=len(cfg.segments),
                           lane_steps=metrics.lane_steps)
@@ -252,6 +412,27 @@ def main() -> None:
                          "(--kv paged; DESIGN.md §9).  Also lifts the "
                          "fixed prompt bucket: any prompt that fits a "
                          "lane's pages is admissible")
+    ap.add_argument("--cascade", default=None,
+                    help="serve a MULTI-MODEL cascade: ':'-separated "
+                         "arch names in escalation order (e.g. "
+                         "qwen3-4b:qwen3-14b; shared tokenization "
+                         "required).  All models live in one process; "
+                         "the strategy decides per token which model "
+                         "serves (repro.serving.cascade, DESIGN.md "
+                         "§10).  Implies --server")
+    ap.add_argument("--escalate-policy", default="recall",
+                    choices=("recall", "commit"),
+                    help="cascade residency policy: 'recall' retains "
+                         "the source model (recall = page re-pin; "
+                         "deeper rungs released after --escalate-"
+                         "patience idle tokens), 'commit' pins the "
+                         "stream to the escalated model for good")
+    ap.add_argument("--escalate-patience", type=int, default=4,
+                    help="recall policy: de-escalate a rung after this "
+                         "many consecutive tokens that never probed it")
+    ap.add_argument("--cascade-lanes", type=int, default=None,
+                    help="decode lanes per deeper cascade rung "
+                         "(default: max(1, --lanes // 2))")
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="max prompt tokens prefilled per step across "
                          "all admitting lanes (default: --prefill-"
@@ -262,6 +443,12 @@ def main() -> None:
     args = ap.parse_args()
     if args.lanes is None:
         args.lanes = args.batch
+    if args.cascade_lanes is None:
+        args.cascade_lanes = max(1, args.lanes // 2)
+
+    if args.cascade:
+        _serve_cascade(args)
+        return
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(0)

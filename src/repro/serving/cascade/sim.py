@@ -1,0 +1,356 @@
+"""`CascadeSimStepper` — virtual-clock multi-model cascade serving
+(DESIGN.md §10).
+
+The decision layer is EXACT: each emitted token's node walk over the
+combined ladder line is the same ``bank_observe``/``bank_serve`` fold
+`strategy.evaluate` runs offline on that token's trace row, so
+per-request decisions are independent of lane placement, escalation
+timing, and arrival order by construction (the dual-model
+decision-parity test pins this).  What the simulation ADDS is the
+runtime: which models are resident, what escalation catch-up costs,
+which steps a token can actually emit in, and what the virtual clock
+charges — the knobs (`ModelSpec.seg_time` / ``prefill_tok_time`` per
+model) that let the cascade-vs-monolith sweep reproduce the paper's
+recall-vs-no-recall frontier without any model params.
+
+Cost model per step (one device, serial across models, piggyback
+roofline per model exactly like the single-model sim):
+
+    cost = overhead + sum_m max(seg_time_m * probes_m / lanes_m,
+                                prefill_tok_time_m * catchup_m)
+
+Probes are charged on the step they physically run: an escalating
+token's source-model probes at walk time, its target-model probes when
+the catch-up finishes and the pending token resolves.  Tokens and
+served losses are attributed to the model that SERVED them
+(`metrics.CascadeStats`), and an escalating slot is occupied-but-silent
+until its pending token emits, so TTFT reflects real emission time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.cascade.bank import ModelBank
+from repro.serving.cascade.metrics import CascadeStats
+from repro.serving.cascade.router import CascadeRouter
+from repro.serving.cascade.scheduler import EscalationScheduler
+from repro.serving.engine import bank_observe, bank_serve
+from repro.serving.runtime.request import Request
+
+__all__ = ["CascadeSimStepper", "make_cascade_decide"]
+
+_ROW_PRIME = 9973   # same (rid, token) -> row mapping as SimStepper
+
+
+def _check_strategies(strategies, n_total: int, policy: str):
+    for s in strategies:
+        if s.n_nodes != n_total:
+            raise ValueError(
+                f"strategy expects {s.n_nodes} nodes, the cascade ladder "
+                f"has {n_total}")
+        if getattr(s, "needs_aux", False):
+            raise ValueError(
+                f"{type(s).__name__} consumes the aux prediction channel; "
+                "simulation replays losses only")
+        if policy == "commit" and getattr(s, "jumps", False):
+            raise ValueError(
+                f"{type(s).__name__} walks a NEXT table from the root; "
+                "the commit policy pins walks to a floor mid-line, which "
+                "the table was not solved for — use --escalate-policy "
+                "recall (or a threshold/index strategy)")
+
+
+def make_cascade_decide(bank: ModelBank, strategies: tuple):
+    """Build the jitted combined-ladder walk.
+
+    ``decide(losses (B, n_total), occupied (B,), sid (B,), floor (B,))``
+    returns ``(served (B,), probes (M, B) i32, depth (M,) i32)``:
+    the served global node, per-model per-lane node-probe counts, and
+    per-model launched-node counts.  ``floor`` gates the walk — nodes
+    below a lane's floor are neither observed nor charged, but the lane
+    stays eligible to start at the floor (the commit policy's pinned
+    walk); floor 0 reproduces `strategy.evaluate` exactly.
+    """
+    n_models = len(bank)
+
+    def probed_of(states, sid):
+        out = states[0].n_probed
+        for k in range(1, len(strategies)):
+            out = jnp.where(sid == k, states[k].n_probed, out)
+        return out
+
+    def decide(losses, occupied, sid, floor):
+        b = losses.shape[0]
+        states = tuple(s.init(b) for s in strategies)
+        active = occupied
+        np_before = jnp.zeros((b,), jnp.int32)
+        probes, depth = [], []
+        node = 0
+        for m in range(n_models):
+            d = jnp.zeros((), jnp.int32)
+            for _ in range(bank[m].n_nodes):
+                obs = active & (node >= floor)
+                d = d + obs.any().astype(jnp.int32)
+                states, cont = bank_observe(strategies, states, node,
+                                            losses[:, node], None, obs,
+                                            sid)
+                # below its floor a lane passes through un-observed
+                active = jnp.where(node >= floor, cont, active)
+                node += 1
+            np_now = probed_of(states, sid)
+            probes.append(np_now - np_before)
+            np_before = np_now
+            depth.append(d)
+        served = bank_serve(strategies, states, sid)
+        return served, jnp.stack(probes), jnp.stack(depth)
+
+    return jax.jit(decide)
+
+
+class CascadeSimStepper:
+    """Model-free multi-model stepper behind the standard Server loop."""
+
+    virtual_time = True
+    emits_tokens = False
+
+    def __init__(self, bank: ModelBank, strategies: tuple, trace_bank, *,
+                 overhead: float = 0.25, policy: str = "recall",
+                 patience: int = 4, chunk: int = 16, budgets=None):
+        self.bank = bank
+        self.strategies = strategies
+        self.traces = np.asarray(trace_bank, np.float32)
+        if self.traces.shape[1] != bank.n_total:
+            raise ValueError(f"trace bank has {self.traces.shape[1]} "
+                             f"node columns, ladder has {bank.n_total}")
+        _check_strategies(strategies, bank.n_total, policy)
+        self.n_lanes = bank[0].n_lanes        # Server request slots
+        self.full_depth = bank.n_total
+        self.overhead = float(overhead)
+        self.policy = policy
+        self.patience = int(patience)
+        self.chunk = int(chunk)
+        self.budgets = budgets
+        self._decide = make_cascade_decide(bank, strategies)
+        self.alloc()
+
+    # ------------------------------------------------------------------
+
+    def alloc(self) -> None:
+        n = self.n_lanes
+        self.lane_req: list[Request | None] = [None] * n
+        self.lane_tidx = np.zeros(n, np.int64)
+        self.prefill0 = np.zeros(n, np.int64)
+        self.router = CascadeRouter(self.bank, n, policy=self.policy,
+                                    patience=self.patience)
+        self.esc = EscalationScheduler(self.bank, chunk=self.chunk,
+                                       budgets=self.budgets)
+        # slot -> {model: catch-up tokens remaining} (granted lanes only)
+        self.catchup: dict[int, dict[int, int]] = {}
+        # slot -> {model: the catch-up's full length} (planner buckets)
+        self.catchup_total: dict[int, dict[int, int]] = {}
+        self.stats = CascadeStats(len(self.bank))
+
+    def warmup(self) -> None:
+        self._decide(jnp.zeros((self.n_lanes, self.bank.n_total),
+                               jnp.float32),
+                     jnp.zeros((self.n_lanes,), bool),
+                     jnp.zeros((self.n_lanes,), jnp.int32),
+                     jnp.zeros((self.n_lanes,), jnp.int32))
+        self.alloc()
+
+    def reserve(self, req: Request) -> bool:
+        return True
+
+    def admit(self, slot: int, req: Request) -> None:
+        self.lane_req[slot] = req
+        self.lane_tidx[slot] = 0
+        lp = len(req.prompt)
+        self.prefill0[slot] = lp
+        self.router.admit(slot, lp)
+
+    def release(self, slot: int) -> None:
+        for m in self.router.release(slot):
+            if m >= 1:
+                self.esc.release(slot, m)
+        self.esc.cancel(slot)
+        self.catchup.pop(slot, None)
+        self.catchup_total.pop(slot, None)
+        self.lane_req[slot] = None
+        self.prefill0[slot] = 0
+
+    # ------------------------------------------------------------------
+
+    def _row(self, req: Request, tidx: int) -> np.ndarray:
+        return self.traces[(req.rid * _ROW_PRIME + tidx)
+                           % len(self.traces)]
+
+    def _start_catchup(self, slot: int, m: int) -> None:
+        lp = len(self.lane_req[slot].prompt)
+        need = self.router.catchup_need(slot, m, lp)
+        credit = self.router.stream_pos(slot, lp) - need
+        if credit > 0:
+            # retained context made the re-escalation a re-pin: these
+            # tokens are NOT recomputed
+            self.stats.repin_tokens += credit
+        self.catchup.setdefault(slot, {})[m] = need
+        # the planner buckets by the catch-up's FULL length (what the
+        # engine's per-rung ChunkPlanner sees), not the moving remainder
+        self.catchup_total.setdefault(slot, {})[m] = max(need, 1)
+
+    def _escalation_ready(self, slot: int) -> bool:
+        tr = self.router.slots[slot]
+        if tr is None or tr.pending is None:
+            return False
+        cu = self.catchup.get(slot, {})
+        return all(m in cu and cu[m] == 0 for m in tr.pending["targets"])
+
+    def step(self, occupied: np.ndarray, sid: np.ndarray):
+        """Returns ``(emitted, served, seg_batch, seg_policy, cost,
+        emit_mask)`` — the SimStepper contract; ``emitted`` carries the
+        served global node (sim tokens have no content)."""
+        occupied = np.asarray(occupied, bool)
+        emit = occupied.copy()
+        served_out = np.zeros(self.n_lanes, np.int32)
+        m_count = len(self.bank)
+        probes_paid = np.zeros(m_count, np.int64)
+        chunk_cost = np.zeros(m_count, np.float64)
+        seg_batch = 0
+
+        # 0. lanes freed since last step go to FIFO waiters
+        for slot, m, _lane in self.esc.grants():
+            self._start_catchup(slot, m)
+
+        # 1. initial model-0 admission prefill (chunked, budgeted)
+        prefilling = occupied & (self.prefill0 > 0)
+        emit &= ~prefilling
+        if prefilling.any():
+            widths = self.esc.plan_catchup(0, {
+                int(s): (int(self.prefill0[s]),
+                         len(self.lane_req[s].prompt))
+                for s in np.flatnonzero(prefilling)})
+            for slot, w in widths.items():
+                self.prefill0[slot] -= w
+                chunk_cost[0] += w * self.bank[0].prefill_tok_time
+
+        # 2. escalation catch-up chunks, per target model, budgeted
+        for m in range(1, m_count):
+            lanes = {slot: (cu[m], self.catchup_total[slot][m])
+                     for slot, cu in self.catchup.items()
+                     if occupied[slot] and cu.get(m, 0) > 0}
+            for slot, w in self.esc.plan_catchup(m, lanes).items():
+                self.catchup[slot][m] -= w
+                chunk_cost[m] += w * self.bank[m].prefill_tok_time
+                self.stats.catchup_tokens[m] += w
+
+        # 3. escalations whose every target is granted + caught up:
+        #    the pending token resolves and emits NOW, paying the
+        #    target-model probes stashed in its handoff
+        resolved = set()
+        for slot in range(self.n_lanes):
+            if not occupied[slot] or not self._escalation_ready(slot):
+                if (occupied[slot] and self.router.slots[slot] is not None
+                        and self.router.slots[slot].pending is not None):
+                    emit[slot] = False      # escalating: silent
+                continue
+            tr = self.router.slots[slot]
+            handoff = tr.pending["handoff"]
+            targets = list(tr.pending["targets"])
+            lp = len(self.lane_req[slot].prompt)
+            for m in self.router.finish_escalation(slot, lp):
+                if m >= 1:
+                    self.esc.release(slot, m)
+            if self.policy == "commit":
+                self.stats.commits += 1
+            for m in targets:
+                # the walk already counted these nodes in seg_batch at
+                # trigger time; only the probe COST lands here
+                probes_paid[m] += int(handoff["probes"][m])
+            served = int(handoff["served"])
+            served_out[slot] = served
+            emit[slot] = True
+            resolved.add(slot)
+            self.stats.on_served(self.bank.model_of(served),
+                                 max(handoff["probed_models"]),
+                                 loss=handoff["loss"])
+            for m in self.router.note_emit(slot,
+                                           handoff["probed_models"],
+                                           served, lp):
+                self.esc.release(slot, m)
+                self.stats.deescalations += 1
+            for m in targets:
+                self.catchup.get(slot, {}).pop(m, None)
+                self.catchup_total.get(slot, {}).pop(m, None)
+
+        # 4. the walk for every normally decoding slot (one batched,
+        #    jitted fold over the combined ladder)
+        decode = [s for s in np.flatnonzero(emit) if s not in resolved]
+        if decode:
+            losses = np.zeros((self.n_lanes, self.bank.n_total),
+                              np.float32)
+            floor = np.zeros(self.n_lanes, np.int32)
+            for slot in decode:
+                losses[slot] = self._row(self.lane_req[slot],
+                                         int(self.lane_tidx[slot]))
+                floor[slot] = self.router.floor(slot)
+            mask = np.zeros(self.n_lanes, bool)
+            mask[decode] = True
+            served, probes, depth = jax.device_get(self._decide(
+                jnp.asarray(losses), jnp.asarray(mask),
+                jnp.asarray(sid, jnp.int32), jnp.asarray(floor)))
+            seg_batch += int(depth.sum())
+            for slot in decode:
+                self.lane_tidx[slot] += 1
+                lp = len(self.lane_req[slot].prompt)
+                probed = [m for m in range(m_count)
+                          if int(probes[m, slot]) > 0]
+                targets = self.router.escalation_targets(slot, probed)
+                resident = set(self.router.resident(slot))
+                for m in probed:
+                    if m in resident:
+                        probes_paid[m] += int(probes[m, slot])
+                if targets:
+                    # the token cannot finish on the resident rungs:
+                    # stash the handoff, request deeper lanes, go silent
+                    emit[slot] = False
+                    self.router.begin_escalation(slot, targets, {
+                        "served": int(served[slot]),
+                        "probes": np.asarray(probes[:, slot]),
+                        "probed_models": probed,
+                        "loss": float(losses[slot, int(served[slot])]),
+                    })
+                    self.stats.escalations += len(targets)
+                    for m in targets:
+                        if self.esc.request(slot, m) is not None:
+                            self._start_catchup(slot, m)
+                else:
+                    served_out[slot] = int(served[slot])
+                    self.stats.on_served(
+                        self.bank.model_of(int(served[slot])),
+                        max(probed) if probed else 0,
+                        loss=float(losses[slot, int(served[slot])]))
+                    for m in self.router.note_emit(slot, probed,
+                                                   int(served[slot]), lp):
+                        self.esc.release(slot, m)
+                        self.stats.deescalations += 1
+
+        # 5. the virtual clock: serial across models, piggyback
+        #    roofline within each (catch-up hides under decode)
+        cost = self.overhead
+        for m in range(m_count):
+            self.stats.probes[m] += int(probes_paid[m])
+            decode_cost = self.bank[m].seg_time * float(probes_paid[m]) \
+                / max(self.bank[m].n_lanes, 1)
+            cost += max(decode_cost, float(chunk_cost[m]))
+        seg_policy = int(probes_paid.sum())
+        return (served_out, served_out, int(seg_batch), int(seg_policy),
+                cost, emit)
+
+    def cascade_stats(self) -> dict:
+        out = self.stats.as_dict()
+        out["models"] = [s.name for s in self.bank.specs]
+        out["peak_lanes"] = {f"m{m}": v
+                             for m, v in self.esc.peak_in_use.items()}
+        return out

@@ -147,7 +147,9 @@ def fold_readout(strategies, states, node, logits, ell, active, sid, best):
 def make_token_step(params, cfg: ModelConfig, strategies, *,
                     jit: bool = True, donate: bool | None = None,
                     carry_state: bool = False, paged: bool = False,
-                    paged_kernel: bool = False, prefill_slots: int = 0):
+                    paged_kernel: bool = False, prefill_slots: int = 0,
+                    node_offset: int = 0, walk_io: bool = False,
+                    resume_walk: bool = False):
     """Build the one-token segment sweep shared by `Engine.generate` and
     the continuous-batching runtime (`repro.serving.runtime`).
 
@@ -192,6 +194,27 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
         context manager around calls of an already-compiled step is a
         silent no-op.  Off by default: on CPU the kernel runs in
         interpret mode (correctness only); on TPU it is the hot path.
+      node_offset: global id of this model's FIRST node — the multi-
+        model cascade runtime (serving.cascade) builds one step per
+        ladder model over ONE combined strategy bank, so each model's
+        ramps/head must fold under their global node ids (model m's
+        nodes are [offset, offset + n_m)).  The default 0 is the
+        single-model case.
+      walk_io: the step additionally takes a ``walk`` pair ``(active
+        (B,) bool, best_logits (B, vocab) f32)`` as its LAST argument
+        and returns the updated pair appended to its outputs — the
+        ESCALATION HANDOFF BUFFER.  A lane still active after this
+        model's head wants to probe a deeper ladder model; its walk
+        state + served-so-far logits hand off to that model's step
+        (possibly several steps later, after a catch-up prefill) so the
+        cross-model walk serves exactly what a single fused program
+        would have.
+      resume_walk: (needs carry_state + walk_io) this step CONTINUES
+        mid-token walks started on an earlier ladder model: the bank
+        states arrive pre-folded and are NOT re-initialized at the
+        token boundary (the first model's step already did that reset).
+        Strategies with ``persistent = True`` are rejected — their
+        cross-token state cannot also encode a mid-token handoff.
       prefill_slots: > 0 (paged mode only) grows the step with CHUNKED
         PREFILL co-scheduled with decode (DESIGN.md §9): the step takes
         a `models.attention.PrefillChunk` of up to ``prefill_slots``
@@ -220,12 +243,25 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
     if prefill_slots and not paged:
         raise ValueError("prefill_slots needs the paged KV pool "
                          "(chunks are committed page by page)")
+    if resume_walk:
+        if not (carry_state and walk_io):
+            raise ValueError("resume_walk continues a handed-off walk; "
+                             "it needs carry_state and walk_io")
+        for s in strategies:
+            if getattr(s, "persistent", False):
+                raise ValueError(
+                    f"{type(s).__name__} is persistent — its cross-token "
+                    "state cannot double as a mid-token walk handoff")
 
     def step(tok, caches, pos, occupied, sid, kv=None, states_in=None,
-             chunk=None):
+             chunk=None, walk=None):
         b = tok.shape[0]
         x = params["embed"]["table"][tok][:, None, :]
-        if carry_state:
+        if resume_walk:
+            # mid-token continuation: the earlier ladder model's step
+            # already reset + folded these states for this token
+            states = states_in
+        elif carry_state:
             # per-token exploration: every occupied lane starts this
             # token from a fresh state, sliced per lane so unoccupied
             # lanes' (stale, masked-out) leaves stay bit-stable.
@@ -239,10 +275,17 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
             states = tuple(s.init(b) for s in strategies)
         active = occupied
         best_logits = jnp.zeros((b, cfg.vocab), jnp.float32)
+        if walk_io:
+            # escalation handoff in: resume each lane's walk activity
+            # and its best-served-so-far logits from the previous
+            # ladder model's step
+            walk_active, walk_best = walk
+            active = occupied & walk_active
+            best_logits = walk_best
         seg_batch = jnp.zeros((), jnp.int32)
         seg_policy = jnp.zeros((), jnp.int32)
         new_caches = list(caches)
-        node = 0
+        node = node_offset
         # context entered at TRACE time: selects which attention impl
         # (jnp gather vs Pallas kernel) gets traced into the program
         with kernel_ctx():
@@ -318,10 +361,15 @@ def make_token_step(params, cfg: ModelConfig, strategies, *,
             next_tok = jnp.where(chunk.emit, t0, next_tok)
 
         served = bank_serve(strategies, states, sid)
+        out = (next_tok, new_caches, served, seg_batch, seg_policy)
         if carry_state:
-            return next_tok, new_caches, served, seg_batch, seg_policy, \
-                states
-        return next_tok, new_caches, served, seg_batch, seg_policy
+            out = out + (states,)
+        if walk_io:
+            # handoff out: post-head `active` is exactly the escalation
+            # signal — the lane's strategy wants to probe a node beyond
+            # this model's ladder rung
+            out = out + ((active, best_logits),)
+        return out
 
     if not jit:
         return step

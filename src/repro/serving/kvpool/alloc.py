@@ -87,9 +87,15 @@ class PageAllocator:
         return False
 
 
-def _prefix_key(tokens: np.ndarray, n: int) -> bytes:
-    """Content hash of ``tokens[:n]`` (length-salted, dtype-canonical)."""
-    h = hashlib.sha1(np.ascontiguousarray(tokens[:n], np.int32).tobytes())
+def _prefix_key(tokens: np.ndarray, n: int, salt: bytes = b"") -> bytes:
+    """Content hash of ``tokens[:n]`` (length-salted, dtype-canonical).
+
+    ``salt`` namespaces the key — the cascade subsystem passes a MODEL
+    key so identical prompt text admitted on two different models can
+    never resolve to the same page chain (their KV bytes are different
+    tensors entirely)."""
+    h = hashlib.sha1(salt)
+    h.update(np.ascontiguousarray(tokens[:n], np.int32).tobytes())
     h.update(n.to_bytes(8, "little"))
     return h.digest()
 
@@ -102,10 +108,16 @@ class PrefixCache:
     is what later forces a copy-on-write split when the new lane appends
     its own tokens).  ``lookup`` returns the longest match and increfs
     the matched pages on behalf of the caller's lane.
+
+    ``model_key`` salts every hash: two caches (or one cache serving two
+    models over a shared allocator) with different keys are fully
+    isolated — the same prompt text never matches across models.
     """
 
-    def __init__(self, allocator: PageAllocator):
+    def __init__(self, allocator: PageAllocator,
+                 model_key: str | None = None):
         self.allocator = allocator
+        self._salt = (model_key or "").encode()
         self._entries: collections.OrderedDict[bytes, tuple[tuple[int, ...],
                                                             int]] = \
             collections.OrderedDict()
@@ -142,12 +154,13 @@ class PrefixCache:
         if not peek:
             self.lookups += 1
         for ln in self._match_keys(tokens, page_size):
-            ent = self._entries.get(_prefix_key(tokens, ln))
+            ent = self._entries.get(_prefix_key(tokens, ln, self._salt))
             if ent is None:
                 continue
             pages, n_tok = ent
             if not peek:
-                self._entries.move_to_end(_prefix_key(tokens, ln))
+                self._entries.move_to_end(
+                    _prefix_key(tokens, ln, self._salt))
                 for pid in pages:
                     self.allocator.incref(pid)
                 self.hits += 1
@@ -168,7 +181,7 @@ class PrefixCache:
         if n % page_size:
             bounds.append(n)
         for ln in bounds:
-            key = _prefix_key(tokens, ln)
+            key = _prefix_key(tokens, ln, self._salt)
             if key in self._entries:
                 continue
             chain = tuple(pages[: (ln + page_size - 1) // page_size])

@@ -73,12 +73,23 @@ class KVPool:
     """Host-side paged-KV bookkeeping for ``n_lanes`` decode lanes."""
 
     def __init__(self, *, n_lanes: int, page_size: int, lane_pages: int,
-                 n_pages: int | None = None):
+                 n_pages: int | None = None,
+                 max_lane_pages: int | None = None,
+                 model_key: str | None = None):
         if page_size < 1 or lane_pages < 1:
             raise ValueError("page_size and lane_pages must be >= 1")
         self.n_lanes = int(n_lanes)
         self.page_size = int(page_size)
         self.lane_pages = int(lane_pages)
+        # the device page-table WIDTH (static shape): admission reserves
+        # against `lane_pages`, but `grow` may extend a lane's budget in
+        # page-aligned increments up to this hard capacity — the knob
+        # that lets escalated lanes avoid double worst-case reservation
+        self.max_lane_pages = max(self.lane_pages,
+                                  int(max_lane_pages or self.lane_pages))
+        # namespaces the prefix cache (multi-model cascades: identical
+        # prompt text on two models must never share page chains)
+        self.model_key = model_key
         # default: ring-equivalent HBM (n_lanes x lane capacity) + sink
         self.n_pages = int(n_pages) if n_pages is not None \
             else self.n_lanes * self.lane_pages + 1
@@ -88,9 +99,9 @@ class KVPool:
         """Fresh allocation state (the stepper re-materializes device
         pools separately — stale KV bytes are gated by pos resets)."""
         self.allocator = PageAllocator(self.n_pages)
-        self.prefix = PrefixCache(self.allocator)
-        self.table = np.full((self.n_lanes, self.lane_pages), GARBAGE_PAGE,
-                             np.int32)
+        self.prefix = PrefixCache(self.allocator, model_key=self.model_key)
+        self.table = np.full((self.n_lanes, self.max_lane_pages),
+                             GARBAGE_PAGE, np.int32)
         self.n_held = np.zeros(self.n_lanes, np.int32)
         self.seq_len = np.zeros(self.n_lanes, np.int32)
         self.budget = np.zeros(self.n_lanes, np.int32)
@@ -103,6 +114,7 @@ class KVPool:
         self.prompt_tokens = 0
         self.cow_splits = 0
         self.peak_pages = 0
+        self.grows = 0
 
     # ------------------------------------------------------------------
     # admission
@@ -145,11 +157,12 @@ class KVPool:
         matched prefix chain is pinned against eviction until the admit,
         so the sharing this need was computed from cannot be evicted out
         from under it (by this call's own eviction or a later one's)."""
-        if len(prompt) + max_tokens > self.lane_pages * self.page_size:
+        if len(prompt) + max_tokens > self.max_lane_pages * self.page_size:
             raise PoolExhausted(
                 f"request needs {len(prompt) + max_tokens} tokens but a "
-                f"lane holds at most {self.lane_pages} pages x "
-                f"{self.page_size} = {self.lane_pages * self.page_size}")
+                f"lane holds at most {self.max_lane_pages} pages x "
+                f"{self.page_size} = "
+                f"{self.max_lane_pages * self.page_size}")
         need, match = self._fresh_need(prompt, max_tokens)
         self._pinned.update(match)
         if need > self._headroom():
@@ -209,7 +222,7 @@ class KVPool:
         dest_page[:n_shared] = GARBAGE_PAGE
         pos_vals = tok.copy()
         pos_vals[:n_shared] = -1
-        new_pages = np.full(self.lane_pages, GARBAGE_PAGE, np.int32)
+        new_pages = np.full(self.max_lane_pages, GARBAGE_PAGE, np.int32)
         new_pages[:len(got)] = got
 
         # future identical/extending prompts share these pages
@@ -259,11 +272,12 @@ class KVPool:
             pos = int(self.seq_len[lane])
             slot = pos % self.page_size
             pidx = pos // self.page_size
-            if pidx >= self.lane_pages:
+            if pidx >= self.max_lane_pages:
                 raise PoolExhausted(
                     f"lane {lane} exceeded its page table "
-                    f"({self.lane_pages} pages) — admission must cap "
-                    "prompt_len + max_tokens")
+                    f"({self.max_lane_pages} pages) — admission (plus "
+                    "any grow() increments) must cap prompt_len + "
+                    "max_tokens")
             if pidx == self.n_held[lane]:        # page boundary: grow
                 got = self._alloc_from_budget(lane)
                 self.table[lane, pidx] = got
@@ -297,6 +311,62 @@ class KVPool:
         self.budget[lane] -= 1
         return got[0]
 
+    def can_append(self, lane: int) -> bool:
+        """Can the lane's NEXT decode append succeed from its reserved
+        budget?  Mirrors exactly what `prepare_step` will need: a fresh
+        page at a page boundary, a COW split when the tail is shared —
+        callers of incremental reservation (`grow`) consult this before
+        including the lane in a step and defer it when growth fails
+        (the never-fail-mid-stream guarantee, kept incrementally)."""
+        pos = int(self.seq_len[lane])
+        pidx = pos // self.page_size
+        if pidx >= self.max_lane_pages:
+            return False
+        need = 0
+        if pidx == self.n_held[lane]:
+            need = 1                                  # fresh tail page
+        elif self.allocator.refcount(int(self.table[lane, pidx])) > 1:
+            need = 1                                  # COW split
+        return int(self.budget[lane]) >= need
+
+    def tokens_headroom(self, lane: int) -> int:
+        """Tokens the lane can still append WITHOUT another `grow`:
+        slack in its held pages plus its reserved (budgeted) pages."""
+        cap = (int(self.n_held[lane]) + int(self.budget[lane])) \
+            * self.page_size
+        return cap - int(self.seq_len[lane])
+
+    def grow(self, lane: int, extra_tokens: int) -> bool:
+        """Extend a live lane's page budget by a page-aligned increment
+        covering ``extra_tokens`` more appends — growth BEYOND the
+        admission-time reservation (the escalated-lane fix: a stream
+        re-admitted on another model reserves a small initial budget and
+        grows as it decodes instead of double worst-case reservation).
+
+        The increment is RESERVED here (the same never-fail-mid-stream
+        guarantee as admission: decode only ever allocates from budget),
+        so a True return means the next ``extra_tokens`` appends cannot
+        hit an empty free list.  Returns False — leaving all state
+        untouched — when the pool lacks headroom or the lane's table is
+        at its hard ``max_lane_pages`` capacity; the caller defers the
+        lane (emit nothing, retry next step) rather than crashing."""
+        if extra_tokens < 1:
+            raise ValueError(f"grow({extra_tokens})")
+        if not self.n_held[lane]:
+            raise ValueError(f"lane {lane} holds no pages (grow is for "
+                             "live lanes; use reserve/admit)")
+        inc = -(-int(extra_tokens) // self.page_size)
+        if (int(self.n_held[lane]) + int(self.budget[lane]) + inc
+                > self.max_lane_pages):
+            return False
+        if inc > self._headroom():
+            self.prefix.evict(inc - self._headroom(), pinned=self._pinned)
+        if inc > self._headroom():
+            return False
+        self.budget[lane] += inc
+        self.grows += 1
+        return True
+
     def note_written(self, occupied: np.ndarray) -> None:
         """Commit one decoded token per occupied lane."""
         self.seq_len[np.flatnonzero(occupied)] += 1
@@ -329,4 +399,5 @@ class KVPool:
             "shared_tokens": pf.shared_tokens,
             "cow_splits": self.cow_splits,
             "evictions": pf.evictions,
+            "grows": self.grows,
         }

@@ -225,7 +225,11 @@ class EngineStepper:
                  kv: str = "ring", page_size: int = 16,
                  n_pages: int | None = None, paged_kernel: bool = False,
                  prefill_chunk: int | None = None,
-                 prefill_budget: int | None = None):
+                 prefill_budget: int | None = None,
+                 node_offset: int = 0, walk_io: bool = False,
+                 resume_walk: bool = False,
+                 max_lane_pages: int | None = None,
+                 model_key: str | None = None):
         if kv not in ("ring", "paged"):
             raise ValueError(f"unknown kv mode {kv!r} (ring|paged)")
         prefill_chunk = prefill_chunk or None      # 0 == disabled
@@ -254,16 +258,22 @@ class EngineStepper:
             else int(prefill_chunk)
         self.planner = None if prefill_chunk is None else ChunkPlanner(
             self.prefill_chunk, prefill_budget)
+        self.walk_io = bool(walk_io)
         self._step = make_token_step(params, cfg, strategies, jit=jit,
                                      donate=False, carry_state=True,
                                      paged=(kv == "paged"),
                                      paged_kernel=paged_kernel,
-                                     prefill_slots=self.prefill_chunk or 0)
+                                     prefill_slots=self.prefill_chunk or 0,
+                                     node_offset=node_offset,
+                                     walk_io=walk_io,
+                                     resume_walk=resume_walk)
         if kv == "paged":
             from repro.serving.kvpool import KVPool
             lane_pages = -(-self.cache_len // page_size)
             self.pool = KVPool(n_lanes=self.n_lanes, page_size=page_size,
-                               lane_pages=lane_pages, n_pages=n_pages)
+                               lane_pages=lane_pages, n_pages=n_pages,
+                               max_lane_pages=max_lane_pages,
+                               model_key=model_key)
             admit_fn = self._make_paged_admit()
             self._prep = jax.jit(self._paged_prep) if jit \
                 else self._paged_prep
@@ -450,6 +460,13 @@ class EngineStepper:
         self.states = tuple(init_lane(s, st, lane)
                             for s, st in zip(self.strategies, self.states))
 
+    def set_lane_token(self, lane: int, token: int) -> None:
+        """Override a lane's next input token — the cascade router uses
+        this after an escalation catch-up prefill: the finishing chunk
+        seeds its own head argmax, but the escalated stream's next input
+        is the token the SOURCE model already emitted."""
+        self.tok = self.tok.at[lane].set(jnp.int32(token))
+
     def warmup(self) -> None:
         """Compile the admit + prep + step programs off the serving
         clock."""
@@ -531,7 +548,7 @@ class EngineStepper:
             emit=jnp.asarray(emit), active=jnp.asarray(act))
         return chunk, finished
 
-    def step(self, occupied: np.ndarray, sid: np.ndarray):
+    def step(self, occupied: np.ndarray, sid: np.ndarray, walk=None):
         """One fused step: a decode token for every occupied DECODING
         lane and — in chunked mode — a budgeted prefill chunk for the
         admitting lanes, in one device program.
@@ -540,6 +557,14 @@ class EngineStepper:
         seg_policy, emit_mask (B,) bool)`` — a single device sync for
         the whole step.  ``emit_mask`` marks the lanes whose ``emitted``
         entry is a real token (lanes mid-prefill emit nothing).
+
+        ``walk_io`` steppers (the cascade's per-model rungs) also take
+        an optional ``walk`` handoff pair ``(active (B,) bool,
+        best_logits (B, vocab) f32)`` — omitted, every occupied lane
+        starts a fresh walk — and return an extra trailing element
+        ``(walk_active (B,) bool host, best_logits device)``: the
+        escalation handoff the cascade router stashes for the next
+        ladder model.
         """
         occ_np = np.asarray(occupied, bool)
         decode = occ_np.copy()
@@ -552,6 +577,9 @@ class EngineStepper:
                 for lane, st in self._prefilling.items()})
         occ = jnp.asarray(decode, bool)
         sid_d = jnp.asarray(sid, jnp.int32)
+        if self.walk_io and walk is None:
+            walk = (jnp.ones((self.n_lanes,), bool),
+                    jnp.zeros((self.n_lanes, self.cfg.vocab), jnp.float32))
         finished: list = []
         if self.pool is not None:
             plan = self.pool.prepare_step(decode)
@@ -565,20 +593,27 @@ class EngineStepper:
             kv = PagedKV(page_table=jnp.asarray(self.pool.table),
                          write_page=jnp.asarray(plan.write_page),
                          write_slot=jnp.asarray(plan.write_slot))
+            args = (self.tok, self.caches, self.pos, occ, sid_d, kv,
+                    self.states)
             if self.prefill_chunk is not None:
                 chunk, finished = self._build_chunk(widths)
-                tok, self.caches, served, sb, sp, self.states = \
-                    self._step(self.tok, self.caches, self.pos, occ,
-                               sid_d, kv, self.states, chunk)
-            else:
-                tok, self.caches, served, sb, sp, self.states = \
-                    self._step(self.tok, self.caches, self.pos, occ,
-                               sid_d, kv, self.states)
+                args = args + (chunk,)
+            elif self.walk_io:
+                args = args + (None,)
+            if self.walk_io:
+                args = args + (walk,)
+            out = self._step(*args)
             self.pool.note_written(decode)
         else:
-            tok, self.caches, served, sb, sp, self.states = self._step(
-                self.tok, self.caches, self.pos, occ, sid_d, None,
-                self.states)
+            args = (self.tok, self.caches, self.pos, occ, sid_d, None,
+                    self.states)
+            if self.walk_io:
+                args = args + (None, walk)
+            out = self._step(*args)
+        if self.walk_io:
+            tok, self.caches, served, sb, sp, self.states, walk_out = out
+        else:
+            tok, self.caches, served, sb, sp, self.states = out
         self.tok = tok
         self.pos = self.pos + occ.astype(jnp.int32)
         if finished:
@@ -592,5 +627,10 @@ class EngineStepper:
             for lane in finished:
                 st = self._prefilling.pop(lane)
                 self.pool.commit_prefix(lane, st["prompt"])
+        if self.walk_io:
+            tok_h, served_h, sb_h, sp_h, wa_h = jax.device_get(
+                (tok, served, sb, sp, walk_out[0]))
+            return (tok_h, served_h, int(sb_h), int(sp_h), decode,
+                    (wa_h, walk_out[1]))
         tok_h, served_h, sb_h, sp_h = jax.device_get((tok, served, sb, sp))
         return tok_h, served_h, int(sb_h), int(sp_h), decode

@@ -169,6 +169,11 @@ class SimStepper:
         self.lane_tidx = np.zeros(self.n_lanes, np.int64)
         self.lane_prefill = np.zeros(self.n_lanes, np.int64)
         self._stall = 0.0          # stop-the-world prefill debt
+        # served-loss accumulator: the sim knows the served node's trace
+        # loss exactly, which is the quality axis the cascade-vs-
+        # monolith Pareto sweep compares on
+        self.served_loss_sum = 0.0
+        self.served_loss_n = 0
 
     def admit(self, lane: int, req: Request) -> None:
         self.lane_req[lane] = req
@@ -218,6 +223,9 @@ class SimStepper:
         served, depth, policy = jax.device_get(self._decide(
             jnp.asarray(losses), jnp.asarray(emit, bool),
             jnp.asarray(sid, jnp.int32)))
+        for lane in np.flatnonzero(emit):
+            self.served_loss_sum += float(losses[lane, served[lane]])
+            self.served_loss_n += 1
         work = (policy / self.n_lanes) if self.cost == "lane" else depth
         # piggyback roofline: the compute-bound chunk hides under the
         # memory-bound decode sweep; the serial stop-the-world stall
@@ -226,6 +234,12 @@ class SimStepper:
                                    chunk_cost) + stall
         # sim tokens have no content; the served node stands in
         return served, served, int(depth), int(policy), cost, emit
+
+    @property
+    def mean_served_loss(self) -> float | None:
+        if not self.served_loss_n:
+            return None
+        return self.served_loss_sum / self.served_loss_n
 
 
 class Server:

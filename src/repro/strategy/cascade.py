@@ -47,10 +47,29 @@ class Cascade:
     skip_tables: SkipTables | None = None
     edge_costs: np.ndarray | None = None   # (n+1, n+1), set by solve_skip
     skip_mode: str | None = None
+    # multi-model cascades: consecutive node counts per model (ladder
+    # order) — None means the classic single-model line
+    boundaries: tuple | None = None
+    entry_costs: tuple | None = None       # per-model escalation charge
 
     @property
     def n_nodes(self) -> int:
         return self.chain.n
+
+    @property
+    def n_models(self) -> int:
+        return 1 if self.boundaries is None else len(self.boundaries)
+
+    def node_model(self, node: int) -> int:
+        """Which ladder model owns global node ``node``."""
+        if self.boundaries is None:
+            return 0
+        acc = 0
+        for m, b in enumerate(self.boundaries):
+            acc += b
+            if node < acc:
+                return m
+        raise ValueError(f"node {node} out of range ({acc} nodes)")
 
     # ------------------------------------------------------------------
     # construction
@@ -59,23 +78,65 @@ class Cascade:
     @classmethod
     def from_traces(cls, losses: np.ndarray, costs, *, k: int = 32,
                     lam: float = 1.0, min_cost: float = 1e-6,
-                    solve: bool = True) -> "Cascade":
+                    solve: bool = True, boundaries=None,
+                    entry_costs=None) -> "Cascade":
         """Fit support + chain from (T, n) raw loss traces and solve.
 
         ``losses`` are RAW; they are scaled by ``lam`` before support
         fitting so the tables live in the lambda-weighted domain.
         ``costs`` are taken as-is (already objective-weighted) and clamped
         to ``min_cost`` (Assumption 2.1 needs strictly positive costs).
+
+        ``boundaries`` declares a MULTI-MODEL cascade: the n trace
+        columns are the concatenated node ladders of several models
+        (e.g. a small model's ramps+head followed by a large model's),
+        in escalation order.  The fitted chain simply spans the model
+        boundary — crossing it is an escalation whose edge-cost
+        semantics `solve_skip(mode="cascade")` encodes.
         """
         scaled = lam * np.asarray(losses)
         support = build_support(scaled, k)
         bins = quantize(support, jnp.asarray(scaled))
         chain = estimate_chain(bins, k)
         costs = jnp.maximum(jnp.asarray(costs, jnp.float32), min_cost)
-        casc = cls(support=support, chain=chain, costs=costs, lam=lam)
+        if boundaries is not None:
+            boundaries = tuple(int(b) for b in boundaries)
+            if sum(boundaries) != scaled.shape[1]:
+                raise ValueError(
+                    f"boundaries {boundaries} do not cover the "
+                    f"{scaled.shape[1]} trace columns")
+        if entry_costs is not None:
+            entry_costs = tuple(float(c) for c in entry_costs)
+        casc = cls(support=support, chain=chain, costs=costs, lam=lam,
+                   boundaries=boundaries, entry_costs=entry_costs)
         if solve:
             casc.solve_line()
         return casc
+
+    @classmethod
+    def from_model_traces(cls, model_losses, model_costs, *, k: int = 32,
+                          lam: float = 1.0, entry_costs=None,
+                          solve: bool = True, **kwargs) -> "Cascade":
+        """Multi-model calibration: per-model (T, n_m) loss traces over
+        the SAME T calibration inputs, concatenated in ladder order.
+        Each model's columns are its own ramps + head; the result is a
+        `Cascade` whose ``boundaries`` record where each model's nodes
+        start, ready for ``solve_skip(mode="cascade")``."""
+        model_losses = [np.asarray(ls) for ls in model_losses]
+        t = model_losses[0].shape[0]
+        if any(ls.shape[0] != t for ls in model_losses):
+            raise ValueError("per-model traces must share the T axis "
+                             "(same calibration inputs)")
+        boundaries = tuple(ls.shape[1] for ls in model_losses)
+        costs = np.concatenate([np.asarray(c, np.float64)
+                                for c in model_costs])
+        if len(costs) != sum(boundaries):
+            raise ValueError(f"model_costs cover {len(costs)} nodes, "
+                             f"traces have {sum(boundaries)}")
+        return cls.from_traces(np.concatenate(model_losses, axis=1),
+                               costs, k=k, lam=lam, solve=solve,
+                               boundaries=boundaries,
+                               entry_costs=entry_costs, **kwargs)
 
     @classmethod
     def calibrate(cls, params, cfg, key, lam: float, *, k: int = 24,
@@ -96,7 +157,7 @@ class Cascade:
 
     @classmethod
     def uniform(cls, n_nodes: int, *, k: int = 8, lam: float = 1.0,
-                costs=None) -> "Cascade":
+                costs=None, boundaries=None) -> "Cascade":
         """Placeholder spec (uniform chain, linear grid) for strategies
         that consume only the topology and costs."""
         grid = jnp.linspace(0.1, 1.0, k, dtype=jnp.float32)
@@ -106,8 +167,14 @@ class Cascade:
         chain = MarkovChain(p0=p0, trans=trans)
         if costs is None:
             costs = np.full((n_nodes,), 1.0 / n_nodes)
+        if boundaries is not None:
+            boundaries = tuple(int(b) for b in boundaries)
+            if sum(boundaries) != n_nodes:
+                raise ValueError(f"boundaries {boundaries} do not cover "
+                                 f"{n_nodes} nodes")
         return cls(support=support, chain=chain,
-                   costs=jnp.asarray(costs, jnp.float32), lam=lam)
+                   costs=jnp.asarray(costs, jnp.float32), lam=lam,
+                   boundaries=boundaries)
 
     # ------------------------------------------------------------------
     # solvers (cached on the spec)
@@ -124,17 +191,30 @@ class Cascade:
         """Solve (and cache) the transitive-closure DP (§5.2).
 
         ``mode`` picks the edge-cost semantics: ``"cumulative"`` (intra-
-        model early exit — skipped segments still pay backbone compute)
-        or ``"skip_free"`` (inter-model cascades — skipped models are
-        never run).
+        model early exit — skipped segments still pay backbone compute),
+        ``"skip_free"`` (idealized inter-model cascades — skipped models
+        are never run), or ``"cascade"`` (the multi-model ladder this
+        spec's ``boundaries`` declare: cumulative inside each model,
+        skip_free-style across model boundaries, plus the per-model
+        ``entry_costs`` escalation charge).
         """
-        if mode not in ("cumulative", "skip_free"):
+        if mode not in ("cumulative", "skip_free", "cascade"):
             raise ValueError(f"unknown skip mode {mode!r}")
+        if mode == "cascade" and self.boundaries is None:
+            raise ValueError(
+                "skip mode 'cascade' needs multi-model boundaries — "
+                "calibrate via Cascade.from_model_traces (or pass "
+                "boundaries= to from_traces)")
         if self.skip_tables is None or self.skip_mode != mode:
             costs = np.asarray(self.costs, np.float64)
-            builder = (skip_dp.edge_costs_cumulative if mode == "cumulative"
-                       else skip_dp.edge_costs_skip_free)
-            self.edge_costs = builder(costs)
+            if mode == "cascade":
+                self.edge_costs = skip_dp.edge_costs_cascade(
+                    costs, self.boundaries, entry_costs=self.entry_costs)
+            else:
+                builder = (skip_dp.edge_costs_cumulative
+                           if mode == "cumulative"
+                           else skip_dp.edge_costs_skip_free)
+                self.edge_costs = builder(costs)
             self.skip_tables = skip_dp.solve_skip(self.chain,
                                                   self.edge_costs,
                                                   self.support)

@@ -44,6 +44,9 @@ class SkipRecallStrategy:
     serve the argmin probed node (recall)."""
 
     online = True
+    # the walk follows a NEXT table solved from the root — it cannot be
+    # floor-pinned mid-line (the cascade's commit policy checks this)
+    jumps = True
 
     def __init__(self, tables: SkipTables, support: Support | None,
                  edge_costs, lam: float = 1.0):

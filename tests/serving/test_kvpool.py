@@ -440,3 +440,167 @@ def test_page_pressure_queues_requests_instead_of_dropping(engine_setup):
     for r in reqs:
         assert m_paged.records[r.rid].tokens == \
             m_ring.records[r.rid].tokens, f"request {r.rid}"
+
+
+# --------------------------------------------------------------------------
+# page-table growth beyond the admission cap (cascade escalation fix)
+# --------------------------------------------------------------------------
+
+def test_grow_extends_budget_in_page_aligned_increments():
+    """`grow` reserves page-aligned increments for a live lane so an
+    escalated stream can be admitted with a small reservation and grown
+    as it decodes — with the same never-fail guarantee: decode only
+    consumes reserved budget, and growth is refused (not crashed) when
+    headroom or the table cap runs out."""
+    pool = KVPool(n_lanes=1, page_size=4, lane_pages=2, n_pages=9,
+                  max_lane_pages=6)
+    assert pool.reserve(np.arange(4), 3)      # 2 pages worst case
+    pool.admit(0, np.arange(4), 3)
+    held_plus_budget = int(pool.n_held[0]) + int(pool.budget[0])
+    # page-aligned: 1 extra token still reserves a whole page
+    assert pool.grow(0, 1)
+    assert int(pool.n_held[0]) + int(pool.budget[0]) \
+        == held_plus_budget + 1
+    assert pool.grow(0, 5)                    # two more pages
+    assert int(pool.n_held[0]) + int(pool.budget[0]) \
+        == held_plus_budget + 3
+    # the table's hard cap refuses further growth, leaving state as-is
+    before = int(pool.budget[0])
+    assert not pool.grow(0, 4 * 4)
+    assert int(pool.budget[0]) == before
+    assert pool.stats()["grows"] == 2
+    # invariant: reservations never exceed the free list
+    assert int(pool.budget.sum()) <= pool.allocator.free_count
+
+
+def test_grow_refused_on_pool_pressure_never_corrupts():
+    pool = KVPool(n_lanes=2, page_size=4, lane_pages=2, n_pages=5,
+                  max_lane_pages=4)
+    assert pool.reserve(np.arange(4), 4)      # lane 0: worst case 2
+    pool.admit(0, np.arange(4), 4)
+    assert pool.reserve(np.arange(4, 8), 4)   # lane 1: the other 2
+    pool.admit(1, np.arange(4, 8), 4)
+    snap = (pool.budget.copy(), pool.n_held.copy(),
+            pool.allocator.free_count)
+    assert not pool.grow(0, 1)                # nothing free
+    assert (pool.budget == snap[0]).all()
+    assert (pool.n_held == snap[1]).all()
+    assert pool.allocator.free_count == snap[2]
+    with pytest.raises(ValueError, match="holds no pages"):
+        KVPool(n_lanes=1, page_size=4, lane_pages=2).grow(0, 1)
+
+
+def test_can_append_mirrors_prepare_step_needs():
+    """`can_append` is the incremental-reservation gate: it must be
+    True exactly when `prepare_step` can serve the lane's next token
+    from budget (fresh page at boundary, COW split on shared tail)."""
+    pool = KVPool(n_lanes=1, page_size=2, lane_pages=2, n_pages=8,
+                  max_lane_pages=4)
+    assert pool.reserve(np.arange(2), 2)      # 1 prompt page + 1 decode
+    pool.admit(0, np.arange(2), 2)
+    occupied = np.array([True])
+    while pool.tokens_headroom(0) > 0:
+        assert pool.can_append(0)
+        pool.prepare_step(occupied)
+        pool.note_written(occupied)
+    # reserved budget exhausted: the gate refuses BEFORE prepare_step
+    # would raise, and a grow re-opens it
+    assert not pool.can_append(0)
+    assert pool.grow(0, 1)
+    assert pool.can_append(0)
+    pool.prepare_step(occupied)
+    pool.note_written(occupied)
+
+
+def test_grow_invariant_under_interleaved_admissions():
+    """Allocator invariant fuzz: interleaved reserve/admit/grow/decode/
+    release keep sum(budgets) <= free pages and never raise from
+    `prepare_step` when `can_append` said True."""
+    rng = np.random.default_rng(7)
+    pool = KVPool(n_lanes=3, page_size=4, lane_pages=2, n_pages=16,
+                  max_lane_pages=5)
+    live: dict[int, int] = {}
+    rid = 0
+    for _ in range(300):
+        free_lanes = [ln for ln in range(3) if ln not in live]
+        op = rng.integers(0, 4)
+        if op == 0 and free_lanes:
+            prompt = rng.integers(0, 99, 4 + int(rng.integers(0, 4)))
+            if pool.reserve(prompt, 2):
+                lane = free_lanes[0]
+                pool.admit(lane, prompt, 2)
+                live[lane] = rid = rid + 1
+        elif op == 1 and live:
+            lane = list(live)[int(rng.integers(0, len(live)))]
+            pool.grow(lane, int(rng.integers(1, 6)))
+        elif op == 2 and live:
+            lane = list(live)[int(rng.integers(0, len(live)))]
+            if pool.can_append(lane):
+                occ = np.zeros(3, bool)
+                occ[lane] = True
+                pool.prepare_step(occ)      # must not raise
+                pool.note_written(occ)
+        elif op == 3 and live:
+            lane = list(live)[int(rng.integers(0, len(live)))]
+            pool.release(lane)
+            del live[lane]
+        assert int(pool.budget.sum()) <= pool.allocator.free_count, \
+            "reservation invariant violated"
+
+
+# --------------------------------------------------------------------------
+# PrefixCache cross-model isolation (cascade ladders)
+# --------------------------------------------------------------------------
+
+def test_prefix_cache_model_key_isolation():
+    """Identical prompt text admitted on two MODELS must never share
+    page chains — their KV bytes are different tensors — so the hash is
+    salted with the model key.  Same key still shares."""
+    prompt = np.arange(8, dtype=np.int32)
+    pool_a = KVPool(n_lanes=1, page_size=4, lane_pages=3,
+                    model_key="small")
+    pool_b = KVPool(n_lanes=1, page_size=4, lane_pages=3,
+                    model_key="large")
+    for pool in (pool_a, pool_b):
+        assert pool.reserve(prompt, 2)
+        pool.admit(0, prompt, 2)
+    # cross-model lookup finds nothing despite identical tokens
+    alloc = PageAllocator(8)
+    probe = PrefixCache(alloc, model_key="large")
+    assert probe.lookup(prompt, 4, peek=True) == ([], 0)
+    assert pool_a.prefix.lookup(prompt, 4, peek=True)[1] == 8
+    assert pool_b.prefix.lookup(prompt, 4, peek=True)[1] == 8
+    # within one model sharing still works: a second lane's admission
+    # reuses the chain (no new prompt pages)
+    pool_c = KVPool(n_lanes=2, page_size=4, lane_pages=3,
+                    model_key="small")
+    assert pool_c.reserve(prompt, 2)
+    pool_c.admit(0, prompt, 2)
+    used_before = pool_c.allocator.pages_in_use
+    assert pool_c.reserve(prompt, 2)
+    plan = pool_c.admit(1, prompt, 2)
+    assert plan.n_shared_tokens == 8
+    assert pool_c.allocator.pages_in_use == used_before
+
+
+def test_prefix_eviction_respects_escalation_pins():
+    """LRU eviction must keep chains pinned by in-flight escalations:
+    a pending `reserve` (the cascade's catch-up admission) pins the
+    chain its page-need estimate counted as shared, even under heavy
+    eviction pressure from later reservations."""
+    pool = KVPool(n_lanes=3, page_size=4, lane_pages=4, n_pages=13,
+                  model_key="large")
+    warm = np.arange(8, dtype=np.int32)
+    assert pool.reserve(warm, 4)
+    pool.admit(0, warm, 4)
+    pool.release(0)                 # chain stays warm in the cache
+    # an escalation's reserve counts the warm chain as shared and PINS
+    # it (3 total pages - 2 shared... the need relies on the chain)
+    assert pool.reserve(warm, 4)
+    # pressure: a big disjoint reservation must evict OTHER entries
+    # first and cannot free the pinned chain's pages
+    big = 100 + np.arange(12, dtype=np.int32)
+    assert pool.reserve(big, 4)
+    plan = pool.admit(1, warm, 4)   # the pinned sharing still holds
+    assert plan.n_shared_tokens == 8
+    pool.admit(2, big, 4)
