@@ -1,0 +1,110 @@
+"""CI adaptive smoke: the control-plane acceptance gate (DESIGN.md
+§11).
+
+Runs `bench_runtime.adaptive_vs_frozen` at its deterministic seeds
+(virtual clock, SimStepper — no model params, CI-fast), writes the
+metrics JSON artifact, and asserts the controller's claims on the
+seeded diurnal workload whose steepest inflections the gear switches
+must ride:
+
+  1. STRICT GOODPUT DOMINANCE: the adaptive leg's goodput strictly
+     exceeds EVERY single frozen gear's.  The frozen gears' stale
+     calibration over-probes the drifted serve mix, so their real
+     capacity sits below the diurnal peak; switching + recalibration
+     is what holds the peak.
+  2. NO QUALITY GIVEBACK: the adaptive leg's mean served loss is <=
+     the loss of the best-goodput frozen gear — the trade-off is
+     tamed, not shifted onto the quality axis.
+  3. THE MACHINERY RAN: >= ``MIN_SWITCHES`` gear switches and >=
+     ``MIN_RECALS`` online recalibrations actually landed.
+  4. ZERO DROPPED OR STALLED LANES: every admitted request finished,
+     on the adaptive leg and on every frozen leg.
+  5. ZERO MID-SERVE RETRACES: the stepper's jitted decide compiled
+     exactly once across all swaps and publishes
+     (``decide_cache_size() == 1`` — the arrays-as-args hot-swap
+     contract).
+
+Exit code 1 on any violated claim, so the CI job fails loudly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MIN_SWITCHES = 2
+MIN_RECALS = 1
+
+
+def check(rows: list[dict]) -> list[str]:
+    """Verify the claims on sweep rows; returns failure messages."""
+    adaptive = [r for r in rows if r.get("adaptive") == "adaptive"]
+    frozen = [r for r in rows
+              if str(r.get("adaptive", "")).startswith("frozen_")]
+    if len(adaptive) != 1 or not frozen:
+        return [f"expected 1 adaptive + >=1 frozen rows, got "
+                f"{len(adaptive)} adaptive / {len(frozen)} frozen"]
+    ad = adaptive[0]
+    failures = []
+
+    # 1. strict goodput dominance over every frozen gear
+    ad_g = ad["summary"]["goodput_tok_s"]
+    for r in frozen:
+        g = r["summary"]["goodput_tok_s"]
+        if not ad_g > g:
+            failures.append(
+                f"adaptive goodput {ad_g:.2f} <= frozen "
+                f"{r['gear']} {g:.2f}")
+
+    # 2. served loss no worse than the best-goodput frozen gear
+    best = max(frozen, key=lambda r: r["summary"]["goodput_tok_s"])
+    ad_l, best_l = ad["served_loss_mean"], best["served_loss_mean"]
+    if not ad_l <= best_l:
+        failures.append(
+            f"adaptive served loss {ad_l:.4f} > best-goodput frozen "
+            f"({best['gear']}) {best_l:.4f}")
+
+    # 3. the control plane actually switched and recalibrated
+    if ad.get("gear_switches", 0) < MIN_SWITCHES:
+        failures.append(f"only {ad.get('gear_switches', 0)} gear "
+                        f"switches (need >= {MIN_SWITCHES})")
+    if ad.get("recalibrations", 0) < MIN_RECALS:
+        failures.append(f"only {ad.get('recalibrations', 0)} "
+                        f"recalibrations (need >= {MIN_RECALS})")
+
+    # 4. zero dropped/stalled lanes on every leg
+    for r in [ad] + frozen:
+        if r.get("completed") != r.get("n_requests"):
+            failures.append(
+                f"{r['name']}: {r.get('completed')}/{r.get('n_requests')}"
+                f" requests finished — dropped or stalled lanes")
+
+    # 5. zero jit retraces mid-serve across swaps + publishes
+    if ad.get("decide_cache_size") != 1:
+        failures.append(
+            f"decide compiled {ad.get('decide_cache_size')} times — "
+            f"a swap or publish retraced mid-serve")
+    return failures
+
+
+def main() -> int:
+    from benchmarks.bench_runtime import adaptive_vs_frozen
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="adaptive-metrics.json",
+                    help="write the sweep rows JSON here (CI artifact)")
+    args = ap.parse_args()
+    rows = adaptive_vs_frozen()
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    for row in rows:
+        print(f"{row['name']}: {row['derived']}")
+    failures = check(rows)
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    print(f"wrote {args.out}; {len(failures)} failed claims")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

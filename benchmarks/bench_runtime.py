@@ -27,19 +27,27 @@
      chunk is priced at the piggyback roofline max(decode, chunk) —
      TTFT p50/p99 and goodput as load approaches the wall.
 
+  5. Adaptive control plane vs frozen gears (``adaptive_vs_frozen``,
+     DESIGN.md §11): the same seeded diurnal workload and drifted
+     serve mix under the `AdaptiveController` (gear switching + online
+     recalibration) and under each gear frozen — the CI adaptive smoke
+     pins strict goodput dominance at equal-or-better served loss.
+
 Run standalone for the CI smoke + JSON artifacts:
 
   python -m benchmarks.bench_runtime --smoke --out runtime-metrics.json \
       --json
 
 ``--json`` (over)writes the stable ``BENCH_runtime.json`` at the repo
-root (schema ``bench_runtime/v2``: one row per rate x strategy x
-kv-mode x prefill-mode with goodput / TTFT p50/p99 / pages-in-use; the
-v1 fields are unchanged, v2 adds the ``prefill`` axis + chunk token
-counters).  Each run is one snapshot; the trajectory accumulates across
-commits via git history and the per-run CI artifact upload, and
-``benchmarks/check_regression.py`` (CI) fails >20% goodput drops at
-matching virtual-clock points.
+root (schema ``bench_runtime/v4``: one row per rate x strategy x
+kv-mode x prefill-mode x cascade-variant x adaptive-leg with goodput /
+TTFT p50/p99 / pages-in-use; earlier fields are unchanged — v2 added
+the ``prefill`` axis + chunk token counters, v3 the ``cascade`` axis +
+served-loss quality axis, v4 the ``adaptive`` axis + active gear id +
+gear-switch / recalibration counters).  Each run is one snapshot; the
+trajectory accumulates across commits via git history and the per-run
+CI artifact upload, and ``benchmarks/check_regression.py`` (CI) fails
+>20% goodput drops at matching virtual-clock points.
 """
 
 from __future__ import annotations
@@ -110,8 +118,10 @@ def sweep_rate_strategy(*, rates, names, duration, seed=0):
                             f"slo_att={100 * s['slo_attainment']:.0f}% "
                             f"ttft_p95={s['ttft']['p95']:.2f}s "
                             f"seg_saved_lane="
-                            f"{100 * s['segments_saved_lane']:.0f}%"),
+                            f"{100 * s['segments_saved_lane']:.0f}% "
+                            f"gear=static:{name}"),
                 "summary": s, "rate": rate, "strategy": name, "kv": "sim",
+                "gear": f"static:{name}",
             })
     return rows
 
@@ -251,9 +261,11 @@ def chunked_vs_stopworld(*, rates, duration, seed=0, chunk=16, budget=32):
                 "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
                             f"ttft_p50={s['ttft']['p50']:.3f}s "
                             f"ttft_p99={s['ttft']['p99']:.3f}s "
-                            f"slo_att={100 * s['slo_attainment']:.0f}%"),
+                            f"slo_att={100 * s['slo_attainment']:.0f}% "
+                            f"gear=static:recall_index"),
                 "summary": s, "rate": rate, "strategy": "recall_index",
                 "kv": "sim", "prefill": mode,
+                "gear": "static:recall_index",
             })
     return rows
 
@@ -394,9 +406,11 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
                 "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
                             f"loss={loss:.3f} "
                             f"ttft_p99={s['ttft']['p99']:.2f}s "
-                            f"slo_att={100 * s['slo_attainment']:.0f}%"),
+                            f"slo_att={100 * s['slo_attainment']:.0f}% "
+                            f"gear=static:{variant}"),
                 "summary": s, "rate": rate, "strategy": "cascade",
                 "kv": "sim", "cascade": variant,
+                "gear": f"static:{variant}",
                 "served_loss_mean": loss,
             }
             if cs:
@@ -406,6 +420,153 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
                     f" recalls={cs['recalls']}"
                     f" repin={cs['repin_tokens']}")
             rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# adaptive control plane vs frozen gears (serving.control, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+# the gear bank: three lambda points of the same skip_recall family —
+# quality probes deep, turbo rides the value function's cheap side.
+# The planner prices each against the sim's OWN cost model (probed
+# nodes per token) and indexes them by sustainable arrival rate.
+ADAPT_PEAK = 12.5       # diurnal peak arrival rate (requests/sec)
+ADAPT_PERIOD = 15.0     # diurnal period (two full cycles in 30s)
+ADAPT_DURATION = 30.0
+ADAPT_SEED = 7          # workload seed (arrival pattern)
+ADAPT_MIX_SEED = 1      # serve-mix seed (trace rows)
+ADAPT_UTIL = 0.9        # planner headroom: ride gears hot, buy loss
+# controller: 1.5s telemetry window + 1.5s slope lead anticipates the
+# diurnal ramp; hold=20 steps of hysteresis stops noise thrash;
+# recalibration every 2.5s of serve time once 192 rows accumulated
+ADAPT_SPAN, ADAPT_HOLD, ADAPT_LEAD = 1.5, 20, 1.5
+ADAPT_RECAL_INTERVAL, ADAPT_RECAL_MIN_ROWS = 2.5, 192
+
+
+def _adapt_specs():
+    from repro.serving.control import GearSpec
+    return (GearSpec("quality", 0.95), GearSpec("balanced", 0.92),
+            GearSpec("turbo", 0.75))
+
+
+def _overthink_rows(rng, t, n):
+    """Serve-time drift rows: losses RISE with depth (overthinking) —
+    the regime where calibration-stale tables keep probing nodes that
+    no longer pay, and online refit collapses the probe depth."""
+    start = rng.uniform(0.02, 0.12, (t, 1))
+    drift = np.linspace(0.0, 0.3, n)[None, :] * rng.uniform(0.3, 1.0,
+                                                            (t, 1))
+    noise = rng.normal(0, 0.02, (t, n))
+    for i in range(1, n):
+        noise[:, i] = 0.7 * noise[:, i - 1] + 0.3 * noise[:, i]
+    return np.clip(start + drift + noise, 1e-4, 1.0)
+
+
+def _adaptive_serve_mix(seed, t):
+    """The drifted SERVE distribution: 3/4 overthinking-up rows (easy
+    tokens the stale tables over-probe), 1/4 uniformly-hard rows where
+    deep probing still buys loss.  Calibration (seed 0, overthink 0.05)
+    never saw this mix — the gap is what recalibration closes."""
+    rng = np.random.default_rng(seed)
+    hard, _, _ = traces.ee_like_traces(rng, t, N_NODES, overthink_prob=0.1,
+                                       difficulty_spread=0.3)
+    easy = _overthink_rows(rng, t, N_NODES)
+    mask = rng.uniform(size=t) < 0.75
+    return np.where(mask[:, None], easy, hard).astype(np.float64)
+
+
+def _adaptive_setup(seed: int = 0):
+    """A FRESH (planner, bank) per serve leg.  Fresh matters: the
+    `Recalibrator` re-fits gears in place, so a bank that served an
+    adaptive leg carries refit tables — reusing it would hand the
+    frozen baselines the adaptive leg's learning."""
+    from repro.serving.control import GearPlanner
+    rng = np.random.default_rng(seed)
+    calib, _, flops = traces.ee_like_traces(rng, 3_000, N_NODES,
+                                            overthink_prob=0.05)
+    planner = GearPlanner(calib, flops, k=16, seg_time=SEG_TIME,
+                          overhead=OVERHEAD, n_lanes=LANES,
+                          mean_tokens=18.0, utilization=ADAPT_UTIL)
+    return planner, planner.plan(_adapt_specs())
+
+
+def adaptive_vs_frozen(*, peak=ADAPT_PEAK, duration=ADAPT_DURATION,
+                       period=ADAPT_PERIOD, seed=ADAPT_SEED,
+                       mix_seed=ADAPT_MIX_SEED):
+    """Adaptive controller vs every frozen gear on the SAME seeded
+    diurnal workload and drifted serve mix (DESIGN.md §11).  The frozen
+    gears' stale calibration over-probes the drifted traffic, so their
+    real capacity sits far below the diurnal peak; the controller rides
+    gear switches through the inflections and recalibration restores
+    the capacity the drift stole.  The CI adaptive smoke pins strict
+    goodput dominance at equal-or-better mean served loss."""
+    from repro.serving.control import AdaptiveController
+    serve_rows = _adaptive_serve_mix(mix_seed, 4_000)
+    spec = WorkloadSpec(rate=peak, duration=duration, prompt_len=8,
+                        max_tokens=(4, 32), seed=seed)
+    requests = make_workload("diurnal", spec, period=period)
+
+    def leg(slot=None):
+        planner, bank = _adaptive_setup()
+        ctl = None
+        if slot is None:
+            ctl = AdaptiveController(
+                bank, span=ADAPT_SPAN, slo=SLO, hold=ADAPT_HOLD,
+                lead=ADAPT_LEAD, recal_interval=ADAPT_RECAL_INTERVAL,
+                recal_min_rows=ADAPT_RECAL_MIN_ROWS, planner=planner)
+        stepper = rt.SimStepper(bank.strategies, serve_rows,
+                                n_lanes=LANES, seg_time=SEG_TIME,
+                                overhead=OVERHEAD)
+        sid_of = ctl.sid_of if ctl else (lambda r: slot)
+        server = rt.Server(stepper, rt.LaneScheduler(LANES), sid_of,
+                           slo=SLO, controller=ctl)
+        metrics = server.serve(requests)
+        return metrics, stepper, ctl, bank
+
+    rows = []
+    metrics, stepper, ctl, bank = leg()
+    s = metrics.summary(slo=SLO)
+    stats = ctl.stats()
+    completed = sum(1 for r in metrics.records.values()
+                    if r.finished is not None)
+    rows.append({
+        "name": f"runtime_sim_adaptive_r{peak:g}",
+        "us_per_call": s["duration"] / max(s["tokens"], 1) * 1e6,
+        "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
+                    f"loss={stepper.mean_served_loss:.4f} "
+                    f"slo_att={100 * s['slo_attainment']:.0f}% "
+                    f"gear={stats['gear']} "
+                    f"switches={stats['gear_switches']} "
+                    f"recals={stats['recalibrations']} "
+                    f"cache={stepper.decide_cache_size()}"),
+        "summary": s, "rate": peak, "strategy": "skip_recall",
+        "kv": "sim", "adaptive": "adaptive", "gear": stats["gear"],
+        "gear_switches": stats["gear_switches"],
+        "recalibrations": stats["recalibrations"],
+        "served_loss_mean": stepper.mean_served_loss,
+        "decide_cache_size": stepper.decide_cache_size(),
+        "completed": completed, "n_requests": len(requests),
+        "controller": stats,
+    })
+    for slot, gear in enumerate(bank):
+        metrics, stepper, _, _ = leg(slot=slot)
+        s = metrics.summary(slo=SLO)
+        completed = sum(1 for r in metrics.records.values()
+                        if r.finished is not None)
+        rows.append({
+            "name": f"runtime_sim_frozen_{gear.name}_r{peak:g}",
+            "us_per_call": s["duration"] / max(s["tokens"], 1) * 1e6,
+            "derived": (f"goodput={s['goodput_tok_s']:.1f}tok_s "
+                        f"loss={stepper.mean_served_loss:.4f} "
+                        f"slo_att={100 * s['slo_attainment']:.0f}% "
+                        f"gear={gear.name}"),
+            "summary": s, "rate": peak, "strategy": "skip_recall",
+            "kv": "sim", "adaptive": f"frozen_{gear.name}",
+            "gear": gear.name, "gear_switches": 0, "recalibrations": 0,
+            "served_loss_mean": stepper.mean_served_loss,
+            "completed": completed, "n_requests": len(requests),
+        })
     return rows
 
 
@@ -494,11 +655,14 @@ def paged_vs_ring_real(*, n_requests=8, lanes=2, prompt_len=16,
 def stable_report(rows: list[dict]) -> dict:
     """The accumulating perf-trajectory schema (BENCH_runtime.json):
     one flat row per rate x strategy x kv-mode x prefill-mode x
-    cascade-variant.  The v1/v2 keys are stable across commits (absent
-    dimensions are null); v2 added the ``prefill`` axis + chunk token
-    counters, v3 adds the ``cascade`` axis (``small_only`` |
+    cascade-variant x adaptive-leg.  The v1/v2 keys are stable across
+    commits (absent dimensions are null); v2 added the ``prefill`` axis
+    + chunk token counters, v3 the ``cascade`` axis (``small_only`` |
     ``large_only`` | ``cascade_norecall`` | ``cascade_recall`` | null)
-    with the served-loss quality axis and escalation/recall counters."""
+    with the served-loss quality axis and escalation/recall counters,
+    v4 adds the ``adaptive`` axis (``adaptive`` | ``frozen_<gear>`` |
+    null) plus the active gear id and gear-switch / recalibration
+    counters from the control plane (DESIGN.md §11)."""
     out = []
     for row in rows:
         s = row.get("summary") or {}
@@ -528,8 +692,13 @@ def stable_report(rows: list[dict]) -> dict:
             "escalations": casc.get("escalations"),
             "recalls": casc.get("recalls"),
             "repin_tokens": casc.get("repin_tokens"),
+            # v4 axis: adaptive control plane (DESIGN.md §11)
+            "adaptive": row.get("adaptive"),
+            "gear": row.get("gear"),
+            "gear_switches": row.get("gear_switches"),
+            "recalibrations": row.get("recalibrations"),
         })
-    return {"schema": "bench_runtime/v3", "rows": out}
+    return {"schema": "bench_runtime/v4", "rows": out}
 
 
 def run(smoke: bool = False) -> list[dict]:
@@ -540,6 +709,7 @@ def run(smoke: bool = False) -> list[dict]:
         rows += recycling_vs_static_sim(n_requests=24)
         rows += chunked_vs_stopworld(rates=(2.0, 6.0), duration=15.0)
         rows += cascade_vs_monolith(rates=(2.0, 3.0), duration=30.0)
+        rows += adaptive_vs_frozen()
         rows += paged_vs_ring_real(n_requests=6)
     else:
         rows = sweep_rate_strategy(
@@ -551,6 +721,7 @@ def run(smoke: bool = False) -> list[dict]:
                                      duration=30.0)
         rows += cascade_vs_monolith(rates=(1.0, 2.0, 3.0, 4.0),
                                     duration=30.0)
+        rows += adaptive_vs_frozen()
         rows += recycling_vs_engine_real()
         rows += paged_vs_ring_real(n_requests=16, lanes=4)
     return rows

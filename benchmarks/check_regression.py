@@ -3,8 +3,9 @@
 goodput regression at matching (rate, strategy, kv, prefill) points.
 
 Rows are matched by their stable ``name`` (which encodes the sweep
-point) and cross-checked on the axis fields, so a renamed or re-scoped
-row never silently compares apples to oranges.  Two thresholds:
+point) and cross-checked on the axis fields (rate/strategy/kv/prefill/
+cascade/adaptive), so a renamed or re-scoped row never silently
+compares apples to oranges.  Two thresholds:
 
   * virtual-clock rows (``kv == "sim"``) are DETERMINISTIC — seeded
     workloads, virtual time — so any drop beyond ``--max-drop``
@@ -28,7 +29,7 @@ import argparse
 import json
 import sys
 
-AXES = ("rate", "strategy", "kv", "prefill", "cascade")
+AXES = ("rate", "strategy", "kv", "prefill", "cascade", "adaptive")
 
 
 def compare(old: dict, new: dict, *, max_drop: float = 0.20,

@@ -26,6 +26,18 @@ page-table re-pin:
   PYTHONPATH=src python -m repro.launch.serve --smoke --server \
       --cascade paper-ee-100m:paper-ee-100m --policy skip_recall \
       --rate 4 --duration 5 --lanes 4 --cascade-lanes 2
+
+``--adaptive`` serves traffic under the CONTROL PLANE (DESIGN.md §11):
+``--gears`` names a bank of lambda points, the `GearPlanner` solves
+each into a provably-optimal recall strategy and prices its
+sustainable rate, and the `AdaptiveController` switches gears from
+live telemetry (with ``--recal-interval`` seconds between online
+table re-fits — sim steppers only; the engine path gets gear
+switching without recalibration):
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --server \
+      --adaptive --gears quality:0.95,balanced:0.92,turbo:0.75 \
+      --workload diurnal --rate 8 --duration 10 --recal-interval 2.5
 """
 
 from __future__ import annotations
@@ -284,6 +296,61 @@ def _serve_cascade(args) -> None:
         print(f"wrote metrics JSON to {args.json}")
 
 
+def parse_gears(text: str):
+    """``--gears`` grammar: comma-separated ``name:lam`` pairs (a bare
+    ``lam`` gets an auto name), e.g. ``quality:0.95,turbo:0.75``."""
+    from repro.serving.control import GearSpec
+    specs = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if ":" in part:
+            gname, lam = part.split(":", 1)
+        else:
+            gname, lam = f"g{part}", part
+        specs.append(GearSpec(gname.strip(), float(lam)))
+    if not specs:
+        raise SystemExit(f"--gears {text!r} names no gears")
+    return tuple(specs)
+
+
+def _build_adaptive(args, cfg, params, *, mean_tokens, slo):
+    """The --adaptive control plane: calibrate gear traces off the real
+    model, solve + price the bank, build the controller.  Capacity is
+    priced in the SIM cost model's virtual units (probes per token at
+    nominal segment time) — gear ORDER and the relative thresholds are
+    what selection runs on."""
+    from repro.serving.control import AdaptiveController, GearPlanner
+    key = jax.random.PRNGKey(args.seed + 1)
+    toks = jax.random.randint(key, (128, 32), 0, cfg.vocab)
+    _, _, node_losses, _ = M.prefill(params, cfg, {"tokens": toks},
+                                     cache_len=40)
+    rows = np.asarray(node_losses, np.float64)
+    n = rows.shape[1]
+    planner = GearPlanner(rows, np.full(n, 1.0 / n), k=12,
+                          seg_time=0.01, overhead=0.002,
+                          n_lanes=args.lanes, mean_tokens=mean_tokens)
+    gear_bank = planner.plan(parse_gears(args.gears))
+    controller = AdaptiveController(
+        gear_bank, span=max(2.0, args.duration / 5), slo=slo,
+        recal_interval=args.recal_interval, planner=planner)
+    print("gear bank (quality-first): " + ", ".join(
+        f"{g.name}[slot {g.slot}] lam={g.spec.lam:g} "
+        f"work={g.work:.2f} max_rate={g.max_rate:.1f}/s"
+        for g in gear_bank))
+    return gear_bank, controller
+
+
+def _print_adaptive_summary(controller) -> None:
+    st = controller.stats()
+    print(f"adaptive: final gear {st['gear']}, "
+          f"{st['gear_switches']} gear switches, "
+          f"{st['recalibrations']} online recalibrations")
+    for sw in st["switches"]:
+        print(f"  t={sw['t']:6.2f}s  {sw['from']} -> {sw['to']}")
+
+
 def _serve_traffic(args, cfg, params, casc) -> None:
     """--server: continuous batching over an open-loop workload."""
     from repro.serving import runtime as rt
@@ -300,11 +367,26 @@ def _serve_traffic(args, cfg, params, casc) -> None:
         print("workload produced no arrivals; raise --rate or --duration")
         return
 
-    def make_strategy(sname, lam):
-        return build_strategy(sname, casc, threshold=args.threshold,
-                              patience=args.patience, lam=lam)
+    controller = None
+    if args.adaptive:
+        slo = args.slo_ms / 1e3
+        gear_bank, controller = _build_adaptive(
+            args, cfg, params, mean_tokens=(lo + args.tokens) / 2,
+            slo=slo)
+        bank, sid_of = gear_bank.strategies, controller.sid_of
+        if args.recal_interval is not None:
+            print("note: the engine stepper has no swappable array "
+                  "bank — --adaptive serves gear SWITCHING here; "
+                  "--recal-interval applies to sim steppers "
+                  "(benchmarks.bench_runtime.adaptive_vs_frozen)")
+    else:
 
-    bank, sid_of = rt.build_bank(requests, make_strategy, (name, None))
+        def make_strategy(sname, lam):
+            return build_strategy(sname, casc, threshold=args.threshold,
+                                  patience=args.patience, lam=lam)
+
+        bank, sid_of = rt.build_bank(requests, make_strategy,
+                                     (name, None))
     stepper = rt.EngineStepper(params, cfg, bank, n_lanes=args.lanes,
                                cache_len=args.cache_len,
                                prompt_len=args.prompt_len,
@@ -315,19 +397,24 @@ def _serve_traffic(args, cfg, params, casc) -> None:
                                prefill_budget=args.prefill_budget)
     slo = args.slo_ms / 1e3
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
-                       order=args.order, slo=slo, eos=args.eos)
+                       order=args.order, slo=slo, eos=args.eos,
+                       controller=controller)
     kv_desc = args.kv if args.kv == "ring" else (
         f"paged ({stepper.pool.n_pages} pages x {args.page_size} tokens)")
     if args.prefill_chunk:
         kv_desc += (f", chunked prefill ({args.prefill_chunk}-token "
                     f"chunks, {stepper.planner.budget} tokens/step)")
+    policy_desc = (f"adaptive gears ({args.gears})" if controller
+                   else f"policy {name}")
     print(f"serving {len(requests)} {args.workload} requests "
           f"(rate {args.rate}/s x {args.duration}s) on {args.lanes} lanes, "
-          f"policy {name}, kv {kv_desc}, "
+          f"{policy_desc}, kv {kv_desc}, "
           f"SLO ttft<={args.slo_ms:.0f}ms ...")
     metrics = server.serve(requests)
     s = metrics.summary(slo=slo)
     _print_latency_summary(args, s)
+    if controller is not None:
+        _print_adaptive_summary(controller)
     _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
                           steps=metrics.steps, n_seg=len(cfg.segments),
                           lane_steps=metrics.lane_steps)
@@ -350,6 +437,8 @@ def _serve_traffic(args, cfg, params, casc) -> None:
     if args.json:
         extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
                  "kv": args.kv, "prefill_chunk": args.prefill_chunk}
+        if controller is not None:
+            extra["adaptive"] = controller.stats()
         if pool_stats is not None:
             extra["kv_pool"] = pool_stats
         if args.prefill_chunk:
@@ -438,6 +527,21 @@ def main() -> None:
                          "all admitting lanes (default: --prefill-"
                          "chunk), split fairly over prompt-length "
                          "buckets")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="serve under the adaptive control plane "
+                         "(DESIGN.md §11): a gear bank of recall "
+                         "strategies selected from live load "
+                         "telemetry.  Implies --server")
+    ap.add_argument("--gears",
+                    default="quality:0.95,balanced:0.92,turbo:0.75",
+                    help="the --adaptive gear bank: comma-separated "
+                         "name:lam pairs (quality-first order is "
+                         "derived from solved work, not list order)")
+    ap.add_argument("--recal-interval", type=float, default=None,
+                    help="seconds of serve time between online table "
+                         "re-fits from observed outcomes (--adaptive; "
+                         "sim steppers only — the engine path serves "
+                         "gear switching without recalibration)")
     ap.add_argument("--json", default=None,
                     help="write runtime metrics JSON here")
     args = ap.parse_args()
@@ -445,6 +549,11 @@ def main() -> None:
         args.lanes = args.batch
     if args.cascade_lanes is None:
         args.cascade_lanes = max(1, args.lanes // 2)
+    if args.adaptive:
+        args.server = True
+        if args.cascade:
+            raise SystemExit("--adaptive and --cascade are separate "
+                             "serving modes; pick one")
 
     if args.cascade:
         _serve_cascade(args)

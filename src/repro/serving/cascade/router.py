@@ -80,6 +80,16 @@ class CascadeRouter:
         self.patience = int(patience)
         self.slots: list[SlotTrack | None] = [None] * self.n_slots
 
+    def set_patience(self, patience: int) -> None:
+        """Gear knob (control plane): retune the de-escalation window
+        mid-serve.  Takes effect from the NEXT emitted token — existing
+        idle streaks keep their counts and are judged against the new
+        window, so a swap can only move future de-escalations, never
+        retroactively drop a resident rung."""
+        if patience < 1:
+            raise ValueError("patience must be >= 1")
+        self.patience = int(patience)
+
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------

@@ -46,6 +46,10 @@ class EscalationScheduler:
                              "models")
         self.budgets = budgets
         self.planners = [ChunkPlanner(self.chunk, b) for b in budgets]
+        # gear-parameterized lane split: per-rung caps on concurrently
+        # granted escalation lanes (<= the rung's physical lanes; shapes
+        # never change, a cap only throttles grants)
+        self.lane_caps = {m: bank[m].n_lanes for m in range(1, len(bank))}
         # deeper rungs: free-lane stacks (ascending pop for determinism)
         self._free = {m: list(range(bank[m].n_lanes - 1, -1, -1))
                       for m in range(1, len(bank))}
@@ -54,6 +58,42 @@ class EscalationScheduler:
             collections.deque()
         self._lane_of: dict[tuple[int, int], int] = {}
         self.peak_in_use = {m: 0 for m in range(1, len(bank))}
+
+    # ------------------------------------------------------------------
+    # gear knobs (control plane)
+    # ------------------------------------------------------------------
+
+    def set_budgets(self, budgets) -> None:
+        """Swap the per-model catch-up token budgets between steps."""
+        budgets = [int(b) for b in budgets]
+        if len(budgets) != len(self.bank):
+            raise ValueError(f"{len(budgets)} budgets for "
+                             f"{len(self.bank)} models")
+        self.budgets = budgets
+        for planner, b in zip(self.planners, budgets):
+            if b < 1:
+                raise ValueError("budget must be >= 1")
+            planner.budget = b
+
+    def set_lane_caps(self, caps) -> None:
+        """Swap the per-rung escalation lane caps (rungs 1..M-1).
+        Already-granted lanes are never revoked — a tighter cap only
+        throttles FUTURE grants, so in-flight escalations finish on the
+        residency they were granted."""
+        caps = [int(c) for c in caps]
+        if len(caps) != len(self.bank) - 1:
+            raise ValueError(f"{len(caps)} caps for {len(self.bank) - 1} "
+                             "escalation rungs")
+        for m, c in zip(range(1, len(self.bank)), caps):
+            if not 1 <= c <= self.bank[m].n_lanes:
+                raise ValueError(
+                    f"rung {m} cap {c} outside [1, "
+                    f"{self.bank[m].n_lanes}] physical lanes")
+            self.lane_caps[m] = c
+
+    def _can_grant(self, m: int) -> bool:
+        return bool(self._free[m]) and \
+            self.lanes_in_use(m) < self.lane_caps[m]
 
     # ------------------------------------------------------------------
     # lanes
@@ -79,7 +119,7 @@ class EscalationScheduler:
         if (slot, m) in self._lane_of:
             raise ValueError(f"slot {slot} already holds a lane on "
                              f"model {m}")
-        if self._free[m] and not any(w[1] == m for w in self._wait):
+        if self._can_grant(m) and not any(w[1] == m for w in self._wait):
             return self._grant(slot, m)
         self._wait.append((slot, m))
         return None
@@ -98,7 +138,7 @@ class EscalationScheduler:
         still = collections.deque()
         while self._wait:
             slot, m = self._wait.popleft()
-            if self._free[m]:
+            if self._can_grant(m):
                 out.append((slot, m, self._grant(slot, m)))
             else:
                 still.append((slot, m))

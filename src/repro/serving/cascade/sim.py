@@ -39,6 +39,7 @@ from repro.serving.cascade.router import CascadeRouter
 from repro.serving.cascade.scheduler import EscalationScheduler
 from repro.serving.engine import bank_observe, bank_serve
 from repro.serving.runtime.request import Request
+from repro.strategy.base import dynamic_arrays, with_arrays
 
 __all__ = ["CascadeSimStepper", "make_cascade_decide"]
 
@@ -66,13 +67,16 @@ def _check_strategies(strategies, n_total: int, policy: str):
 def make_cascade_decide(bank: ModelBank, strategies: tuple):
     """Build the jitted combined-ladder walk.
 
-    ``decide(losses (B, n_total), occupied (B,), sid (B,), floor (B,))``
-    returns ``(served (B,), probes (M, B) i32, depth (M,) i32)``:
-    the served global node, per-model per-lane node-probe counts, and
-    per-model launched-node counts.  ``floor`` gates the walk — nodes
-    below a lane's floor are neither observed nor charged, but the lane
-    stays eligible to start at the floor (the commit policy's pinned
-    walk); floor 0 reproduces `strategy.evaluate` exactly.
+    ``decide(arrays, losses (B, n_total), occupied (B,), sid (B,),
+    floor (B,))`` returns ``(served (B,), probes (M, B) i32,
+    depth (M,) i32)``: the served global node, per-model per-lane
+    node-probe counts, and per-model launched-node counts.  ``arrays``
+    carries each bank slot's dynamic decision arrays as traced
+    arguments — the control plane's hot-swap point: publishing new
+    same-shaped tables hits the jit cache.  ``floor`` gates the walk —
+    nodes below a lane's floor are neither observed nor charged, but
+    the lane stays eligible to start at the floor (the commit policy's
+    pinned walk); floor 0 reproduces `strategy.evaluate` exactly.
     """
     n_models = len(bank)
 
@@ -82,9 +86,11 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
             out = jnp.where(sid == k, states[k].n_probed, out)
         return out
 
-    def decide(losses, occupied, sid, floor):
+    def decide(arrays, losses, occupied, sid, floor):
+        live = tuple(with_arrays(s, a)
+                     for s, a in zip(strategies, arrays))
         b = losses.shape[0]
-        states = tuple(s.init(b) for s in strategies)
+        states = tuple(s.init(b) for s in live)
         active = occupied
         np_before = jnp.zeros((b,), jnp.int32)
         probes, depth = [], []
@@ -94,7 +100,7 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
             for _ in range(bank[m].n_nodes):
                 obs = active & (node >= floor)
                 d = d + obs.any().astype(jnp.int32)
-                states, cont = bank_observe(strategies, states, node,
+                states, cont = bank_observe(live, states, node,
                                             losses[:, node], None, obs,
                                             sid)
                 # below its floor a lane passes through un-observed
@@ -104,7 +110,7 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
             probes.append(np_now - np_before)
             np_before = np_now
             depth.append(d)
-        served = bank_serve(strategies, states, sid)
+        served = bank_serve(live, states, sid)
         return served, jnp.stack(probes), jnp.stack(depth)
 
     return jax.jit(decide)
@@ -133,8 +139,37 @@ class CascadeSimStepper:
         self.patience = int(patience)
         self.chunk = int(chunk)
         self.budgets = budgets
+        self._bank_arrays = tuple(dynamic_arrays(s) for s in strategies)
+        self.bank_source = None    # control-plane hot-swap override
+        self.row_tap = None        # observed-outcome tap (Recalibrator)
         self._decide = make_cascade_decide(bank, strategies)
         self.alloc()
+
+    def bank_arrays(self) -> tuple:
+        if self.bank_source is not None:
+            return self.bank_source.bank_arrays()
+        return self._bank_arrays
+
+    def decide_cache_size(self) -> int:
+        fn = getattr(self._decide, "_cache_size", None)
+        return int(fn()) if fn is not None else -1
+
+    def apply_gear(self, gear) -> None:
+        """Host-side gear knobs: escalate patience, per-model catch-up
+        budgets, per-rung lane caps.  All step-boundary swaps — granted
+        residencies and in-flight escalations are never revoked."""
+        spec = getattr(gear, "spec", gear)
+        patience = getattr(spec, "patience", None)
+        if patience is not None:
+            self.router.set_patience(patience)
+            self.patience = int(patience)
+        budgets = getattr(spec, "esc_budgets", None)
+        if budgets is not None:
+            self.esc.set_budgets(budgets)
+            self.budgets = list(budgets)
+        lane_split = getattr(spec, "lane_split", None)
+        if lane_split is not None:
+            self.esc.set_lane_caps(lane_split)
 
     # ------------------------------------------------------------------
 
@@ -154,7 +189,8 @@ class CascadeSimStepper:
         self.stats = CascadeStats(len(self.bank))
 
     def warmup(self) -> None:
-        self._decide(jnp.zeros((self.n_lanes, self.bank.n_total),
+        self._decide(self.bank_arrays(),
+                     jnp.zeros((self.n_lanes, self.bank.n_total),
                                jnp.float32),
                      jnp.zeros((self.n_lanes,), bool),
                      jnp.zeros((self.n_lanes,), jnp.int32),
@@ -298,9 +334,12 @@ class CascadeSimStepper:
             mask = np.zeros(self.n_lanes, bool)
             mask[decode] = True
             served, probes, depth = jax.device_get(self._decide(
-                jnp.asarray(losses), jnp.asarray(mask),
-                jnp.asarray(sid, jnp.int32), jnp.asarray(floor)))
+                self.bank_arrays(), jnp.asarray(losses),
+                jnp.asarray(mask), jnp.asarray(sid, jnp.int32),
+                jnp.asarray(floor)))
             seg_batch += int(depth.sum())
+            if self.row_tap is not None:
+                self.row_tap(losses[decode], np.asarray(served)[decode])
             for slot in decode:
                 self.lane_tidx[slot] += 1
                 lp = len(self.lane_req[slot].prompt)

@@ -1,0 +1,31 @@
+"""repro.serving.control — the adaptive control plane (DESIGN.md §11).
+
+Closes the loop from telemetry to strategy: everything before this
+package is feed-forward (offline calibration -> frozen tables -> serve);
+this package WRITES BACK into the decision layer while the server runs.
+
+    TelemetryWindow  — sliding-window load/quality estimates + the
+                       load-level signal and inflection detection.
+    GearPlanner      — offline bank of load-indexed gear plans, each a
+                       provably-optimal T-Tamer strategy for its regime.
+    Recalibrator     — online re-fit of `Cascade` tables from observed
+                       outcomes, re-solved off the hot path.
+    BankSwap         — atomic strategy-bank exchange between token
+                       steps: a device-array publish + a host-side gear
+                       pointer, never a retrace, never a dropped lane.
+    AdaptiveController — the glue the `Server` drives via its
+                       begin / on_arrivals / on_step_end hooks.
+"""
+
+from repro.serving.control.controller import AdaptiveController
+from repro.serving.control.gears import (Gear, GearBank, GearPlanner,
+                                         GearSpec)
+from repro.serving.control.recalibrate import Recalibrator
+from repro.serving.control.swap import BankSwap
+from repro.serving.control.telemetry import TelemetrySnapshot, TelemetryWindow
+
+__all__ = [
+    "TelemetryWindow", "TelemetrySnapshot",
+    "GearSpec", "Gear", "GearBank", "GearPlanner",
+    "Recalibrator", "BankSwap", "AdaptiveController",
+]

@@ -1,0 +1,93 @@
+"""`BankSwap` — atomic strategy-bank exchange (DESIGN.md §11).
+
+The swap point is the PR-2 static bank: steppers trace their decision
+program over a fixed-size tuple of strategies and route per-lane with a
+stamped ``sid``, and (since the control-plane PR) they take every
+slot's DYNAMIC ARRAYS as a traced argument.  That turns both control
+actions into host-side pointer moves:
+
+  * **gear switch** — ``swap_to(slot)`` changes which slot NEW
+    admissions are stamped with (`sid_of`); in-flight lanes keep their
+    admitted ``sid`` and finish on the gear that admitted them, so a
+    switch never drops or restyles a live stream;
+  * **table publish** — ``publish(slot, strategy)`` replaces the slot's
+    strategy with a re-calibrated one whose arrays have identical
+    pytree structure, shapes and dtypes (enforced against the slot's
+    reserved `slot_signature`), so the next step's jit lookup is a
+    cache HIT — zero retraces by construction.
+
+Both land between token steps only: the `Server` consults this object
+via the stepper's ``bank_source`` at the top of each step, and the
+`AdaptiveController` mutates it in ``on_step_end`` — there is no
+instant at which a half-applied bank is visible to device code.
+"""
+
+from __future__ import annotations
+
+from repro.strategy.base import dynamic_arrays
+from repro.strategy.registry import reserve_bank, slot_signature
+
+__all__ = ["BankSwap"]
+
+
+class BankSwap:
+    """Mutable strategy bank with signature-guarded publishes."""
+
+    def __init__(self, strategies, *, start: int = 0):
+        members, self.signatures = reserve_bank(strategies)
+        self.strategies = list(members)
+        self._arrays = [dynamic_arrays(s) for s in self.strategies]
+        if not 0 <= start < len(self.strategies):
+            raise ValueError(f"start slot {start} outside bank of "
+                             f"{len(self.strategies)}")
+        self.gear = int(start)
+        self.switches: list[tuple[float, int, int]] = []   # (t, old, new)
+        self.publishes: list[tuple[float, int]] = []       # (t, slot)
+
+    def __len__(self) -> int:
+        return len(self.strategies)
+
+    # ---- what the stepper reads each step ----------------------------
+
+    def bank_arrays(self) -> tuple:
+        """Per-slot dynamic arrays for the next token step (the traced
+        argument of the stepper's decision program)."""
+        return tuple(self._arrays)
+
+    def sid_of(self, req) -> int:
+        """Admission stamp: every request admitted from now decides on
+        the ACTIVE gear's slot.  The request keeps this sid for life."""
+        return self.gear
+
+    # ---- what the controller writes between steps --------------------
+
+    def swap_to(self, slot: int, now: float) -> bool:
+        """Point new admissions at ``slot``; returns True on a change."""
+        slot = int(slot)
+        if not 0 <= slot < len(self.strategies):
+            raise ValueError(f"slot {slot} outside bank of "
+                             f"{len(self.strategies)}")
+        if slot == self.gear:
+            return False
+        self.switches.append((float(now), self.gear, slot))
+        self.gear = slot
+        return True
+
+    def publish(self, slot: int, strategy, now: float) -> None:
+        """Install a re-calibrated strategy into ``slot``.
+
+        The newcomer must carry the slot's exact swap signature (class,
+        array structure, shapes, dtypes) — the contract that makes the
+        publish retrace-free.  A violating publish raises and leaves
+        the bank untouched.
+        """
+        slot = int(slot)
+        sig = slot_signature(strategy)
+        if sig != self.signatures[slot]:
+            raise ValueError(
+                f"publish into slot {slot} changes the swap signature "
+                f"(reserved {self.signatures[slot]!r}, got {sig!r}); "
+                "recalibrated tables must keep structure/shapes/dtypes")
+        self.strategies[slot] = strategy
+        self._arrays[slot] = dynamic_arrays(strategy)
+        self.publishes.append((float(now), slot))

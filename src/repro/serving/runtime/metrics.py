@@ -23,12 +23,13 @@ records, which is what the bench trajectory and the CI artifact store.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 
 import numpy as np
 
-__all__ = ["RequestRecord", "RuntimeMetrics"]
+__all__ = ["RequestRecord", "RuntimeMetrics", "SlidingWindow"]
 
 
 @dataclasses.dataclass
@@ -74,10 +75,60 @@ def _pct(vals, qs=(50, 95, 99)) -> dict:
     return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
 
 
+class SlidingWindow:
+    """Bounded time-indexed sample ring for streaming percentiles.
+
+    Holds ``(t, value)`` pairs; reads prune everything older than the
+    trailing ``span``, and the deque's ``maxlen`` caps memory no matter
+    how long the serve runs — the unbounded-growth fix the control
+    plane's telemetry needs.  Semantics are EXPLICIT at the edges:
+
+      * empty window  -> ``percentiles`` returns all-None, ``values``
+        returns ``[]`` (callers must not read a rate out of nothing);
+      * one sample    -> every percentile IS that sample (no
+        interpolation against phantom data).
+    """
+
+    def __init__(self, span: float, maxlen: int = 4096):
+        if not span > 0:
+            raise ValueError(f"window span must be > 0, got {span}")
+        self.span = float(span)
+        self._buf: collections.deque = collections.deque(
+            maxlen=int(maxlen))
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def push(self, t: float, value) -> None:
+        self._buf.append((float(t), value))
+
+    def prune(self, now: float) -> None:
+        lo = float(now) - self.span
+        while self._buf and self._buf[0][0] < lo:
+            self._buf.popleft()
+
+    def items(self, now: float) -> list:
+        self.prune(now)
+        return list(self._buf)
+
+    def values(self, now: float) -> list:
+        return [v for _, v in self.items(now)]
+
+    def percentiles(self, now: float, qs=(50, 95, 99)) -> dict:
+        vals = self.values(now)
+        if not vals:
+            return {f"p{q}": None for q in qs}
+        if len(vals) == 1:
+            v = float(vals[0])
+            return {f"p{q}": v for q in qs}
+        return _pct(vals, qs)
+
+
 class RuntimeMetrics:
     """Accumulates per-request + per-step records during a serve run."""
 
-    def __init__(self, full_depth: int, n_lanes: int):
+    def __init__(self, full_depth: int, n_lanes: int,
+                 window: float | None = None, window_samples: int = 4096):
         self.full_depth = int(full_depth)   # segments (sim: nodes)/token
         self.n_lanes = int(n_lanes)
         self.records: dict[int, RequestRecord] = {}
@@ -88,6 +139,29 @@ class RuntimeMetrics:
         self.lane_steps = 0                 # occupied lane-tokens
         self.t_start: float = 0.0
         self.t_end: float = 0.0
+        self.window: float | None = None
+        self._win_ttft: SlidingWindow | None = None
+        self._win_itl: SlidingWindow | None = None
+        self._win_tok: SlidingWindow | None = None
+        if window is not None:
+            self.enable_window(window, window_samples)
+
+    def enable_window(self, span: float,
+                      window_samples: int = 4096) -> None:
+        """Turn on bounded sliding-window accounting (streaming mode).
+
+        Besides the window rings, this BOUNDS the global inter-token-gap
+        buffer: a streaming serve can run indefinitely, so ``summary``'s
+        token-latency percentiles then cover the most recent samples
+        only instead of growing without limit.
+        """
+        self.window = float(span)
+        self._win_ttft = SlidingWindow(span, window_samples)
+        self._win_itl = SlidingWindow(span, window_samples)
+        # value = (rid, served_node): goodput needs the owning request
+        self._win_tok = SlidingWindow(span, window_samples)
+        bound = 16 * int(window_samples)
+        self.itl = collections.deque(self.itl, maxlen=bound)
 
     # ------------------------------------------------------------------
     # event hooks (called by the server loop)
@@ -110,11 +184,17 @@ class RuntimeMetrics:
         rec = self.records[rid]
         if rec.first_token is None:
             rec.first_token = now
+            if self._win_ttft is not None:
+                self._win_ttft.push(now, now - rec.arrival)
         else:
             self.itl.append(now - rec._last_token)
+            if self._win_itl is not None:
+                self._win_itl.push(now, now - rec._last_token)
         rec._last_token = now
         rec.n_tokens += 1
         rec.served_depth_sum += int(served_node)
+        if self._win_tok is not None:
+            self._win_tok.push(now, (rid, int(served_node)))
         if token is not None:
             rec.tokens.append(int(token))
 
@@ -163,6 +243,41 @@ class RuntimeMetrics:
                                     if full_l else None),
             "mean_served_node": (sum(r.served_depth_sum for r in recs)
                                  / tokens if tokens else None),
+        }
+
+    def window_summary(self, now: float, slo: float | None = None) -> dict:
+        """Trailing-window estimates over the bounded rings.
+
+        Explicit edge semantics: an EMPTY window reports zero
+        throughput/goodput, ``samples == 0``, all-None percentiles and
+        a None mean served node — never NaNs, never stale data.  The
+        per-window ``goodput_tok_s`` counts window tokens whose owning
+        request's TTFT met the SLO — the quantity the control plane's
+        gear selection watches.
+        """
+        if self._win_tok is None:
+            raise RuntimeError("sliding window disabled — pass window= "
+                               "to RuntimeMetrics or call enable_window")
+        toks = self._win_tok.values(now)
+        span = min(self.window, max(float(now) - self.t_start, 1e-9))
+        goodput = None
+        if slo is not None:
+            ok = 0
+            for rid, _node in toks:
+                ttft = self.records[rid].ttft
+                if ttft is not None and ttft <= slo:
+                    ok += 1
+            goodput = ok / span
+        return {
+            "now": float(now),
+            "window": self.window,
+            "samples": len(toks),
+            "throughput_tok_s": len(toks) / span,
+            "goodput_tok_s": goodput,
+            "mean_served_node": (sum(n for _, n in toks) / len(toks)
+                                 if toks else None),
+            "ttft": self._win_ttft.percentiles(now),
+            "token_latency": self._win_itl.percentiles(now),
         }
 
     def to_json(self, path: str, slo: float | None = None,

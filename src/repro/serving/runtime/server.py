@@ -37,6 +37,7 @@ from repro.serving.engine import bank_observe, bank_serve
 from repro.serving.runtime.metrics import RuntimeMetrics
 from repro.serving.runtime.request import Request, RequestQueue
 from repro.serving.runtime.scheduler import LaneScheduler
+from repro.strategy.base import dynamic_arrays, with_arrays
 
 __all__ = ["Server", "SimStepper", "build_bank", "cascade_factory"]
 
@@ -147,9 +148,22 @@ class SimStepper:
                     "channel; simulation mode replays losses only — "
                     "serve it through the real EngineStepper instead")
 
-        def decide(losses, occupied, sid):
+        # hot-swap point (DESIGN.md §11): the decision program takes the
+        # bank's dynamic arrays as a traced ARGUMENT, so publishing new
+        # same-shaped tables (a `BankSwap`) hits the jit cache — never a
+        # retrace, never a dropped lane.  ``bank_source`` is the control
+        # plane's override; without one the baked arrays are passed.
+        self._bank_arrays = tuple(dynamic_arrays(s) for s in strategies)
+        self.bank_source = None
+        # host tap for observed (loss-row, served-node) outcomes — the
+        # Recalibrator's input stream; None = disabled, zero overhead
+        self.row_tap = None
+
+        def decide(arrays, losses, occupied, sid):
+            live = tuple(with_arrays(s, a)
+                         for s, a in zip(strategies, arrays))
             b = losses.shape[0]
-            states = tuple(s.init(b) for s in strategies)
+            states = tuple(s.init(b) for s in live)
             active = occupied
             depth = jnp.zeros((), jnp.int32)
             policy = jnp.zeros((), jnp.int32)
@@ -157,12 +171,33 @@ class SimStepper:
                 depth = depth + active.any().astype(jnp.int32)
                 policy = policy + active.sum(dtype=jnp.int32)
                 states, active = bank_observe(
-                    strategies, states, node, losses[:, node], None,
+                    live, states, node, losses[:, node], None,
                     active, sid)
-            return bank_serve(strategies, states, sid), depth, policy
+            return bank_serve(live, states, sid), depth, policy
 
         self._decide = jax.jit(decide)
         self.alloc()
+
+    def bank_arrays(self) -> tuple:
+        """The per-slot dynamic arrays the next step will decide with."""
+        if self.bank_source is not None:
+            return self.bank_source.bank_arrays()
+        return self._bank_arrays
+
+    def decide_cache_size(self) -> int:
+        """Jit-cache entries of the decision program — the hot-swap
+        safety tests assert this stays at 1 across swaps/publishes."""
+        fn = getattr(self._decide, "_cache_size", None)
+        return int(fn()) if fn is not None else -1
+
+    def apply_gear(self, gear) -> None:
+        """Host-side gear knobs outside the strategy tables: the
+        chunked-prefill budget.  Routing (which slot new admissions
+        use) and tables (recalibration) swap through ``bank_source``."""
+        budget = getattr(getattr(gear, "spec", gear),
+                         "prefill_budget", None)
+        if budget is not None and self.planner is not None:
+            self.planner.budget = int(budget)
 
     def alloc(self) -> None:
         self.lane_req: list[Request | None] = [None] * self.n_lanes
@@ -187,7 +222,8 @@ class SimStepper:
 
     def warmup(self) -> None:
         """Compile the decision program (virtual time is unaffected)."""
-        self._decide(jnp.zeros((self.n_lanes, self.n_nodes), jnp.float32),
+        self._decide(self.bank_arrays(),
+                     jnp.zeros((self.n_lanes, self.n_nodes), jnp.float32),
                      jnp.zeros((self.n_lanes,), bool),
                      jnp.zeros((self.n_lanes,), jnp.int32))
         self.alloc()
@@ -221,11 +257,14 @@ class SimStepper:
                                      int(self.lane_tidx[lane]))
             self.lane_tidx[lane] += 1
         served, depth, policy = jax.device_get(self._decide(
-            jnp.asarray(losses), jnp.asarray(emit, bool),
-            jnp.asarray(sid, jnp.int32)))
+            self.bank_arrays(), jnp.asarray(losses),
+            jnp.asarray(emit, bool), jnp.asarray(sid, jnp.int32)))
         for lane in np.flatnonzero(emit):
             self.served_loss_sum += float(losses[lane, served[lane]])
             self.served_loss_n += 1
+        if self.row_tap is not None and emit.any():
+            idx = np.flatnonzero(emit)
+            self.row_tap(losses[idx], np.asarray(served)[idx])
         work = (policy / self.n_lanes) if self.cost == "lane" else depth
         # piggyback roofline: the compute-bound chunk hides under the
         # memory-bound decode sweep; the serial stop-the-world stall
@@ -247,7 +286,8 @@ class Server:
 
     def __init__(self, stepper, scheduler: LaneScheduler, sid_of, *,
                  order: str = "fifo", slo: float | None = None,
-                 static_batching: bool = False, eos: int | None = None):
+                 static_batching: bool = False, eos: int | None = None,
+                 controller=None):
         self.stepper = stepper
         self.scheduler = scheduler
         self.sid_of = sid_of
@@ -255,6 +295,12 @@ class Server:
         self.slo = slo
         self.static_batching = static_batching
         self.eos = eos
+        # adaptive control plane (DESIGN.md §11): begin() binds it to
+        # the metrics + stepper, on_arrivals feeds the load signal,
+        # on_step_end is the step-boundary decision point — the ONLY
+        # instant a gear swap can land, which is what makes swaps
+        # atomic with respect to in-flight token steps
+        self.controller = controller
         self._vt = 0.0
         self._t0 = 0.0
 
@@ -288,6 +334,8 @@ class Server:
         else:
             stepper.alloc()
         metrics = RuntimeMetrics(stepper.full_depth, sched.n_lanes)
+        if self.controller is not None:
+            self.controller.begin(metrics, stepper)
         deadline_of = None
         if self.order == "edf" and self.slo is not None:
             deadline_of = lambda r: r.arrival + self.slo  # noqa: E731
@@ -304,8 +352,13 @@ class Server:
 
         while pending or len(queue) or sched.busy():
             now = self._now()
+            pushed = []
             while pending and pending[0].arrival <= now:
-                queue.push(pending.pop(0))
+                req = pending.pop(0)
+                queue.push(req)
+                pushed.append(req.arrival)
+            if self.controller is not None and pushed:
+                self.controller.on_arrivals(pushed)
             for lane, req in sched.admit(
                     queue, self.sid_of,
                     static_batching=self.static_batching,
@@ -354,6 +407,11 @@ class Server:
                     if release is not None:
                         release(lane)   # paged KV: pages back to the pool
                     sched.release(lane)
+            if self.controller is not None:
+                # step boundary: the device program for this step has
+                # fully retired, no lane is mid-token — the one atomic
+                # instant a gear swap / table publish may land
+                self.controller.on_step_end(self._now(), len(queue))
 
         metrics.t_end = self._now()
         return metrics

@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.serving.runtime.request import Request
 
-__all__ = ["WorkloadSpec", "make_workload", "available_workloads"]
+__all__ = ["WorkloadSpec", "make_workload", "available_workloads",
+           "inflection_times"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,15 +100,69 @@ def bursty(spec: WorkloadSpec, *, on: float = 1.0,
     return _finish(np.asarray(arrivals), spec, rng)
 
 
-def diurnal(spec: WorkloadSpec) -> list[Request]:
-    """Inhomogeneous Poisson with rate(t) = peak * sin^2(pi t / T) —
-    a zero→peak→zero ramp over the window (thinning construction)."""
+def diurnal(spec: WorkloadSpec, *, period: float | None = None,
+            phase: float = 0.0, amplitude: float = 1.0) -> list[Request]:
+    """Inhomogeneous Poisson with
+    ``rate(t) = peak * amplitude * sin^2(pi (t - phase) / period)``
+    (thinning construction).  The defaults — one period spanning the
+    window, zero phase, full amplitude — reproduce the classic
+    zero→peak→zero ramp bit-for-bit; shorter periods stack several
+    day/night cycles into one serve, which is what the adaptive-control
+    tests ride.
+    """
+    if period is None:
+        period = spec.duration
+    if not period > 0:
+        raise ValueError(f"period must be > 0, got {period}")
+    if not 0.0 < amplitude <= 1.0:
+        raise ValueError(f"amplitude must be in (0, 1], got {amplitude}")
     rng = np.random.default_rng(spec.seed)
     cand = np.asarray(
         _poisson_arrivals(spec.rate, 0.0, spec.duration, rng))
-    accept = rng.random(cand.shape) \
-        < np.sin(np.pi * cand / spec.duration) ** 2
+    accept = rng.random(cand.shape) < amplitude * \
+        np.sin(np.pi * (cand - phase) / period) ** 2
     return _finish(cand[accept], spec, rng)
+
+
+def inflection_times(spec: WorkloadSpec, *, period: float | None = None,
+                     phase: float = 0.0, amplitude: float = 1.0,
+                     threshold: float = 0.5) -> list[tuple[float, str]]:
+    """Analytic crossings of the diurnal rate curve with
+    ``threshold * spec.rate`` inside ``[0, duration)``.
+
+    Returns ``[(t, "rising" | "falling"), ...]`` sorted by time — the
+    exact instants a load-indexed controller with that gear threshold
+    SHOULD switch, so tests can assert observed gear switches land at
+    known traffic inflections.  With ``threshold = 0.5 * amplitude``'s
+    midpoint the crossing sits where ``|d rate/dt|`` is maximal (the
+    sin^2 curve is steepest at half its peak), which is the "steepest
+    traffic inflection" the adaptive smoke gate measures at.  An empty
+    list means the curve never reaches the threshold.
+    """
+    if period is None:
+        period = spec.duration
+    peak = spec.rate * amplitude
+    if not 0.0 < threshold:
+        raise ValueError(f"threshold must be > 0, got {threshold}")
+    level = threshold * spec.rate / peak   # sin^2 value at the crossing
+    if level >= 1.0:
+        return []
+    a = float(np.arcsin(np.sqrt(level)))   # in [0, pi/2)
+    out = []
+    # sin^2(u) crosses `level` rising at u = k*pi + a and falling at
+    # u = k*pi + (pi - a); map u back through t = phase + period * u / pi
+    k = int(np.floor(-phase / period)) - 1
+    while True:
+        base = phase + k * period
+        if base >= spec.duration:
+            break
+        rising = base + period * a / np.pi
+        falling = base + period * (np.pi - a) / np.pi
+        for t, kind in ((rising, "rising"), (falling, "falling")):
+            if 0.0 <= t < spec.duration:
+                out.append((float(t), kind))
+        k += 1
+    return sorted(out)
 
 
 _WORKLOADS = {"poisson": poisson, "bursty": bursty, "diurnal": diurnal}

@@ -8,20 +8,24 @@ benchmarks, and the online serving engine (DESIGN.md §3-4).
     Engine(params, cfg, strat, cache_len=128)      # online serving
 """
 
-from repro.strategy.base import (PolicyResult, Strategy, evaluate,
-                                 init_lane, reset_lanes)
+from repro.strategy.base import (PolicyResult, Strategy, dynamic_arrays,
+                                 evaluate, init_lane, reset_lanes,
+                                 with_arrays)
 from repro.strategy.cascade import Cascade
 from repro.strategy.line import (FixedNodeStrategy, PatienceStrategy,
                                  RecallIndexStrategy, ThresholdStrategy,
                                  TreeIndexStrategy)
 from repro.strategy.oracle import OracleStrategy
-from repro.strategy.registry import available, make, needs_tables, register
+from repro.strategy.registry import (available, make, needs_tables,
+                                     register, reserve_bank, slot_signature)
 from repro.strategy.skip import SkipRecallStrategy
 
 __all__ = [
     "Strategy", "PolicyResult", "evaluate", "reset_lanes", "init_lane",
+    "dynamic_arrays", "with_arrays",
     "Cascade",
     "make", "available", "needs_tables", "register",
+    "reserve_bank", "slot_signature",
     "RecallIndexStrategy", "TreeIndexStrategy", "ThresholdStrategy",
     "PatienceStrategy", "FixedNodeStrategy", "OracleStrategy",
     "SkipRecallStrategy",

@@ -29,6 +29,7 @@ way — no isinstance dispatch anywhere downstream.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Protocol, Tuple, runtime_checkable
 
@@ -36,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["PolicyResult", "Strategy", "evaluate", "reset_lanes",
-           "init_lane"]
+           "init_lane", "dynamic_arrays", "with_arrays"]
 
 
 @jax.tree_util.register_dataclass
@@ -74,6 +75,39 @@ class Strategy(Protocol):
 
     def serve(self, state) -> jax.Array:
         ...
+
+
+def dynamic_arrays(strategy: Strategy) -> dict:
+    """The strategy's hot-swappable parameters, keyed by attribute name.
+
+    A strategy's ``swap_attrs`` class attribute names the attributes
+    that parameterize its DECISIONS — solved DP tables, supports,
+    thresholds, cost vectors.  Each is a pytree of arrays whose
+    structure and shapes are fixed by the cascade's (n, k), so
+    republishing a same-shaped pytree changes the policy without
+    changing the jitted program: this is the control plane's hot-swap
+    contract (DESIGN.md §11).  Strategies without ``swap_attrs``
+    (oracles, fixed endpoints with no learned tables) return ``{}``.
+    """
+    return {name: getattr(strategy, name)
+            for name in getattr(strategy, "swap_attrs", ())}
+
+
+def with_arrays(strategy: Strategy, arrays: dict) -> Strategy:
+    """Shallow clone of ``strategy`` with its dynamic arrays replaced.
+
+    Called INSIDE a traced token step, so the swap attributes become
+    traced jit ARGUMENTS instead of baked-in closure constants —
+    publishing new same-shaped arrays then hits the jit cache instead
+    of retracing.  Static decision structure (lam, topology, patience
+    ints) stays on the original object and remains compile-time.
+    """
+    if not arrays:
+        return strategy
+    clone = copy.copy(strategy)
+    for name, value in arrays.items():
+        setattr(clone, name, value)
+    return clone
 
 
 def reset_lanes(strategy: Strategy, state, mask: jax.Array):

@@ -176,6 +176,31 @@ class Cascade:
                    costs=jnp.asarray(costs, jnp.float32), lam=lam,
                    boundaries=boundaries)
 
+    def refit(self, losses: np.ndarray) -> "Cascade":
+        """Re-fit support + chain from NEW raw loss rows at this spec's
+        lambda and support size, preserving costs / boundaries / entry
+        costs, and re-solve the same table family — the online
+        `Recalibrator`'s publish path (DESIGN.md §11).
+
+        Same support size and node count mean the solved tables are
+        SHAPE-IDENTICAL to this spec's, so a strategy rebuilt from the
+        result can be hot-swapped into a reserved strategy-bank slot
+        without retracing the jitted token step.
+        """
+        losses = np.asarray(losses)
+        if losses.ndim != 2 or losses.shape[1] != self.n_nodes:
+            raise ValueError(f"refit rows have shape {losses.shape}; "
+                             f"this cascade expects (T, {self.n_nodes})")
+        casc = Cascade.from_traces(
+            losses, np.asarray(self.costs), k=self.support.size,
+            lam=self.lam, solve=False, boundaries=self.boundaries,
+            entry_costs=self.entry_costs)
+        if self.line_tables is not None:
+            casc.solve_line()
+        if self.skip_tables is not None:
+            casc.solve_skip(self.skip_mode)
+        return casc
+
     # ------------------------------------------------------------------
     # solvers (cached on the spec)
     # ------------------------------------------------------------------

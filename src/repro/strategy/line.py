@@ -68,6 +68,8 @@ class RecallIndexStrategy:
     """Alg. 1: probe while the if-stop table says continue, serve argmin."""
 
     online = True
+    # hot-swappable decision parameters (control-plane recalibration)
+    swap_attrs = ("tables", "support", "costs")
 
     def __init__(self, tables: LineTables, support: Support | None,
                  costs=None, lam: float = 1.0):
@@ -132,6 +134,7 @@ class TreeIndexStrategy:
     """
 
     online = True
+    swap_attrs = ("tables", "support", "costs")
 
     def __init__(self, tables: LineTables, support: Support | None,
                  costs=None, lam: float = 1.0):
@@ -183,6 +186,7 @@ class ThresholdStrategy:
     """Stop at the first node whose scaled loss clears its threshold."""
 
     online = True
+    swap_attrs = ("thresholds", "costs")
 
     def __init__(self, n_nodes: int, thresholds, recall: bool = False,
                  costs=None, lam: float = 1.0):
@@ -235,6 +239,7 @@ class PatienceStrategy:
 
     online = True
     needs_aux = True   # consumes predictions; loss-only replay can't drive it
+    swap_attrs = ("costs",)   # patience itself is static control flow
 
     def __init__(self, n_nodes: int, patience: int, costs=None,
                  lam: float = 1.0):
@@ -283,6 +288,7 @@ class FixedNodeStrategy:
     """Static endpoints of the trade-off: always_first / always_last."""
 
     online = True
+    swap_attrs = ("costs",)   # serve_node is static by definition
 
     def __init__(self, n_nodes: int, serve_node: int, costs=None,
                  lam: float = 1.0):

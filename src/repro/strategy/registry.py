@@ -21,7 +21,8 @@ from repro.strategy.line import (FixedNodeStrategy, PatienceStrategy,
 from repro.strategy.oracle import OracleStrategy
 from repro.strategy.skip import SkipRecallStrategy
 
-__all__ = ["register", "available", "make", "needs_tables"]
+__all__ = ["register", "available", "make", "needs_tables",
+           "slot_signature", "reserve_bank"]
 
 _REGISTRY: Dict[str, Callable[..., object]] = {}
 _ONLINE: Dict[str, bool] = {}
@@ -69,6 +70,51 @@ def make(name: str, cascade: Cascade, **kwargs):
         raise KeyError(f"unknown strategy {name!r}; available: "
                        f"{', '.join(available())}") from None
     return factory(cascade, **kwargs)
+
+
+def slot_signature(strategy) -> tuple:
+    """Structural signature a reserved bank slot must keep across hot
+    swaps: strategy class, the pytree structure of its dynamic arrays,
+    and every leaf's (shape, dtype).
+
+    Two strategies with equal signatures compile to the SAME jitted
+    token step when the bank's arrays are threaded as traced arguments,
+    so publishing one over the other is guaranteed retrace-free; the
+    control plane's `BankSwap` refuses any publish that changes it.
+    """
+    import jax as _jax
+    import jax.numpy as _jnp
+
+    from repro.strategy.base import dynamic_arrays
+
+    arrays = dynamic_arrays(strategy)
+    leaves, treedef = _jax.tree.flatten(arrays)
+    shapes = tuple((tuple(_jnp.shape(leaf)), _jnp.asarray(leaf).dtype.name)
+                   for leaf in leaves)
+    return (type(strategy).__name__, str(treedef), shapes)
+
+
+def reserve_bank(strategies) -> tuple:
+    """Reserve strategy-bank slots for a gear bank.
+
+    Validates that every member is servable online, that all members
+    agree on the node count, and records each slot's swap signature.
+    Returns ``(strategies, signatures)`` — the fixed-size tuple the
+    token step is traced over and the per-slot contract later
+    publishes are checked against.
+    """
+    strategies = tuple(strategies)
+    if not strategies:
+        raise ValueError("a strategy bank needs at least one slot")
+    n = strategies[0].n_nodes
+    for i, s in enumerate(strategies):
+        if not getattr(s, "online", False):
+            raise ValueError(f"slot {i}: {type(s).__name__} is a "
+                             "hindsight-only strategy; banks serve online")
+        if s.n_nodes != n:
+            raise ValueError(f"slot {i} expects {s.n_nodes} nodes, slot 0 "
+                             f"expects {n} — one bank serves one ladder")
+    return strategies, tuple(slot_signature(s) for s in strategies)
 
 
 def _lam(cascade: Cascade, lam) -> float:

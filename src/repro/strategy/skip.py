@@ -47,6 +47,7 @@ class SkipRecallStrategy:
     # the walk follows a NEXT table solved from the root — it cannot be
     # floor-pinned mid-line (the cascade's commit policy checks this)
     jumps = True
+    swap_attrs = ("tables", "support", "edge_costs")
 
     def __init__(self, tables: SkipTables, support: Support | None,
                  edge_costs, lam: float = 1.0):

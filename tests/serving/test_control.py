@@ -1,0 +1,359 @@
+"""Adaptive control-plane tests (DESIGN.md §11): telemetry windows,
+diurnal inflection math, gear planning/pricing, online recalibration,
+and the bank HOT-SWAP SAFETY properties the swap design promises:
+
+  (a) a gear swap / table publish mid-serve never retraces the jitted
+      decision program (its jit cache stays at one entry),
+  (b) in-flight lanes stay bit-identical to a no-swap run — a switch
+      only redirects NEW admissions,
+  (c) request streams and the switch log are invariant to the
+      admission-list order across a swap boundary,
+  (d) on the seeded diurnal bench workload the controller's switches
+      land near the analytic traffic inflections and the CI adaptive
+      smoke gate's dominance claims hold.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import strategy
+from repro.core import traces
+from repro.serving import runtime as rt
+from repro.serving.control import (AdaptiveController, BankSwap,
+                                   GearPlanner, GearSpec, Recalibrator,
+                                   TelemetryWindow)
+from repro.serving.runtime.metrics import RuntimeMetrics, SlidingWindow
+from repro.serving.runtime.workload import (WorkloadSpec, inflection_times,
+                                            make_workload)
+from repro.strategy.base import dynamic_arrays
+from repro.strategy.registry import make as make_strategy
+from repro.strategy.registry import slot_signature
+
+N_NODES = 5
+SEG, OVH, SLO, LANES = 0.01, 0.002, 0.5, 3
+
+
+def _mini_bank(k=8):
+    """A tiny two-gear bank solved on synthetic calibration traces."""
+    rng = np.random.default_rng(3)
+    losses, _, flops = traces.ee_like_traces(rng, 800, N_NODES,
+                                             overthink_prob=0.2)
+    planner = GearPlanner(losses[:600], flops, k=k, seg_time=SEG,
+                          overhead=OVH, n_lanes=LANES, mean_tokens=8.0)
+    bank = planner.plan((GearSpec("hi", 0.95), GearSpec("lo", 0.6)))
+    return planner, bank, losses[600:]
+
+
+def _requests(rate=6.0, duration=4.0, seed=5):
+    spec = WorkloadSpec(rate=rate, duration=duration, prompt_len=4,
+                        max_tokens=(3, 10), seed=seed)
+    return make_workload("poisson", spec)
+
+
+def _serve(bank, serve_rows, requests, *, controller=None, sid=0):
+    stepper = rt.SimStepper(bank.strategies, serve_rows, n_lanes=LANES,
+                            seg_time=SEG, overhead=OVH)
+    sid_of = controller.sid_of if controller else (lambda r: sid)
+    server = rt.Server(stepper, rt.LaneScheduler(LANES), sid_of,
+                       slo=SLO, controller=controller)
+    return server.serve(requests), stepper
+
+
+class _Scripted:
+    """Minimal controller: lands scripted swap/publish actions at fixed
+    virtual times — no telemetry, no recalibration.  Exercises exactly
+    the `BankSwap` + ``bank_source`` machinery the real controller
+    drives."""
+
+    def __init__(self, strategies, actions, start=0):
+        self.swap = BankSwap(strategies, start=start)
+        self.actions = sorted(actions, key=lambda a: a[0])
+
+    def begin(self, metrics, stepper):
+        stepper.bank_source = self.swap
+
+    def sid_of(self, req):
+        return self.swap.sid_of(req)
+
+    def on_arrivals(self, times):
+        pass
+
+    def on_step_end(self, now, queue_depth):
+        while self.actions and now >= self.actions[0][0]:
+            _, fn = self.actions.pop(0)
+            fn(self.swap, now)
+
+
+# --------------------------------------------------------------------------
+# telemetry: bounded windows, rate/slope signals
+# --------------------------------------------------------------------------
+
+def test_sliding_window_bounded_and_edge_semantics():
+    w = SlidingWindow(1.0, maxlen=4)
+    assert w.values(0.0) == []
+    assert w.percentiles(0.0)["p50"] is None        # empty -> None
+    w.push(0.0, 5.0)
+    p = w.percentiles(0.5)
+    assert p["p50"] == p["p99"] == 5.0              # one sample IS it
+    for i in range(10):
+        w.push(1.0 + 0.01 * i, float(i))
+    assert len(w) <= 4                              # maxlen bound
+    assert w.values(3.0) == []                      # span prune
+
+
+def test_telemetry_rate_slope_and_gauges():
+    tw = TelemetryWindow(2.0, slo=SLO)
+    m = RuntimeMetrics(N_NODES, 2)
+    tw.bind(m)
+    assert m.window is not None      # bind enables bounded windowing
+    tw.on_arrivals([1.6, 1.7, 1.8, 1.9])
+    assert tw.arrival_rate(2.0) == pytest.approx(4 / 2.0)
+    assert tw.rate_slope(2.0) > 0    # all arrivals in the late half
+    assert tw.load_level(2.0, [1.0, 2.0, 100.0]) == 2
+    tw.on_gauges(queue_depth=3)
+    with pytest.raises(KeyError, match="unknown gauge"):
+        tw.on_gauges(bogus=1)
+    snap = tw.snapshot(2.0)
+    assert snap.queue_depth == 3
+    assert snap.arrival_rate == pytest.approx(2.0)
+
+
+# --------------------------------------------------------------------------
+# diurnal workload: parameterized ramps + analytic inflections
+# --------------------------------------------------------------------------
+
+def test_diurnal_inflection_times_analytic():
+    spec = WorkloadSpec(rate=12.5, duration=30.0, seed=7)
+    marks = inflection_times(spec, period=15.0)
+    assert [d for _, d in marks] == ["rising", "falling",
+                                     "rising", "falling"]
+    assert [t for t, _ in marks] == pytest.approx(
+        [3.75, 11.25, 18.75, 26.25])
+    # default period spans the window: one zero->peak->zero ramp
+    assert [t for t, _ in inflection_times(spec)] == pytest.approx(
+        [7.5, 22.5])
+    # a curve that never reaches the threshold has no inflections
+    assert inflection_times(spec, amplitude=0.4, threshold=0.5) == []
+
+
+def test_diurnal_default_period_is_the_classic_ramp():
+    spec = WorkloadSpec(rate=6.0, duration=10.0, seed=3)
+    a = make_workload("diurnal", spec)
+    b = make_workload("diurnal", spec, period=spec.duration)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(a, b))
+    with pytest.raises(ValueError, match="period"):
+        make_workload("diurnal", spec, period=0.0)
+    with pytest.raises(ValueError, match="amplitude"):
+        make_workload("diurnal", spec, amplitude=1.5)
+
+
+# --------------------------------------------------------------------------
+# gear planning: quality-first order, sim-unit capacity pricing
+# --------------------------------------------------------------------------
+
+def test_gear_planner_orders_quality_first_and_prices_capacity():
+    planner, bank, _ = _mini_bank()
+    hi, lo = bank[0], bank[1]
+    assert (hi.name, lo.name) == ("hi", "lo")   # most work first
+    assert hi.work > lo.work
+    assert hi.max_rate < lo.max_rate
+    assert hi.est_loss <= lo.est_loss + 1e-9
+    # capacity pricing is the sim cost model identity
+    tok_s = LANES / (OVH + SEG * hi.work)
+    assert hi.max_rate == pytest.approx(
+        planner.utilization * tok_s / planner.mean_tokens)
+    # best covering gear, degrading to the cheapest at saturation
+    assert bank.slot_for_rate(0.1) == 0
+    assert bank.slot_for_rate((hi.max_rate + lo.max_rate) / 2) == 1
+    assert bank.slot_for_rate(10 * lo.max_rate) == 1
+    assert bank.rate_thresholds == sorted(g.max_rate for g in bank)
+
+
+def test_gear_spec_and_bank_validation():
+    with pytest.raises(ValueError, match="lam"):
+        GearSpec("bad", 0.0)
+    planner, _, _ = _mini_bank()
+    with pytest.raises(ValueError, match="duplicate"):
+        planner.plan((GearSpec("a", 0.9), GearSpec("a", 0.8)))
+
+
+# --------------------------------------------------------------------------
+# swap + publish machinery
+# --------------------------------------------------------------------------
+
+def test_bank_swap_publish_signature_guard():
+    _, bank, rows = _mini_bank()
+    swap = BankSwap(bank.strategies)
+    g = bank[0]
+    refit = make_strategy(g.spec.strategy, g.cascade.refit(rows[:128]))
+    swap.publish(0, refit, 1.0)     # same signature -> clean publish
+    assert swap.publishes == [(1.0, 0)]
+    # different support K -> different table shapes -> refused, and the
+    # bank is left untouched
+    rng = np.random.default_rng(11)
+    alien_losses, _, flops = traces.ee_like_traces(rng, 400, N_NODES)
+    alien_casc = strategy.Cascade.from_traces(
+        alien_losses, 0.05 * flops, k=4, lam=0.95, solve=False)
+    alien = make_strategy("skip_recall", alien_casc)
+    before = swap.bank_arrays()
+    with pytest.raises(ValueError, match="signature"):
+        swap.publish(0, alien, 2.0)
+    assert all(a is b for a, b in zip(swap.bank_arrays(), before))
+    with pytest.raises(ValueError, match="slot"):
+        swap.swap_to(7, 0.0)
+
+
+def test_cascade_refit_is_shape_stable():
+    _, bank, rows = _mini_bank()
+    g = bank[0]
+    s0 = make_strategy(g.spec.strategy, g.cascade)
+    s1 = make_strategy(g.spec.strategy, g.cascade.refit(rows[:200]))
+    assert slot_signature(s0) == slot_signature(s1)
+    a0 = jax.tree.leaves(dynamic_arrays(s0))
+    a1 = jax.tree.leaves(dynamic_arrays(s1))
+    assert [np.shape(x) for x in a0] == [np.shape(x) for x in a1]
+    assert any(not np.array_equal(x, y) for x, y in zip(a0, a1))
+
+
+def test_recalibrator_gates_and_reprices():
+    planner, bank, _ = _mini_bank()
+    swap = BankSwap(bank.strategies)
+    rec = Recalibrator(bank, swap, interval=1.0, min_rows=64,
+                       planner=planner)
+    assert not rec.due(5.0)                         # no rows yet
+    drift, _, _ = traces.ee_like_traces(np.random.default_rng(9), 128,
+                                        N_NODES, overthink_prob=0.9)
+    rec.observe(drift[:32], np.zeros(32, np.int64))
+    assert not rec.due(5.0)                         # below min_rows
+    rec.observe(drift[32:], np.zeros(96, np.int64))
+    assert not rec.due(0.5)                         # inside the interval
+    assert rec.due(5.0)
+    before = [g.max_rate for g in bank]
+    assert rec.recalibrate(5.0) == len(bank)
+    assert rec.recals == 1
+    assert len(swap.publishes) == len(bank)
+    # gears were re-priced on the (heavily drifted) observed rows
+    assert [g.max_rate for g in bank] != before
+
+
+def test_controller_hold_hysteresis():
+    _, bank, _ = _mini_bank()
+    ctl = AdaptiveController(bank, span=1.0, hold=3)
+    metrics = RuntimeMetrics(N_NODES, 1)
+    ctl.begin(metrics, object())    # no bank_source: switching only
+    assert ctl.recal is None
+    ctl.on_arrivals(np.linspace(0.9, 1.0, 100))     # way past capacity
+    ctl.on_step_end(1.0, 0)
+    ctl.on_step_end(1.0, 0)
+    assert ctl.swap.gear == 0       # streak 2 < hold 3: no thrash yet
+    ctl.on_step_end(1.0, 0)
+    assert ctl.swap.gear == 1       # sustained signal lands the swap
+    assert len(ctl.swap.switches) == 1
+
+
+# --------------------------------------------------------------------------
+# hot-swap safety (a)-(c): scripted swaps mid-serve
+# --------------------------------------------------------------------------
+
+def test_swap_and_publish_mid_serve_zero_retrace_no_drops():
+    _, bank, rows = _mini_bank()
+    refit = [make_strategy(g.spec.strategy, g.cascade.refit(rows[:256]))
+             for g in bank]
+    ctl = _Scripted(bank.strategies, [
+        (1.0, lambda sw, now: sw.swap_to(1, now)),
+        (2.0, lambda sw, now: (sw.publish(0, refit[0], now),
+                               sw.publish(1, refit[1], now))),
+    ])
+    reqs = _requests()
+    metrics, stepper = _serve(bank, rows, reqs, controller=ctl)
+    assert len(ctl.swap.switches) == 1
+    assert len(ctl.swap.publishes) == 2
+    # (a) the decision program compiled exactly once — swap + publish
+    # both hit the jit cache
+    assert stepper.decide_cache_size() == 1
+    # no dropped or stalled lanes
+    done = [r for r in metrics.records.values() if r.finished is not None]
+    assert len(done) == len(reqs)
+
+
+def test_swap_leaves_in_flight_lanes_bit_identical():
+    _, bank, rows = _mini_bank()
+    reqs = _requests()
+    frozen, _ = _serve(bank, rows, reqs, sid=0)
+    ctl = _Scripted(bank.strategies,
+                    [(1.5, lambda sw, now: sw.swap_to(1, now))])
+    swapped, _ = _serve(bank, rows, reqs, controller=ctl)
+    t_sw = ctl.swap.switches[0][0]
+    pre = [r.rid for r in swapped.records.values() if r.admitted < t_sw]
+    post = [r.rid for r in swapped.records.values() if r.admitted >= t_sw]
+    assert pre and post             # the swap actually split the run
+    # (b) everything admitted on the old gear replays bit-identically
+    for rid in pre:
+        assert swapped.records[rid].tokens == frozen.records[rid].tokens
+    # ...and the redirected admissions genuinely decide differently
+    assert any(swapped.records[rid].tokens != frozen.records[rid].tokens
+               for rid in post)
+
+
+def test_admission_order_invariance_across_swap_boundary():
+    _, bank, rows = _mini_bank()
+    reqs = _requests()
+
+    def run(request_list):
+        ctl = _Scripted(bank.strategies,
+                        [(1.5, lambda sw, now: sw.swap_to(1, now))])
+        metrics, _ = _serve(bank, rows, request_list, controller=ctl)
+        return metrics, ctl.swap.switches
+
+    a, sw_a = run(reqs)
+    b, sw_b = run(list(reversed(reqs)))
+    # (c) same arrivals, shuffled submission order: identical streams
+    # and an identical switch log
+    assert sw_a == sw_b
+    assert set(a.records) == set(b.records)
+    for rid in a.records:
+        assert a.records[rid].tokens == b.records[rid].tokens
+
+
+# --------------------------------------------------------------------------
+# (d) the bench sweep: switches ride the inflections; CI gate holds
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def adaptive_rows():
+    from benchmarks.bench_runtime import adaptive_vs_frozen
+    return adaptive_vs_frozen()
+
+
+def test_adaptive_smoke_acceptance_claims(adaptive_rows):
+    """The ISSUE acceptance gate on the bench's own sweep: strict
+    goodput dominance over every frozen gear at equal-or-better served
+    loss, >= 2 switches, >= 1 recalibration, zero dropped lanes, zero
+    retraces (`benchmarks/adaptive_smoke.check`)."""
+    from benchmarks.adaptive_smoke import check
+    assert check(adaptive_rows) == []
+
+
+def test_controller_switches_ride_the_inflections(adaptive_rows):
+    from benchmarks.bench_runtime import (ADAPT_DURATION, ADAPT_LEAD,
+                                          ADAPT_PEAK, ADAPT_PERIOD,
+                                          ADAPT_SEED, ADAPT_SPAN)
+    spec = WorkloadSpec(rate=ADAPT_PEAK, duration=ADAPT_DURATION,
+                        prompt_len=8, max_tokens=(4, 32), seed=ADAPT_SEED)
+    marks = inflection_times(spec, period=ADAPT_PERIOD)
+    assert len(marks) == 4
+    ad = next(r for r in adaptive_rows if r["adaptive"] == "adaptive")
+    times = [sw["t"] for sw in ad["controller"]["switches"]]
+    assert len(times) >= 2
+    # every analytic inflection gets a switch within the reaction
+    # window: the slope lead fires EARLY on rising edges, the trailing
+    # telemetry window reacts late on falling ones
+    tol = ADAPT_SPAN + ADAPT_LEAD + 0.5
+    for t_mark, direction in marks:
+        nearest = min(abs(t - t_mark) for t in times)
+        assert nearest <= tol, (
+            f"no gear switch within {tol}s of the {direction} "
+            f"inflection at t={t_mark} (switches at {times})")
