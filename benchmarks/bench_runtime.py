@@ -39,12 +39,14 @@ Run standalone for the CI smoke + JSON artifacts:
       --json
 
 ``--json`` (over)writes the stable ``BENCH_runtime.json`` at the repo
-root (schema ``bench_runtime/v4``: one row per rate x strategy x
+root (schema ``bench_runtime/v5``: one row per rate x strategy x
 kv-mode x prefill-mode x cascade-variant x adaptive-leg with goodput /
 TTFT p50/p99 / pages-in-use; earlier fields are unchanged — v2 added
 the ``prefill`` axis + chunk token counters, v3 the ``cascade`` axis +
 served-loss quality axis, v4 the ``adaptive`` axis + active gear id +
-gear-switch / recalibration counters).  Each run is one snapshot; the
+gear-switch / recalibration counters, v5 the decision-attribution
+cells rolled up from the observability tracer).  Each run is one
+snapshot; the
 trajectory accumulates across commits via git history and the per-run
 CI artifact upload, and ``benchmarks/check_regression.py`` (CI) fails
 >20% goodput drops at matching virtual-clock points.
@@ -61,6 +63,7 @@ import numpy as np
 from repro import strategy
 from repro.core import traces
 from repro.serving import runtime as rt
+from repro.serving.obs import Observability, decision_attribution
 from repro.serving.runtime.request import Request
 from repro.serving.runtime.workload import WorkloadSpec, make_workload
 
@@ -377,13 +380,20 @@ CASCADE_VARIANTS = ("small_only", "large_only", "cascade_norecall",
 
 
 def cascade_vs_monolith(*, rates, duration, seed=0,
-                        variants=CASCADE_VARIANTS):
+                        variants=CASCADE_VARIANTS, keep_trace=False):
     """Rate x variant sweep: {small-only, large-only, cascade-no-recall,
     cascade-recall} on the SAME request stream and trace rows, reporting
     goodput AND mean served trace loss — the two Pareto axes.  The
     recall cascade's argmin serving plus retained-residency re-pins are
     what let it dominate both monoliths and the no-recall ladder at the
-    pre-wall rates (pinned by the CI cascade smoke)."""
+    pre-wall rates (pinned by the CI cascade smoke).
+
+    Every leg serves TRACED (repro.serving.obs): goodput is virtual-
+    clock, so the host-side tracer cannot move it, and the trace's
+    token events roll up into per-row decision-ATTRIBUTION cells
+    (exit node x gear x escalated -> tokens / latency / served loss).
+    ``keep_trace=True`` additionally hands each row its live tracer
+    under the non-JSON ``"_trace"`` key (cascade_smoke exports one)."""
     casc, bank, bank_traces = _cascade_sim_setup(seed)
     rows = []
     for rate in rates:
@@ -393,8 +403,9 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
         for variant in variants:
             stepper, sid_of, lanes = _cascade_variant_stepper(
                 variant, casc, bank, bank_traces, requests)
+            obs = Observability()
             server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
-                               slo=SLO)
+                               slo=SLO, obs=obs)
             s = server.serve(requests).summary(slo=SLO)
             cs = stepper.cascade_stats() \
                 if hasattr(stepper, "cascade_stats") else None
@@ -419,6 +430,11 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
                     f" esc={cs['escalations']}"
                     f" recalls={cs['recalls']}"
                     f" repin={cs['repin_tokens']}")
+            row["attribution"] = decision_attribution(
+                obs.tracer.events,
+                gear_of=lambda sid, v=variant: f"static:{v}")
+            if keep_trace:
+                row["_trace"] = obs.tracer
             rows.append(row)
     return rows
 
@@ -519,13 +535,19 @@ def adaptive_vs_frozen(*, peak=ADAPT_PEAK, duration=ADAPT_DURATION,
                                 n_lanes=LANES, seg_time=SEG_TIME,
                                 overhead=OVERHEAD)
         sid_of = ctl.sid_of if ctl else (lambda r: slot)
+        obs = Observability()
         server = rt.Server(stepper, rt.LaneScheduler(LANES), sid_of,
-                           slo=SLO, controller=ctl)
+                           slo=SLO, controller=ctl, obs=obs)
         metrics = server.serve(requests)
-        return metrics, stepper, ctl, bank
+        # sids ARE gear-bank slots here, so attribution resolves each
+        # token's gear by name — the per-decision cost/quality split
+        # the BENCH trajectory carries from v5 on
+        attribution = decision_attribution(
+            obs.tracer.events, gear_of=lambda sid: bank[int(sid)].name)
+        return metrics, stepper, ctl, bank, attribution
 
     rows = []
-    metrics, stepper, ctl, bank = leg()
+    metrics, stepper, ctl, bank, attribution = leg()
     s = metrics.summary(slo=SLO)
     stats = ctl.stats()
     completed = sum(1 for r in metrics.records.values()
@@ -548,9 +570,10 @@ def adaptive_vs_frozen(*, peak=ADAPT_PEAK, duration=ADAPT_DURATION,
         "decide_cache_size": stepper.decide_cache_size(),
         "completed": completed, "n_requests": len(requests),
         "controller": stats,
+        "attribution": attribution,
     })
     for slot, gear in enumerate(bank):
-        metrics, stepper, _, _ = leg(slot=slot)
+        metrics, stepper, _, _, attribution = leg(slot=slot)
         s = metrics.summary(slo=SLO)
         completed = sum(1 for r in metrics.records.values()
                         if r.finished is not None)
@@ -566,6 +589,7 @@ def adaptive_vs_frozen(*, peak=ADAPT_PEAK, duration=ADAPT_DURATION,
             "gear": gear.name, "gear_switches": 0, "recalibrations": 0,
             "served_loss_mean": stepper.mean_served_loss,
             "completed": completed, "n_requests": len(requests),
+            "attribution": attribution,
         })
     return rows
 
@@ -660,9 +684,14 @@ def stable_report(rows: list[dict]) -> dict:
     + chunk token counters, v3 the ``cascade`` axis (``small_only`` |
     ``large_only`` | ``cascade_norecall`` | ``cascade_recall`` | null)
     with the served-loss quality axis and escalation/recall counters,
-    v4 adds the ``adaptive`` axis (``adaptive`` | ``frozen_<gear>`` |
-    null) plus the active gear id and gear-switch / recalibration
-    counters from the control plane (DESIGN.md §11)."""
+    v4 the ``adaptive`` axis (``adaptive`` | ``frozen_<gear>`` | null)
+    plus the active gear id and gear-switch / recalibration counters
+    from the control plane (DESIGN.md §11), and v5 adds per-row
+    decision-ATTRIBUTION cells (exit node x gear x escalated ->
+    tokens / latency contribution / served-loss contribution) rolled
+    up from the observability tracer (DESIGN.md §12; null on untraced
+    legs).  `check_regression` matches rows by name and ignores keys
+    it does not know, so every axis addition is backward-compatible."""
     out = []
     for row in rows:
         s = row.get("summary") or {}
@@ -697,8 +726,10 @@ def stable_report(rows: list[dict]) -> dict:
             "gear": row.get("gear"),
             "gear_switches": row.get("gear_switches"),
             "recalibrations": row.get("recalibrations"),
+            # v5 axis: decision attribution (DESIGN.md §12)
+            "attribution": row.get("attribution"),
         })
-    return {"schema": "bench_runtime/v4", "rows": out}
+    return {"schema": "bench_runtime/v5", "rows": out}
 
 
 def run(smoke: bool = False) -> list[dict]:

@@ -108,8 +108,34 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default="cascade-metrics.json",
                     help="write the sweep rows JSON here (CI artifact)")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the recall-cascade leg's decision "
+                         "trace (Perfetto JSON) at the highest rate — "
+                         "the artifact benchmarks.check_trace validates")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write an obs_metrics/v1 snapshot of the "
+                         "traced leg's summary + cascade counters")
     args = ap.parse_args()
-    rows = cascade_vs_monolith(rates=RATES, duration=DURATION)
+    rows = cascade_vs_monolith(rates=RATES, duration=DURATION,
+                               keep_trace=bool(args.trace_out
+                                               or args.metrics_out))
+    tracers = {row["name"]: row.pop("_trace")
+               for row in rows if "_trace" in row}
+    if args.trace_out or args.metrics_out:
+        name = f"runtime_sim_cascade_cascade_recall_r{max(RATES):g}"
+        row = next(r for r in rows if r["name"] == name)
+        if args.trace_out:
+            from repro.serving.obs.export import write_trace
+            write_trace(tracers[name], args.trace_out, title=name)
+            print(f"wrote {args.trace_out}")
+        if args.metrics_out:
+            from repro.serving.obs import MetricsRegistry
+            reg = MetricsRegistry()
+            reg.absorb("runtime", row["summary"], leg=name)
+            reg.absorb("cascade", row["cascade_stats"], leg=name)
+            reg.absorb("trace", tracers[name].stats(), leg=name)
+            reg.to_json(args.metrics_out)
+            print(f"wrote {args.metrics_out}")
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1, default=float)
     for row in rows:

@@ -1,0 +1,168 @@
+"""CI validator for observability artifacts (DESIGN.md §12).
+
+Hand-rolled structural checks — the repo deliberately carries no
+jsonschema dependency — over the two documents a traced serve writes:
+
+  * the Chrome/Perfetto trace-event JSON from ``--trace-out`` /
+    `repro.serving.obs.export.write_trace`: every event must be a
+    well-formed trace-event phase (M metadata, X complete span,
+    i instant, C counter) with numeric non-negative timestamps, the
+    three process tracks (lanes / models / control) must be named,
+    and every request span must sit on a named lane thread;
+  * the metrics snapshot from ``--metrics-out`` /
+    `MetricsRegistry.to_json` (schema ``obs_metrics/v1``): a flat
+    ``name{labels}`` -> value mapping with JSON-scalar (or histogram
+    dict) values.
+
+Usage (exit 1 on any violation, so the CI step fails loudly):
+
+  python -m benchmarks.check_trace --trace serve-trace.json \
+      --metrics serve-metrics.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_PHASES = {"M", "X", "i", "C"}
+_SCALARS = (int, float, str, bool)
+
+
+def _err(errors: list[str], where: str, msg: str) -> None:
+    errors.append(f"{where}: {msg}")
+
+
+def validate_trace(doc: dict) -> list[str]:
+    """Structural checks on a Chrome trace-event document; returns the
+    list of violations (empty == valid)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["trace: document is not a JSON object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["trace: traceEvents missing or empty"]
+
+    named_procs: dict[int, str] = {}
+    named_threads: set[tuple[int, int]] = set()
+    spans = instants = counters = 0
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            _err(errors, where, "event is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            _err(errors, where, f"unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            _err(errors, where, "missing name")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int) or ev[key] < 0:
+                _err(errors, where, f"bad {key} {ev.get(key)!r}")
+        if ph == "M":
+            args = ev.get("args") or {}
+            if ev.get("name") == "process_name":
+                named_procs[ev.get("pid", -1)] = args.get("name", "")
+            elif ev.get("name") == "thread_name":
+                named_threads.add((ev.get("pid", -1), ev.get("tid", -1)))
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            _err(errors, where, f"bad ts {ts!r}")
+        if ph == "X":
+            spans += 1
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                _err(errors, where, f"X span with bad dur {dur!r}")
+            if ev.get("pid") == 0 and \
+                    (0, ev.get("tid")) not in named_threads:
+                _err(errors, where,
+                     f"request span on unnamed lane tid {ev.get('tid')}")
+        elif ph == "i":
+            instants += 1
+            if ev.get("s") not in ("t", "p", "g"):
+                _err(errors, where, f"instant with bad scope "
+                     f"{ev.get('s')!r}")
+        elif ph == "C":
+            counters += 1
+            args = ev.get("args")
+            if not isinstance(args, dict) or not any(
+                    isinstance(v, (int, float)) for v in args.values()):
+                _err(errors, where, "counter without a numeric value")
+
+    for pid, expect in ((0, "lanes"), (1, "models"), (2, "control")):
+        if named_procs.get(pid) != expect:
+            _err(errors, "trace", f"process {pid} not named {expect!r} "
+                 f"(got {named_procs.get(pid)!r})")
+    if spans + instants == 0:
+        _err(errors, "trace", "no spans or instants — nothing was traced")
+    other = doc.get("otherData")
+    if not isinstance(other, dict) or "events_dropped" not in other:
+        _err(errors, "trace", "otherData.events_dropped missing")
+    return errors
+
+
+def validate_metrics(doc: dict) -> list[str]:
+    """Structural checks on an ``obs_metrics/v1`` snapshot."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["metrics: document is not a JSON object"]
+    if doc.get("schema") != "obs_metrics/v1":
+        _err(errors, "metrics", f"schema {doc.get('schema')!r} != "
+             "'obs_metrics/v1'")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        return errors + ["metrics: metrics mapping missing or empty"]
+    for key, value in metrics.items():
+        if not isinstance(key, str) or not key:
+            _err(errors, "metrics", f"bad series key {key!r}")
+            continue
+        name = key.split("{", 1)[0]
+        if not name or not all(c.isalnum() or c == "_" for c in name):
+            _err(errors, "metrics", f"malformed series name {key!r}")
+        if "{" in key and not key.endswith("}"):
+            _err(errors, "metrics", f"unterminated label set in {key!r}")
+        if isinstance(value, dict):
+            # histogram: bucket map + sum + count
+            if not ({"buckets", "sum", "count"} <= set(value)):
+                _err(errors, "metrics",
+                     f"{key}: histogram missing buckets/sum/count")
+        elif not isinstance(value, _SCALARS) and value is not None:
+            _err(errors, "metrics", f"{key}: non-scalar value "
+                 f"{type(value).__name__}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=None,
+                    help="Perfetto trace-event JSON to validate")
+    ap.add_argument("--metrics", default=None,
+                    help="obs_metrics/v1 snapshot JSON to validate")
+    args = ap.parse_args()
+    if not (args.trace or args.metrics):
+        ap.error("nothing to check: pass --trace and/or --metrics")
+    failures: list[str] = []
+    if args.trace:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        errs = validate_trace(doc)
+        n = len(doc.get("traceEvents", ())) if isinstance(doc, dict) else 0
+        print(f"{args.trace}: {n} trace events, {len(errs)} violations")
+        failures += errs
+    if args.metrics:
+        with open(args.metrics) as f:
+            doc = json.load(f)
+        errs = validate_metrics(doc)
+        n = len(doc.get("metrics", ())) if isinstance(doc, dict) else 0
+        print(f"{args.metrics}: {n} series, {len(errs)} violations")
+        failures += errs
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

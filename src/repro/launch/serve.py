@@ -38,11 +38,19 @@ switching without recalibration):
   PYTHONPATH=src python -m repro.launch.serve --smoke --server \
       --adaptive --gears quality:0.95,balanced:0.92,turbo:0.75 \
       --workload diurnal --rate 8 --duration 10 --recal-interval 2.5
+
+Every ``--server`` mode can be OBSERVED (repro.serving.obs, DESIGN.md
+§12): ``--trace-out`` writes a Chrome/Perfetto trace of the request
+lifecycle and every per-token decision, ``--metrics-out`` snapshots
+the metrics registry the console report renders from,
+``--flight-recorder DIR`` arms anomaly post-mortem bundles, and
+``--profile-dir`` captures a ``jax.profiler`` trace around the loop.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -54,6 +62,9 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.models.param import materialize
 from repro.serving.engine import Engine
+from repro.serving.obs import FlightRecorder, Observability
+from repro.serving.obs.export import profiler_capture, write_trace
+from repro.serving.obs.report import ServeReport, segments_saved_line
 from repro.training import checkpoint
 
 # aliases kept for muscle memory from the previous CLI
@@ -98,18 +109,38 @@ def build_strategy(name: str, casc: strategy.Cascade, *, threshold: float,
     return strategy.make(name, casc)
 
 
-def _print_segments_saved(seg_batch: int, seg_policy: int, *, steps: int,
-                          n_seg: int, lane_steps: int) -> None:
-    """One consistent line for both serving modes: each saving is a
-    percentage of ITS OWN full-depth reference — batch-level counts
-    segment launches (``steps * n_seg``), lane-level counts per-lane
-    probes (``lane_steps * n_seg``)."""
-    save_b = 100.0 * (1.0 - seg_batch / max(steps * n_seg, 1))
-    save_l = 100.0 * (1.0 - seg_policy / max(lane_steps * n_seg, 1))
-    print(f"segments saved: batch {save_b:.0f}% "
-          f"({seg_batch}/{steps * n_seg} launches) / "
-          f"lane {save_l:.0f}% ({seg_policy}/{lane_steps * n_seg} "
-          f"per-lane probes)")
+def _build_obs(args) -> Observability | None:
+    """The observability plane (DESIGN.md §12), built only when asked —
+    a ``None`` obs keeps every producer guard dead and the serve loop
+    byte-identical to the pre-observability path."""
+    if not (args.trace_out or args.metrics_out or args.flight_recorder
+            or args.profile_dir):
+        return None
+    flight = None
+    if args.flight_recorder:
+        os.makedirs(args.flight_recorder, exist_ok=True)
+        flight = FlightRecorder(out_dir=args.flight_recorder)
+    return Observability(flight=flight, profile_dir=args.profile_dir)
+
+
+def _finish_obs(args, obs: Observability | None,
+                report: ServeReport) -> None:
+    """Render the report, then the sinks: trace stats fold into the
+    report first (so they land in the metrics snapshot too), then the
+    Perfetto trace and the registry snapshot, if asked for."""
+    if obs is not None:
+        report.add_trace(obs.tracer, obs.flight)
+    report.print()
+    if obs is not None and args.trace_out:
+        write_trace(obs.tracer, args.trace_out)
+        print(f"wrote Perfetto trace to {args.trace_out} "
+              "(load in ui.perfetto.dev)")
+    if args.metrics_out:
+        report.registry.to_json(args.metrics_out)
+        print(f"wrote metrics snapshot to {args.metrics_out}")
+    if obs is not None and obs.flight is not None and obs.flight.bundles:
+        print(f"flight recorder: {len(obs.flight.bundles)} anomaly "
+              f"bundle(s) in {args.flight_recorder}")
 
 
 def _serve_batch(args, cfg, params, strat) -> None:
@@ -124,33 +155,12 @@ def _serve_batch(args, cfg, params, strat) -> None:
     n_nodes = cfg.n_ramps + 1
     print(f"generated {args.batch}x{args.tokens} tokens in {dt:.2f}s "
           f"({args.batch * args.tokens / dt:.1f} tok/s)")
-    _print_segments_saved(stats.segments_run_batch,
-                          stats.segments_run_policy,
-                          steps=args.tokens, n_seg=len(cfg.segments),
-                          lane_steps=args.tokens * args.batch)
+    print(segments_saved_line(stats.segments_run_batch,
+                              stats.segments_run_policy,
+                              steps=args.tokens, n_seg=len(cfg.segments),
+                              lane_steps=args.tokens * args.batch))
     print(f"served-node histogram: "
           f"{np.bincount(stats.served_nodes.ravel(), minlength=n_nodes)}")
-
-
-def _print_latency_summary(args, s) -> None:
-    """Shared --server report block (single-model and cascade)."""
-    def ms(v):
-        return "n/a" if v is None else f"{1e3 * v:.0f}ms"
-
-    print(f"completed {s['completed']}/{s['requests']} requests, "
-          f"{s['tokens']} tokens in {s['duration']:.2f}s")
-    print(f"throughput: {s['throughput_tok_s']:.1f} tok/s "
-          f"({s['throughput_req_s']:.2f} req/s)")
-    print(f"latency: ttft p50 {ms(s['ttft']['p50'])} "
-          f"p95 {ms(s['ttft']['p95'])} p99 {ms(s['ttft']['p99'])}; "
-          f"token p50 {ms(s['token_latency']['p50'])} "
-          f"p95 {ms(s['token_latency']['p95'])} "
-          f"p99 {ms(s['token_latency']['p99'])}")
-    att = s["slo_attainment"]
-    print(f"goodput (ttft<={args.slo_ms:.0f}ms): "
-          f"{s['goodput_tok_s']:.1f} tok/s "
-          f"(attainment {100 * att:.0f}%)" if att is not None else
-          "goodput: n/a")
 
 
 def _calibrate_multi(cfgs, params_list, key, lam, *, k: int = 16,
@@ -254,8 +264,9 @@ def _serve_cascade(args) -> None:
         policy=args.escalate_policy, patience=args.escalate_patience,
         paged_kernel=args.paged_kernel)
     slo = args.slo_ms / 1e3
+    obs = _build_obs(args)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
-                       order=args.order, slo=slo, eos=args.eos)
+                       order=args.order, slo=slo, eos=args.eos, obs=obs)
     print(f"serving {len(requests)} {args.workload} requests "
           f"(rate {args.rate}/s x {args.duration}s) on a "
           f"{'->'.join(arch_names)} cascade "
@@ -263,27 +274,16 @@ def _serve_cascade(args) -> None:
           f"escalate-policy {args.escalate_policy} "
           f"(patience {args.escalate_patience}), "
           f"SLO ttft<={args.slo_ms:.0f}ms ...")
-    metrics = server.serve(requests)
-    s = metrics.summary(slo=slo)
-    _print_latency_summary(args, s)
-    _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
-                          steps=metrics.steps, n_seg=bank.n_total,
-                          lane_steps=metrics.lane_steps)
+    with profiler_capture(args.profile_dir):
+        metrics = server.serve(requests)
     cs = stepper.cascade_stats()
-    total = max(sum(cs["tokens_served"]), 1)
-    print("cascade: " + ", ".join(
-        f"{m} served {n} tokens ({100 * n / total:.0f}%)"
-        for m, n in zip(cs["models"], cs["tokens_served"])))
-    print(f"escalations {cs['escalations']}, recalls {cs['recalls']}, "
-          f"de-escalations {cs['deescalations']}, commits "
-          f"{cs['commits']}, re-pinned catch-up tokens "
-          f"{cs['repin_tokens']}")
-    for mname in cs["models"]:
-        ps = cs["pools"][mname]
-        print(f"kv pool [{mname}]: peak {ps['pages_peak']}/"
-              f"{ps['n_pages'] - 1} pages, prefix hit rate "
-              f"{100 * ps['prefix_hit_rate']:.0f}%, "
-              f"{ps['cow_splits']} COW splits, {ps['grows']} grows")
+    report = ServeReport()
+    report.add_runtime(metrics.summary(slo=slo), slo_ms=args.slo_ms)
+    report.add_segments(metrics.seg_batch, metrics.seg_policy,
+                        steps=metrics.steps, n_seg=bank.n_total,
+                        lane_steps=metrics.lane_steps)
+    report.add_cascade(cs)
+    _finish_obs(args, obs, report)
     if args.json:
         extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
                  "cascade": args.cascade,
@@ -342,15 +342,6 @@ def _build_adaptive(args, cfg, params, *, mean_tokens, slo):
     return gear_bank, controller
 
 
-def _print_adaptive_summary(controller) -> None:
-    st = controller.stats()
-    print(f"adaptive: final gear {st['gear']}, "
-          f"{st['gear_switches']} gear switches, "
-          f"{st['recalibrations']} online recalibrations")
-    for sw in st["switches"]:
-        print(f"  t={sw['t']:6.2f}s  {sw['from']} -> {sw['to']}")
-
-
 def _serve_traffic(args, cfg, params, casc) -> None:
     """--server: continuous batching over an open-loop workload."""
     from repro.serving import runtime as rt
@@ -396,9 +387,10 @@ def _serve_traffic(args, cfg, params, casc) -> None:
                                prefill_chunk=args.prefill_chunk,
                                prefill_budget=args.prefill_budget)
     slo = args.slo_ms / 1e3
+    obs = _build_obs(args)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos,
-                       controller=controller)
+                       controller=controller, obs=obs)
     kv_desc = args.kv if args.kv == "ring" else (
         f"paged ({stepper.pool.n_pages} pages x {args.page_size} tokens)")
     if args.prefill_chunk:
@@ -410,30 +402,22 @@ def _serve_traffic(args, cfg, params, casc) -> None:
           f"(rate {args.rate}/s x {args.duration}s) on {args.lanes} lanes, "
           f"{policy_desc}, kv {kv_desc}, "
           f"SLO ttft<={args.slo_ms:.0f}ms ...")
-    metrics = server.serve(requests)
-    s = metrics.summary(slo=slo)
-    _print_latency_summary(args, s)
+    with profiler_capture(args.profile_dir):
+        metrics = server.serve(requests)
+    report = ServeReport()
+    report.add_runtime(metrics.summary(slo=slo), slo_ms=args.slo_ms)
     if controller is not None:
-        _print_adaptive_summary(controller)
-    _print_segments_saved(metrics.seg_batch, metrics.seg_policy,
-                          steps=metrics.steps, n_seg=len(cfg.segments),
-                          lane_steps=metrics.lane_steps)
+        report.add_adaptive(controller.stats())
+    report.add_segments(metrics.seg_batch, metrics.seg_policy,
+                        steps=metrics.steps, n_seg=len(cfg.segments),
+                        lane_steps=metrics.lane_steps)
     pool_stats = None
     if stepper.pool is not None:
         pool_stats = stepper.pool.stats()
-        print(f"kv pool: peak {pool_stats['pages_peak']}/"
-              f"{pool_stats['n_pages'] - 1} pages, "
-              f"prefix hit rate {100 * pool_stats['prefix_hit_rate']:.0f}% "
-              f"({pool_stats['shared_tokens']} shared tokens), "
-              f"{pool_stats['cow_splits']} COW splits, "
-              f"{pool_stats['evictions']} evictions")
+        report.add_pool(pool_stats)
     if args.prefill_chunk:
-        cs = stepper.chunk_stats
-        total = cs["tokens_computed"] + cs["tokens_skipped"]
-        print(f"chunked prefill: {cs['tokens_computed']} prompt tokens "
-              f"computed over {cs['chunk_steps']} co-scheduled chunk "
-              f"steps, {cs['tokens_skipped']}/{max(total, 1)} skipped "
-              f"via prefix cache ({cs['prefills']} admissions)")
+        report.add_chunked_prefill(stepper.chunk_stats)
+    _finish_obs(args, obs, report)
     if args.json:
         extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
                  "kv": args.kv, "prefill_chunk": args.prefill_chunk}
@@ -544,6 +528,24 @@ def main() -> None:
                          "gear switching without recalibration)")
     ap.add_argument("--json", default=None,
                     help="write runtime metrics JSON here")
+    # observability plane (repro.serving.obs, DESIGN.md §12)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace-event JSON of "
+                         "the serve here (open in ui.perfetto.dev; "
+                         "--server modes only)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot JSON "
+                         "here (every number the console report "
+                         "shows, as labelled series)")
+    ap.add_argument("--flight-recorder", default=None, metavar="DIR",
+                    help="arm the anomaly flight recorder: post-mortem "
+                         "bundles (triggering request's span history + "
+                         "last events + metrics) land in DIR on TTFT-"
+                         "SLO breach bursts, page exhaustion, stuck "
+                         "escalation waiters, or gear thrash")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax.profiler logdir captured around the "
+                         "serve loop (kernel-level attribution)")
     args = ap.parse_args()
     if args.lanes is None:
         args.lanes = args.batch
@@ -592,6 +594,10 @@ def main() -> None:
         if args.kv != "ring":
             print("note: --kv paged applies to --server traffic mode; "
                   "the one-shot batch path always uses ring caches")
+        if args.trace_out or args.metrics_out or args.flight_recorder:
+            print("note: --trace-out/--metrics-out/--flight-recorder "
+                  "observe --server traffic sessions; the one-shot "
+                  "batch path has no request lifecycle to trace")
         _serve_batch(args, cfg, params, strat)
 
 

@@ -121,6 +121,12 @@ class CascadeSimStepper:
 
     virtual_time = True
     emits_tokens = False
+    # observability plane (DESIGN.md §12): the server installs the
+    # tracer; `last_loss`/`last_escalated` feed its token events with
+    # the served-node loss and the escalated flag for attribution
+    tracer = None
+    last_loss = None
+    last_escalated = None
 
     def __init__(self, bank: ModelBank, strategies: tuple, trace_bank, *,
                  overhead: float = 0.25, policy: str = "recall",
@@ -254,10 +260,17 @@ class CascadeSimStepper:
         probes_paid = np.zeros(m_count, np.int64)
         chunk_cost = np.zeros(m_count, np.float64)
         seg_batch = 0
+        otr = self.tracer
+        if otr is not None:
+            self.last_loss = np.full(self.n_lanes, np.nan)
+            self.last_escalated = np.zeros(self.n_lanes, bool)
 
         # 0. lanes freed since last step go to FIFO waiters
         for slot, m, _lane in self.esc.grants():
             self._start_catchup(slot, m)
+            if otr is not None:
+                otr.emit("esc_grant", rid=self.lane_req[slot].rid,
+                         lane=slot, model=m)
 
         # 1. initial model-0 admission prefill (chunked, budgeted)
         prefilling = occupied & (self.prefill0 > 0)
@@ -270,6 +283,11 @@ class CascadeSimStepper:
             for slot, w in widths.items():
                 self.prefill0[slot] -= w
                 chunk_cost[0] += w * self.bank[0].prefill_tok_time
+                if otr is not None:
+                    otr.emit("prefill_chunk",
+                            rid=self.lane_req[slot].rid, lane=slot,
+                            model=0, width=int(w),
+                            left=int(self.prefill0[slot]))
 
         # 2. escalation catch-up chunks, per target model, budgeted
         for m in range(1, m_count):
@@ -280,6 +298,11 @@ class CascadeSimStepper:
                 self.catchup[slot][m] -= w
                 chunk_cost[m] += w * self.bank[m].prefill_tok_time
                 self.stats.catchup_tokens[m] += w
+                if otr is not None:
+                    otr.emit("prefill_chunk",
+                            rid=self.lane_req[slot].rid, lane=slot,
+                            model=m, width=int(w),
+                            left=int(self.catchup[slot][m]))
 
         # 3. escalations whose every target is granted + caught up:
         #    the pending token resolves and emits NOW, paying the
@@ -308,14 +331,26 @@ class CascadeSimStepper:
             served_out[slot] = served
             emit[slot] = True
             resolved.add(slot)
-            self.stats.on_served(self.bank.model_of(served),
-                                 max(handoff["probed_models"]),
-                                 loss=handoff["loss"])
+            sm = self.bank.model_of(served)
+            deepest = max(handoff["probed_models"])
+            self.stats.on_served(sm, deepest, loss=handoff["loss"])
+            if otr is not None:
+                rid = self.lane_req[slot].rid
+                for m in targets:
+                    otr.emit("esc_resolve", rid=rid, lane=slot, model=m)
+                if deepest > sm:
+                    otr.emit("recall", rid=rid, lane=slot, model=sm,
+                             node=served, deepest=deepest)
+                self.last_loss[slot] = handoff["loss"]
+                self.last_escalated[slot] = True
             for m in self.router.note_emit(slot,
                                            handoff["probed_models"],
                                            served, lp):
                 self.esc.release(slot, m)
                 self.stats.deescalations += 1
+                if otr is not None:
+                    otr.emit("deescalate", rid=self.lane_req[slot].rid,
+                             lane=slot, model=m)
             for m in targets:
                 self.catchup.get(slot, {}).pop(m, None)
                 self.catchup_total.get(slot, {}).pop(m, None)
@@ -362,18 +397,41 @@ class CascadeSimStepper:
                     })
                     self.stats.escalations += len(targets)
                     for m in targets:
+                        if otr is not None:
+                            otr.emit("escalate",
+                                    rid=self.lane_req[slot].rid,
+                                    lane=slot, model=m)
                         if self.esc.request(slot, m) is not None:
                             self._start_catchup(slot, m)
+                            if otr is not None:
+                                otr.emit("esc_grant",
+                                        rid=self.lane_req[slot].rid,
+                                        lane=slot, model=m)
+                        elif otr is not None:
+                            otr.emit("esc_wait",
+                                    rid=self.lane_req[slot].rid,
+                                    lane=slot, model=m)
                 else:
-                    served_out[slot] = int(served[slot])
-                    self.stats.on_served(
-                        self.bank.model_of(int(served[slot])),
-                        max(probed) if probed else 0,
-                        loss=float(losses[slot, int(served[slot])]))
-                    for m in self.router.note_emit(slot, probed,
-                                                   int(served[slot]), lp):
+                    sv = int(served[slot])
+                    served_out[slot] = sv
+                    sm = self.bank.model_of(sv)
+                    deepest = max(probed) if probed else 0
+                    self.stats.on_served(sm, deepest,
+                                         loss=float(losses[slot, sv]))
+                    if otr is not None:
+                        self.last_loss[slot] = float(losses[slot, sv])
+                        if deepest > sm:
+                            otr.emit("recall",
+                                    rid=self.lane_req[slot].rid,
+                                    lane=slot, model=sm, node=sv,
+                                    deepest=deepest)
+                    for m in self.router.note_emit(slot, probed, sv, lp):
                         self.esc.release(slot, m)
                         self.stats.deescalations += 1
+                        if otr is not None:
+                            otr.emit("deescalate",
+                                    rid=self.lane_req[slot].rid,
+                                    lane=slot, model=m)
 
         # 5. the virtual clock: serial across models, piggyback
         #    roofline within each (catch-up hides under decode)

@@ -38,6 +38,11 @@ __all__ = ["AdaptiveController"]
 class AdaptiveController:
     """Telemetry -> gear selection -> swap/publish, between steps."""
 
+    # observability plane (DESIGN.md §12): the server installs the
+    # tracer; gear switches and recalibrations land as events so the
+    # flight recorder can catch gear thrash
+    tracer = None
+
     def __init__(self, bank: GearBank, *, span: float,
                  slo: float | None = None, hold: int = 3,
                  lead: float = 0.0,
@@ -117,7 +122,10 @@ class AdaptiveController:
             if esc is not None else 0)
         self._select_gear(now)
         if self.recal is not None and self.recal.due(now):
+            n_rows = self.recal.n_rows
             self.recal.recalibrate(now)
+            if self.tracer is not None:
+                self.tracer.emit("recal", t=now, n_rows=n_rows)
 
     # ---- gear selection ----------------------------------------------
 
@@ -134,8 +142,14 @@ class AdaptiveController:
         else:
             self._want, self._streak = want, 1
         if self._streak >= self.hold:
+            prev = self.swap.gear
             self.swap.swap_to(want, now)
             self._apply(self.bank[want])
+            if self.tracer is not None:
+                self.tracer.emit(
+                    "gear_switch", t=now, src=int(prev), dst=int(want),
+                    src_name=self.bank[prev].name,
+                    dst_name=self.bank[want].name)
             self._want, self._streak = None, 0
 
     def _apply(self, gear) -> None:

@@ -115,6 +115,9 @@ class KVPool:
         self.cow_splits = 0
         self.peak_pages = 0
         self.grows = 0
+        # admissions refused for lack of headroom — the page-exhaustion
+        # signal the observability flight recorder triggers on
+        self.reserve_failures = 0
 
     # ------------------------------------------------------------------
     # admission
@@ -171,6 +174,7 @@ class KVPool:
         if need > self._headroom():
             self._pinned.subtract(match)
             self._pinned = +self._pinned        # drop zero counts
+            self.reserve_failures += 1
             return False
         self._pending.append((need, tuple(match)))
         return True
@@ -383,6 +387,10 @@ class KVPool:
 
     # ------------------------------------------------------------------
 
+    @property
+    def pages_in_use(self) -> int:
+        return int(self.allocator.pages_in_use)
+
     def stats(self) -> dict:
         pf = self.prefix
         return {
@@ -400,4 +408,5 @@ class KVPool:
             "cow_splits": self.cow_splits,
             "evictions": pf.evictions,
             "grows": self.grows,
+            "reserve_failures": self.reserve_failures,
         }

@@ -1,0 +1,51 @@
+"""Unified serving observability plane (DESIGN.md §12).
+
+One package threads through every serving subsystem:
+
+  * `trace`    — `SpanTracer`: bounded host-side ring of lifecycle
+    events (queued → admitted → prefill chunks → per-token decode →
+    escalate/recall/de-escalate → finish), fed only from data the
+    steppers already sync once per token.  Zero overhead when absent:
+    every producer guards with ``if tracer is not None``.
+  * `registry` — `MetricsRegistry`: counters/gauges/histograms with
+    labels, absorbing the per-subsystem stats dicts behind one
+    ``snapshot()`` / Prometheus-text / JSON surface.
+  * `export`   — Chrome/Perfetto trace-event JSON (one track per
+    lane, one per model rung, decision instants) + optional
+    ``jax.profiler`` capture hooks.
+  * `flight`   — `FlightRecorder`: last-N-events post-mortem bundles
+    on anomaly triggers (TTFT-SLO breach burst, page exhaustion,
+    stuck escalation waiter, gear thrash).
+  * `report`   — the one serve report renderer (replaces the bespoke
+    print blocks `launch/serve.py` used to duplicate).
+
+`Observability` is the small bundle the `Server` accepts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.serving.obs.flight import FlightRecorder
+from repro.serving.obs.registry import MetricsRegistry
+from repro.serving.obs.trace import SpanTracer, decision_attribution
+
+__all__ = [
+    "FlightRecorder",
+    "MetricsRegistry",
+    "Observability",
+    "SpanTracer",
+    "decision_attribution",
+]
+
+
+@dataclass
+class Observability:
+    """What a `Server` threads through a serve: a tracer (always, when
+    observability is on), an optional flight recorder riding the same
+    event stream, and an optional ``jax.profiler`` logdir for
+    kernel-level capture around token steps."""
+
+    tracer: SpanTracer = field(default_factory=SpanTracer)
+    flight: FlightRecorder | None = None
+    profile_dir: str | None = None

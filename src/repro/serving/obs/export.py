@@ -1,0 +1,144 @@
+"""Trace export: `SpanTracer` events → Chrome/Perfetto trace-event
+JSON, plus optional ``jax.profiler`` capture around token steps.
+
+Layout in the Perfetto UI:
+
+  * pid 0 "lanes"   — one thread per lane; each request renders as a
+    complete ("X") span from admission to finish, with per-token
+    decisions ("token", "prefill_chunk") as thread-scoped instants.
+  * pid 1 "models"  — one thread per model rung; escalate / esc_wait /
+    esc_grant / esc_resolve / recall / deescalate land here as
+    instants so ladder traffic reads at a glance.
+  * pid 2 "control" — gear_switch / recal / page_blocked instants and
+    "C" counter tracks (queue depth, pages in use) sampled at step
+    edges.
+
+Timestamps are the serve clock (virtual seconds in sim mode) scaled
+to microseconds — Chrome's native unit — so a sim trace is exactly
+deterministic and CI can pin its digest.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+from typing import Any, Iterable
+
+from repro.serving.obs.trace import Event
+
+__all__ = ["to_perfetto", "write_trace", "profiler_capture"]
+
+_LANE_KINDS = {"token", "prefill_chunk", "admitted", "finish"}
+_MODEL_KINDS = {"escalate", "esc_wait", "esc_grant", "esc_resolve",
+                "recall", "deescalate"}
+
+
+def _us(t: float) -> float:
+    return round(t * 1e6, 3)
+
+
+def to_perfetto(events: Iterable[Event], *,
+                title: str = "t-tamer serve") -> dict[str, Any]:
+    """Build a Chrome trace-event document from tracer events."""
+    ev_list = list(events)
+    out: list[dict[str, Any]] = []
+    lanes: set[int] = set()
+    models: set[int] = set()
+    # Request spans: admitted -> finish per rid (X events need a dur).
+    admit_at: dict[int, tuple[float, int]] = {}
+    last_t = 0.0
+    for ev in ev_list:
+        last_t = max(last_t, ev.t)
+        if ev.kind == "admitted" and ev.lane >= 0:
+            admit_at[ev.rid] = (ev.t, ev.lane)
+        if ev.lane >= 0:
+            lanes.add(ev.lane)
+        if ev.model >= 0:
+            models.add(ev.model)
+
+    for ev in ev_list:
+        d = dict(ev.data)
+        args: dict[str, Any] = {k: v for k, v in d.items()
+                                if isinstance(v, (int, float, str, bool))}
+        if ev.rid >= 0:
+            args["rid"] = ev.rid
+        if ev.kind == "finish":
+            start = admit_at.pop(ev.rid, None)
+            if start is not None:
+                t0, lane = start
+                out.append({"ph": "X", "name": f"req {ev.rid}",
+                            "cat": "request", "pid": 0, "tid": lane,
+                            "ts": _us(t0), "dur": _us(ev.t - t0),
+                            "args": args})
+            continue
+        if ev.kind == "counter":
+            for k, v in d.items():
+                if isinstance(v, (int, float)):
+                    out.append({"ph": "C", "name": k, "pid": 2, "tid": 0,
+                                "ts": _us(ev.t), "args": {"value": v}})
+            continue
+        if ev.kind in _MODEL_KINDS:
+            pid, tid = 1, max(ev.model, 0)
+        elif ev.kind in _LANE_KINDS and ev.lane >= 0:
+            pid, tid = 0, ev.lane
+        else:                      # queued / page_blocked / control plane
+            pid, tid = 2, 0
+        out.append({"ph": "i", "s": "t", "name": ev.kind, "cat": "decision",
+                    "pid": pid, "tid": tid, "ts": _us(ev.t), "args": args})
+
+    # Unfinished requests still render as spans up to the last event.
+    for rid, (t0, lane) in sorted(admit_at.items()):
+        out.append({"ph": "X", "name": f"req {rid} (open)",
+                    "cat": "request", "pid": 0, "tid": lane,
+                    "ts": _us(t0), "dur": _us(max(0.0, last_t - t0)),
+                    "args": {"rid": rid, "open": True}})
+
+    meta: list[dict[str, Any]] = []
+    for pid, pname in ((0, "lanes"), (1, "models"), (2, "control")):
+        meta.append({"ph": "M", "name": "process_name", "pid": pid,
+                     "tid": 0, "args": {"name": pname}})
+    for lane in sorted(lanes):
+        meta.append({"ph": "M", "name": "thread_name", "pid": 0,
+                     "tid": lane, "args": {"name": f"lane {lane}"}})
+    for m in sorted(models):
+        meta.append({"ph": "M", "name": "thread_name", "pid": 1,
+                     "tid": m, "args": {"name": f"model {m}"}})
+    meta.append({"ph": "M", "name": "thread_name", "pid": 2, "tid": 0,
+                 "args": {"name": "control plane"}})
+
+    return {"traceEvents": meta + out,
+            "displayTimeUnit": "ms",
+            "otherData": {"title": title, "clock": "serve-seconds"}}
+
+
+def write_trace(tracer, path: str, *, title: str = "t-tamer serve",
+                ) -> dict[str, Any]:
+    doc = to_perfetto(tracer.events, title=title)
+    doc["otherData"]["events_dropped"] = tracer.dropped
+    with open(path, "w") as f:
+        json.dump(doc, f, default=float)
+    return doc
+
+
+@contextlib.contextmanager
+def profiler_capture(logdir: str | None):
+    """Optional ``jax.profiler`` capture around the serve loop for
+    kernel-level attribution against `bench_roofline.py`.  A no-op
+    when ``logdir`` is falsy, and degrades to a no-op if the profiler
+    backend is unavailable in this build."""
+    if not logdir:
+        yield
+        return
+    import jax
+    try:
+        jax.profiler.start_trace(logdir)
+    except Exception:                     # pragma: no cover - env specific
+        yield
+        return
+    try:
+        yield
+    finally:
+        try:
+            jax.profiler.stop_trace()
+        except Exception:                 # pragma: no cover - env specific
+            pass

@@ -1,0 +1,171 @@
+"""`FlightRecorder` — anomaly-triggered post-mortem bundles
+(DESIGN.md §12).
+
+The recorder rides the tracer's event stream as its listener: it
+never adds producers of its own, it just watches the same lifecycle
+events and keeps trigger state.  When any trigger fires it freezes a
+bundle — the last N ring events, the triggering request's FULL span
+history, and a metrics snapshot — so the anomaly arrives with its
+causes attached instead of a lone log line.
+
+Triggers (all thresholds constructor-tunable):
+
+  * ``slo_burst``     — ``slo_burst`` consecutive first tokens over
+    the TTFT SLO.  One late request is load; a burst is a stall.
+  * ``page_exhaustion`` — ``page_burst`` consecutive admission
+    attempts refused for lack of KV pages.  Queueing under pressure
+    is by design; a refusal *streak* means the pool stopped turning
+    over.
+  * ``stuck_waiter``  — an escalation waiter older than
+    ``stuck_after`` serve-seconds with no grant.  Deep-lane grants
+    normally arrive within a few steps; an old waiter is a leaked
+    lane or a wedged scheduler.
+  * ``gear_thrash``   — ``thrash_count`` gear switches inside
+    ``thrash_window`` serve-seconds.  Hysteresis should make switches
+    rare; thrash means the controller is chasing noise.
+
+Each trigger kind fires at most ``max_bundles_per_kind`` times per
+serve (anomalies tend to repeat every step once entered — one bundle
+per failure mode is the useful artifact, a dump storm is not).
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import os
+from typing import Any, Callable
+
+from repro.serving.obs.trace import Event, SpanTracer
+
+__all__ = ["FlightRecorder"]
+
+
+class FlightRecorder:
+    def __init__(self, *, window: int = 2048, slo: float | None = None,
+                 slo_burst: int = 5, page_burst: int = 3,
+                 stuck_after: float = 30.0, thrash_count: int = 6,
+                 thrash_window: float = 60.0, out_dir: str | None = None,
+                 max_bundles_per_kind: int = 1):
+        self.window = int(window)
+        self.slo = slo
+        self.slo_burst = int(slo_burst)
+        self.page_burst = int(page_burst)
+        self.stuck_after = float(stuck_after)
+        self.thrash_count = int(thrash_count)
+        self.thrash_window = float(thrash_window)
+        self.out_dir = out_dir
+        self.max_bundles_per_kind = int(max_bundles_per_kind)
+
+        self.bundles: list[dict[str, Any]] = []
+        self.dump_paths: list[str] = []
+        self._tracer: SpanTracer | None = None
+        self._snapshot_fn: Callable[[], dict[str, Any]] | None = None
+        self._fired: collections.Counter = collections.Counter()
+
+        self._slo_streak = 0
+        self._page_streak = 0
+        self._waiters: dict[tuple[int, int], float] = {}   # (rid, model) -> t
+        self._switch_ts: collections.deque[float] = collections.deque()
+
+    # ---------------------------------------------------------- wiring
+    def bind(self, tracer: SpanTracer,
+             snapshot_fn: Callable[[], dict[str, Any]] | None = None,
+             ) -> None:
+        """Attach to a tracer as its listener.  ``snapshot_fn`` is
+        called lazily at dump time for the metrics section."""
+        self._tracer = tracer
+        self._snapshot_fn = snapshot_fn
+        tracer.listener = self.observe
+
+    # ---------------------------------------------------------- stream
+    def observe(self, ev: Event) -> None:
+        kind = ev.kind
+        if kind == "token":
+            ttft = dict(ev.data).get("ttft")
+            if ttft is not None and self.slo is not None:
+                if float(ttft) > self.slo:
+                    self._slo_streak += 1
+                    if self._slo_streak >= self.slo_burst:
+                        self.trigger("slo_burst", ev.t, rid=ev.rid,
+                                     detail={"streak": self._slo_streak,
+                                             "ttft": float(ttft),
+                                             "slo": self.slo})
+                else:
+                    self._slo_streak = 0
+        elif kind == "page_blocked":
+            self._page_streak += 1
+            if self._page_streak >= self.page_burst:
+                self.trigger("page_exhaustion", ev.t, rid=ev.rid,
+                             detail={"streak": self._page_streak})
+        elif kind == "admitted":
+            self._page_streak = 0
+        elif kind == "esc_wait":
+            self._waiters[(ev.rid, ev.model)] = ev.t
+        elif kind in ("esc_grant", "esc_resolve", "finish", "deescalate"):
+            if kind == "finish":
+                stale = [k for k in self._waiters if k[0] == ev.rid]
+            else:
+                stale = [(ev.rid, ev.model)]
+            for k in stale:
+                self._waiters.pop(k, None)
+        elif kind == "gear_switch":
+            self._switch_ts.append(ev.t)
+            while (self._switch_ts and
+                   ev.t - self._switch_ts[0] > self.thrash_window):
+                self._switch_ts.popleft()
+            if len(self._switch_ts) >= self.thrash_count:
+                self.trigger("gear_thrash", ev.t,
+                             detail={"switches": len(self._switch_ts),
+                                     "window_s": self.thrash_window})
+        # Stuck-waiter check piggybacks on every event's timestamp —
+        # no timer thread, and in sim mode "age" is virtual age.
+        if self._waiters:
+            oldest = min(self._waiters.items(), key=lambda kv: kv[1])
+            (rid, model), t0 = oldest
+            if ev.t - t0 > self.stuck_after:
+                self._waiters.pop((rid, model), None)
+                self.trigger("stuck_waiter", ev.t, rid=rid,
+                             detail={"model": model, "waited_s": ev.t - t0})
+
+    # ---------------------------------------------------------- dump
+    def trigger(self, kind: str, t: float, *, rid: int | None = None,
+                detail: dict[str, Any] | None = None) -> dict | None:
+        if self._fired[kind] >= self.max_bundles_per_kind:
+            return None
+        self._fired[kind] += 1
+        tracer = self._tracer
+        events = list(tracer.events)[-self.window:] if tracer else []
+        bundle: dict[str, Any] = {
+            "schema": "flight_bundle/v1",
+            "trigger": kind,
+            "t": float(t),
+            "rid": rid,
+            "detail": detail or {},
+            "events": [ev.as_dict() for ev in events],
+            "request_span": ([ev.as_dict()
+                              for ev in tracer.request_span(rid)]
+                             if tracer and rid is not None else []),
+            "span_events_dropped": (tracer.span_dropped(rid)
+                                    if tracer and rid is not None else 0),
+        }
+        if self._snapshot_fn is not None:
+            try:
+                bundle["metrics"] = self._snapshot_fn()
+            except Exception as e:        # snapshot must never kill a serve
+                bundle["metrics"] = {"error": repr(e)}
+        self.bundles.append(bundle)
+        if self.out_dir:
+            os.makedirs(self.out_dir, exist_ok=True)
+            path = os.path.join(
+                self.out_dir, f"flight-{kind}-{self._fired[kind]}.json")
+            with open(path, "w") as f:
+                json.dump(bundle, f, indent=2, default=float)
+            self.dump_paths.append(path)
+        return bundle
+
+    # ---------------------------------------------------------- stats
+    def stats(self) -> dict[str, Any]:
+        return {"bundles": len(self.bundles),
+                "triggers": dict(self._fired),
+                "pending_waiters": len(self._waiters)}

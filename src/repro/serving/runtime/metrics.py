@@ -281,11 +281,24 @@ class RuntimeMetrics:
         }
 
     def to_json(self, path: str, slo: float | None = None,
-                extra: dict | None = None) -> dict:
-        """Write summary + per-request records; returns the payload."""
+                extra: dict | None = None,
+                max_records: int | None = 4096) -> dict:
+        """Write summary + per-request records; returns the payload.
+
+        ``max_records`` bounds the per-request section so hours-long
+        soak runs cannot grow the artifact without bound: the MOST
+        RECENT records (by arrival) are kept and the drop is counted
+        in ``requests_dropped``.  ``max_records=None`` keeps all.
+        """
+        recs = sorted(self.records.values(), key=lambda r: r.arrival)
+        dropped = 0
+        if max_records is not None and len(recs) > max_records:
+            dropped = len(recs) - int(max_records)
+            recs = recs[dropped:]
         payload = {
             "summary": self.summary(slo),
-            "requests": [r.as_dict() for r in self.records.values()],
+            "requests": [r.as_dict() for r in recs],
+            "requests_dropped": dropped,
         }
         if extra:
             payload.update(extra)

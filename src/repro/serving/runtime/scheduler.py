@@ -219,6 +219,9 @@ class EngineStepper:
 
     virtual_time = False
     emits_tokens = True    # `emitted` really is token ids (EOS applies)
+    # observability plane (DESIGN.md §12): installed by the server when
+    # tracing is on; every producer guards on `is not None`
+    tracer = None
 
     def __init__(self, params, cfg, strategies: tuple, *, n_lanes: int,
                  cache_len: int, prompt_len: int, jit: bool = True,
@@ -435,7 +438,8 @@ class EngineStepper:
             self.chunk_stats["prefills"] += 1
             self._prefilling[lane] = {
                 "prompt": np.asarray(req.prompt, np.int32),
-                "plan": plan, "cursor": cursor, "lp": lp}
+                "plan": plan, "cursor": cursor, "lp": lp,
+                "rid": req.rid}
             self.states = tuple(
                 init_lane(s, st, lane)
                 for s, st in zip(self.strategies, self.states))
@@ -540,6 +544,11 @@ class EngineStepper:
                 emit[lane] = True
                 finished.append(lane)
             self.chunk_stats["tokens_computed"] += w
+            if self.tracer is not None:
+                self.tracer.emit(
+                    "prefill_chunk", lane=int(lane),
+                    rid=int(st.get("rid", -1)), width=int(w),
+                    left=int(st["lp"] - st["cursor"]))
         self.chunk_stats["chunk_steps"] += 1
         chunk = PrefillChunk(
             tok=jnp.asarray(tok), pos=jnp.asarray(pos),

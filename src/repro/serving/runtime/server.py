@@ -114,6 +114,11 @@ class SimStepper:
 
     virtual_time = True
     emits_tokens = False   # `emitted` carries served nodes, not token ids
+    # observability plane (DESIGN.md §12): the server installs a
+    # `SpanTracer` here when one is attached; every producer guards on
+    # `is not None`, so an untraced serve pays nothing
+    tracer = None
+    last_loss = None       # per-lane served-node loss of the last step
 
     def __init__(self, strategies: tuple, trace_bank, *, n_lanes: int,
                  seg_time: float = 1.0, overhead: float = 0.25,
@@ -251,6 +256,11 @@ class SimStepper:
                 for lane, w in widths.items():
                     self.lane_prefill[lane] -= w
                     chunk_cost += w * self.prefill_tok_time
+                    if self.tracer is not None:
+                        self.tracer.emit(
+                            "prefill_chunk", lane=lane,
+                            rid=self.lane_req[lane].rid, width=int(w),
+                            left=int(self.lane_prefill[lane]))
         losses = np.zeros((self.n_lanes, self.n_nodes), np.float32)
         for lane in np.flatnonzero(emit):
             losses[lane] = self._row(self.lane_req[lane],
@@ -262,6 +272,14 @@ class SimStepper:
         for lane in np.flatnonzero(emit):
             self.served_loss_sum += float(losses[lane, served[lane]])
             self.served_loss_n += 1
+        if self.tracer is not None:
+            # per-lane served-node loss, picked up by the server's token
+            # events for decision attribution (NaN = no emission)
+            served_np = np.asarray(served)
+            self.last_loss = np.where(
+                emit, losses[np.arange(self.n_lanes),
+                             np.clip(served_np, 0, self.n_nodes - 1)],
+                np.nan)
         if self.row_tap is not None and emit.any():
             idx = np.flatnonzero(emit)
             self.row_tap(losses[idx], np.asarray(served)[idx])
@@ -287,7 +305,7 @@ class Server:
     def __init__(self, stepper, scheduler: LaneScheduler, sid_of, *,
                  order: str = "fifo", slo: float | None = None,
                  static_batching: bool = False, eos: int | None = None,
-                 controller=None):
+                 controller=None, obs=None):
         self.stepper = stepper
         self.scheduler = scheduler
         self.sid_of = sid_of
@@ -295,6 +313,12 @@ class Server:
         self.slo = slo
         self.static_batching = static_batching
         self.eos = eos
+        # observability plane (DESIGN.md §12): an `Observability` bundle
+        # — tracer + optional flight recorder.  The server binds its own
+        # clock to the tracer (virtual in sim mode, so traces are
+        # exactly deterministic) and installs it on the stepper and
+        # controller; None means zero overhead everywhere.
+        self.obs = obs
         # adaptive control plane (DESIGN.md §11): begin() binds it to
         # the metrics + stepper, on_arrivals feeds the load signal,
         # on_step_end is the step-boundary decision point — the ONLY
@@ -336,6 +360,18 @@ class Server:
         metrics = RuntimeMetrics(stepper.full_depth, sched.n_lanes)
         if self.controller is not None:
             self.controller.begin(metrics, stepper)
+        tracer = self.obs.tracer if self.obs is not None else None
+        if tracer is not None:
+            tracer.bind_clock(self._now)
+            stepper.tracer = tracer
+            if self.controller is not None:
+                self.controller.tracer = tracer
+            flight = self.obs.flight
+            if flight is not None:
+                if flight.slo is None:
+                    flight.slo = self.slo
+                flight.bind(tracer,
+                            snapshot_fn=lambda: metrics.summary(self.slo))
         deadline_of = None
         if self.order == "edf" and self.slo is not None:
             deadline_of = lambda r: r.arrival + self.slo  # noqa: E731
@@ -349,6 +385,12 @@ class Server:
         # (reserve-at-pop); a blocked request waits at the queue head
         gate = getattr(stepper, "reserve", None)
         release = getattr(stepper, "release", None)
+        if gate is not None and tracer is not None:
+            def gate(req, _inner=gate):
+                ok = _inner(req)
+                if not ok:
+                    tracer.emit("page_blocked", rid=req.rid)
+                return ok
 
         while pending or len(queue) or sched.busy():
             now = self._now()
@@ -357,6 +399,8 @@ class Server:
                 req = pending.pop(0)
                 queue.push(req)
                 pushed.append(req.arrival)
+                if tracer is not None:
+                    tracer.emit("queued", t=req.arrival, rid=req.rid)
             if self.controller is not None and pushed:
                 self.controller.on_arrivals(pushed)
             for lane, req in sched.admit(
@@ -365,6 +409,9 @@ class Server:
                     can_admit=gate):
                 stepper.admit(lane, req)
                 metrics.on_admit(req, self._now())
+                if tracer is not None:
+                    tracer.emit("admitted", rid=req.rid, lane=lane,
+                                sid=int(sched.sid[lane]))
             if not sched.busy():
                 if not pending:
                     # nothing running, nothing arriving — but the queue
@@ -397,6 +444,22 @@ class Server:
                 req = sched.lane_req[lane]
                 metrics.on_token(req.rid, int(served[lane]), tnow,
                                  token=int(emitted[lane]))
+                if tracer is not None:
+                    extra = {}
+                    rec = metrics.records[req.rid]
+                    if rec.n_tokens == 1 and rec.ttft is not None:
+                        extra["ttft"] = round(rec.ttft, 9)
+                    ll = getattr(stepper, "last_loss", None)
+                    if ll is not None and not np.isnan(ll[lane]):
+                        extra["loss"] = round(float(ll[lane]), 6)
+                    le = getattr(stepper, "last_escalated", None)
+                    if le is not None and le[lane]:
+                        extra["esc"] = True
+                    if getattr(stepper, "emits_tokens", True):
+                        extra["tok"] = int(emitted[lane])
+                    tracer.emit("token", rid=req.rid, lane=int(lane),
+                                node=int(served[lane]),
+                                sid=int(sched.sid[lane]), **extra)
                 done = sched.consume_token(lane)
                 if (not done and self.eos is not None
                         and getattr(stepper, "emits_tokens", True)
@@ -407,6 +470,14 @@ class Server:
                     if release is not None:
                         release(lane)   # paged KV: pages back to the pool
                     sched.release(lane)
+                    if tracer is not None:
+                        tracer.emit("finish", rid=req.rid, lane=int(lane))
+            if tracer is not None:
+                data = {"queue": len(queue)}
+                pool = getattr(stepper, "pool", None)
+                if pool is not None:
+                    data["pages_in_use"] = int(pool.pages_in_use)
+                tracer.emit("counter", **data)
             if self.controller is not None:
                 # step boundary: the device program for this step has
                 # fully retired, no lane is mid-token — the one atomic
