@@ -1,7 +1,7 @@
-"""CI validator for observability artifacts (DESIGN.md §12).
+"""CI validator for observability artifacts (DESIGN.md §12/§13).
 
 Hand-rolled structural checks — the repo deliberately carries no
-jsonschema dependency — over the two documents a traced serve writes:
+jsonschema dependency — over every document a traced serve writes:
 
   * the Chrome/Perfetto trace-event JSON from ``--trace-out`` /
     `repro.serving.obs.export.write_trace`: every event must be a
@@ -12,17 +12,28 @@ jsonschema dependency — over the two documents a traced serve writes:
   * the metrics snapshot from ``--metrics-out`` /
     `MetricsRegistry.to_json` (schema ``obs_metrics/v1``): a flat
     ``name{labels}`` -> value mapping with JSON-scalar (or histogram
-    dict) values.
+    dict) values;
+  * flight-recorder / ledger-freeze dumps (schema ``flight_bundle/v1``
+    from `FlightRecorder` or `InvariantLedger._freeze`): trigger +
+    event window + triggering request's span history;
+  * the lossless event log from ``--obs-dir`` /
+    `repro.serving.obs.export.write_events` (schema ``obs_trace/v1``):
+    the replayable raw ring with embedded digests;
+  * the audit verdicts (schema ``ledger_report/v1`` from
+    `InvariantLedger.report`): per-contract checks/violations with
+    internally-consistent totals.
 
 Usage (exit 1 on any violation, so the CI step fails loudly):
 
   python -m benchmarks.check_trace --trace serve-trace.json \
-      --metrics serve-metrics.json
+      --metrics serve-metrics.json --bundle 'obs/flight-*.json' \
+      --events obs/events.json --ledger obs/ledger.json
 """
 
 from __future__ import annotations
 
 import argparse
+import glob as _glob
 import json
 import sys
 
@@ -135,30 +146,180 @@ def validate_metrics(doc: dict) -> list[str]:
     return errors
 
 
+def _check_event_dicts(errors: list[str], where: str, events, *,
+                       monotonic: bool = False) -> None:
+    """Shared shape check for `Event.as_dict` lists (bundles + event
+    logs): numeric non-negative t, non-empty kind.  ``monotonic``
+    additionally requires non-decreasing t — true only for a single
+    request's span (the global ring interleaves ``queued`` events
+    carrying their arrival stamp with later-clock token events)."""
+    if not isinstance(events, list):
+        _err(errors, where, "events is not a list")
+        return
+    last_t = None
+    for i, ev in enumerate(events):
+        ew = f"{where}[{i}]"
+        if not isinstance(ev, dict):
+            _err(errors, ew, "event is not an object")
+            continue
+        t = ev.get("t")
+        if not isinstance(t, (int, float)) or t < 0:
+            _err(errors, ew, f"bad t {t!r}")
+            continue
+        if not isinstance(ev.get("kind"), str) or not ev["kind"]:
+            _err(errors, ew, "missing kind")
+        if monotonic and last_t is not None and t < last_t:
+            _err(errors, ew, f"time went backwards ({t} < {last_t})")
+        last_t = t
+
+
+def validate_bundle(doc: dict) -> list[str]:
+    """Structural checks on a ``flight_bundle/v1`` dump (flight
+    recorder anomaly triggers AND ledger violation freezes)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["bundle: document is not a JSON object"]
+    if doc.get("schema") != "flight_bundle/v1":
+        _err(errors, "bundle", f"schema {doc.get('schema')!r} != "
+             "'flight_bundle/v1'")
+    if not isinstance(doc.get("trigger"), str) or not doc["trigger"]:
+        _err(errors, "bundle", "missing trigger")
+    t = doc.get("t")
+    if not isinstance(t, (int, float)) or t < 0:
+        _err(errors, "bundle", f"bad trigger time {t!r}")
+    rid = doc.get("rid")
+    if rid is not None and not isinstance(rid, int):
+        _err(errors, "bundle", f"bad rid {rid!r}")
+    if not isinstance(doc.get("detail"), dict):
+        _err(errors, "bundle", "detail missing or not an object")
+    _check_event_dicts(errors, "bundle.events", doc.get("events"))
+    _check_event_dicts(errors, "bundle.request_span",
+                       doc.get("request_span", []), monotonic=True)
+    dropped = doc.get("span_events_dropped", 0)
+    if not isinstance(dropped, int) or dropped < 0:
+        _err(errors, "bundle", f"bad span_events_dropped {dropped!r}")
+    # a bundle must carry SOME evidence: the window or the span
+    if not doc.get("events") and not doc.get("request_span"):
+        _err(errors, "bundle", "carries neither events nor request_span")
+    return errors
+
+
+def validate_events(doc: dict) -> list[str]:
+    """Structural checks on an ``obs_trace/v1`` event log (the
+    lossless replay artifact `write_events` emits)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["events: document is not a JSON object"]
+    if doc.get("schema") != "obs_trace/v1":
+        _err(errors, "events", f"schema {doc.get('schema')!r} != "
+             "'obs_trace/v1'")
+    _check_event_dicts(errors, "events", doc.get("events"))
+    dropped = doc.get("events_dropped")
+    if not isinstance(dropped, int) or dropped < 0:
+        _err(errors, "events", f"bad events_dropped {dropped!r}")
+    for key in ("span_digest", "decision_digest"):
+        dig = doc.get(key)
+        if not isinstance(dig, str) or len(dig) != 64:
+            _err(errors, "events", f"{key} is not a sha256 hex digest")
+    return errors
+
+
+def validate_ledger(doc: dict) -> list[str]:
+    """Structural + consistency checks on a ``ledger_report/v1``."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["ledger: document is not a JSON object"]
+    if doc.get("schema") != "ledger_report/v1":
+        _err(errors, "ledger", f"schema {doc.get('schema')!r} != "
+             "'ledger_report/v1'")
+    contracts = doc.get("contracts")
+    if not isinstance(contracts, dict) or not contracts:
+        return errors + ["ledger: contracts mapping missing or empty"]
+    tally = 0
+    for name, c in contracts.items():
+        where = f"ledger.contracts[{name}]"
+        if not isinstance(c, dict):
+            _err(errors, where, "not an object")
+            continue
+        for key in ("checks", "violations"):
+            v = c.get(key)
+            if not isinstance(v, int) or v < 0:
+                _err(errors, where, f"bad {key} {v!r}")
+        if c.get("verdict") not in ("pass", "violated", "unverifiable"):
+            _err(errors, where, f"bad verdict {c.get('verdict')!r}")
+        tally += c.get("violations", 0) \
+            if isinstance(c.get("violations"), int) else 0
+    total = doc.get("total_violations")
+    if not isinstance(total, int) or total < 0:
+        _err(errors, "ledger", f"bad total_violations {total!r}")
+    elif total != tally:
+        _err(errors, "ledger", f"total_violations {total} != "
+             f"per-contract sum {tally}")
+    if not isinstance(doc.get("violations"), list):
+        _err(errors, "ledger", "violations list missing")
+    return errors
+
+
+def _run_one(path: str, validator, describe) -> list[str]:
+    with open(path) as f:
+        doc = json.load(f)
+    errs = validator(doc)
+    print(f"{path}: {describe(doc)}, {len(errs)} violations")
+    return errs
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--trace", default=None,
                     help="Perfetto trace-event JSON to validate")
     ap.add_argument("--metrics", default=None,
                     help="obs_metrics/v1 snapshot JSON to validate")
+    ap.add_argument("--bundle", action="append", default=[],
+                    help="flight_bundle/v1 dump(s) to validate "
+                         "(repeatable; shell-style globs expanded — an "
+                         "empty glob is fine, a named file must exist)")
+    ap.add_argument("--events", default=None,
+                    help="obs_trace/v1 event log to validate")
+    ap.add_argument("--ledger", default=None,
+                    help="ledger_report/v1 audit verdicts to validate")
     args = ap.parse_args()
-    if not (args.trace or args.metrics):
-        ap.error("nothing to check: pass --trace and/or --metrics")
+    if not (args.trace or args.metrics or args.bundle or args.events
+            or args.ledger):
+        ap.error("nothing to check: pass --trace, --metrics, --bundle, "
+                 "--events and/or --ledger")
     failures: list[str] = []
     if args.trace:
-        with open(args.trace) as f:
-            doc = json.load(f)
-        errs = validate_trace(doc)
-        n = len(doc.get("traceEvents", ())) if isinstance(doc, dict) else 0
-        print(f"{args.trace}: {n} trace events, {len(errs)} violations")
-        failures += errs
+        failures += _run_one(
+            args.trace, validate_trace,
+            lambda d: f"{len(d.get('traceEvents', ()))} trace events"
+            if isinstance(d, dict) else "0 trace events")
     if args.metrics:
-        with open(args.metrics) as f:
-            doc = json.load(f)
-        errs = validate_metrics(doc)
-        n = len(doc.get("metrics", ())) if isinstance(doc, dict) else 0
-        print(f"{args.metrics}: {n} series, {len(errs)} violations")
-        failures += errs
+        failures += _run_one(
+            args.metrics, validate_metrics,
+            lambda d: f"{len(d.get('metrics', ()))} series"
+            if isinstance(d, dict) else "0 series")
+    for pattern in args.bundle:
+        paths = sorted(_glob.glob(pattern))
+        if not paths and not _glob.has_magic(pattern):
+            failures.append(f"bundle: {pattern} does not exist")
+            continue
+        for path in paths:
+            failures += _run_one(
+                path, validate_bundle,
+                lambda d: f"trigger {d.get('trigger')!r}, "
+                          f"{len(d.get('events', ()))} events"
+                if isinstance(d, dict) else "not an object")
+    if args.events:
+        failures += _run_one(
+            args.events, validate_events,
+            lambda d: f"{len(d.get('events', ()))} events"
+            if isinstance(d, dict) else "0 events")
+    if args.ledger:
+        failures += _run_one(
+            args.ledger, validate_ledger,
+            lambda d: f"{len(d.get('contracts', ()))} contracts, "
+                      f"{d.get('total_violations')} violations"
+            if isinstance(d, dict) else "not an object")
     for msg in failures:
         print(f"FAIL  {msg}")
     return 1 if failures else 0

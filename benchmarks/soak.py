@@ -1,0 +1,324 @@
+"""Seeded soak / burn-in for the audit & replay plane (DESIGN.md §13).
+
+Serves several simulated hours of adversarial traffic — bursty and
+diurnal arrival processes, page-pressure chaos through deliberately
+shrunken KV pools, and escalation storms on an overthinking cascade —
+entirely on the virtual clock (minutes of wall time), with the full
+observability plane armed:
+
+  * the `InvariantLedger` audits every contract live; ANY violation
+    fails the soak (exit 1) and leaves a ``ledger-*.json`` freeze
+    bundle next to the artifacts,
+  * at exit each leg's exported ``obs_trace/v1`` log is REPLAYED
+    through a fresh stepper and both digests must match — the
+    end-to-end determinism check CI gates on,
+  * every flight/ledger bundle the run emits is validated in-process
+    with the same `benchmarks.check_trace` checkers CI runs,
+  * ``--obs-dir DIR`` writes one artifact directory per leg (events +
+    Perfetto trace + metrics + ledger report + bundles) plus a
+    ``soak_report/v1`` summary.
+
+Legs (each runs hours/3 of virtual time):
+
+  * ``bursty_pagepressure`` — single-model sim serve, bursty arrivals,
+    a real paged `KVPool` shrunk so admission blocks under bursts
+    (allocator/COW/prefix-cache invariants audited every step);
+  * ``diurnal_escalation``  — two-model cascade under a diurnal wave,
+    ``recall`` residency, 30% head-overthink traces: constant
+    escalate/grant/recall/de-escalate churn;
+  * ``bursty_commit``       — the same cascade under ``commit``
+    residency: the walk-floor monotonicity contract is live.
+
+Usage:
+
+  PYTHONPATH=src python -m benchmarks.soak --hours 2 --obs-dir soak-obs
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro import strategy
+from repro.core import traces
+from repro.serving import runtime as rt
+from repro.serving.kvpool import KVPool
+from repro.serving.obs import (FlightRecorder, InvariantLedger,
+                               Observability, SpanTracer)
+from repro.serving.obs.export import events_doc, write_trace
+from repro.serving.obs.lossmap import goodput_lossmap, sim_token_ceiling
+from repro.serving.obs.replay import replay
+from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+from benchmarks.check_trace import (validate_bundle, validate_events,
+                                    validate_ledger)
+
+SLO = 2.0
+N_NODES = 5
+N0, N1 = 2, 3           # cascade rung depths (small, large)
+
+
+def _tracer(duration: float) -> SpanTracer:
+    """A ring generously sized for the leg: replay equality needs a
+    lossless record, so capacity scales with virtual duration (~250
+    events per busy virtual second, with headroom)."""
+    return SpanTracer(capacity=max(200_000, int(600 * duration)))
+
+
+# --------------------------------------------------------------------------
+# leg builders: each returns (requests, serve_fn, ledger_kwargs, ceiling)
+# where serve_fn(requests, obs) runs one fully fresh serve
+# --------------------------------------------------------------------------
+
+def _leg_bursty_pagepressure(duration: float, seed: int):
+    rng = np.random.default_rng(seed)
+    losses, _, flops = traces.ee_like_traces(rng, 6_000, N_NODES)
+    casc = strategy.Cascade.from_traces(losses[:3_000], 0.4 * flops,
+                                        k=12, lam=0.6)
+    bank = losses[3_000:]
+    spec = WorkloadSpec(rate=3.0, duration=duration, prompt_len=4,
+                        max_tokens=(2, 12), seed=seed + 1,
+                        strategy="recall_index")
+    requests = make_workload("bursty", spec)
+
+    def serve(reqs, obs):
+        strategies, sid_of = rt.build_bank(
+            reqs, rt.cascade_factory(casc), ("recall_index", None))
+        # 10 usable pages vs 4-page worst-case requests on 3 lanes:
+        # the third concurrent reservation blocks — sustained,
+        # recoverable page pressure, never PoolExhausted
+        pool = KVPool(n_lanes=3, page_size=4, lane_pages=8, n_pages=11)
+        stepper = rt.SimStepper(strategies, bank, n_lanes=3,
+                                seg_time=0.05, overhead=0.01, pool=pool)
+        server = rt.Server(stepper, rt.LaneScheduler(3), sid_of,
+                           slo=SLO, obs=obs)
+        return server.serve(reqs)
+
+    return requests, serve, {}, sim_token_ceiling(3, 0.05, 0.01)
+
+
+def _cascade_setup(seed: int):
+    from repro.serving.cascade import ModelBank, ModelSpec
+    rng = np.random.default_rng(seed)
+    losses, boundaries = traces.cascade_traces(
+        rng, 6_000, [(2.0, 3.0), (5.0, 8.0, 12.0)], head_overthink=0.3)
+    costs = np.concatenate([np.full(N0, 0.5 / N0), np.full(N1, 2.0 / N1)])
+    casc = strategy.Cascade.from_traces(losses[:3_000], 0.1 * costs,
+                                        k=10, lam=0.9,
+                                        boundaries=boundaries)
+    bank = ModelBank([
+        ModelSpec("small", N0, n_lanes=3, seg_time=0.01,
+                  prefill_tok_time=0.001),
+        ModelSpec("large", N1, n_lanes=2, seg_time=0.04,
+                  prefill_tok_time=0.004),
+    ])
+    return casc, bank, losses[3_000:]
+
+
+def _leg_cascade(duration: float, seed: int, *, workload: str,
+                 policy: str):
+    from repro.serving.cascade import CascadeSimStepper
+    casc, bank, bank_traces = _cascade_setup(seed)
+    if policy == "commit":
+        name = "norecall_threshold"
+
+        def mk(sname, lam):
+            return strategy.make("norecall_threshold", casc,
+                                 threshold=0.2, lam=1.0)
+    else:
+        name = "skip_recall"
+
+        def mk(sname, lam):
+            return strategy.make("skip_recall", casc, mode="cascade")
+
+    spec = WorkloadSpec(rate=1.5, duration=duration, prompt_len=8,
+                        max_tokens=(3, 12), seed=seed + 2, strategy=name)
+    requests = make_workload(workload, spec)
+
+    def serve(reqs, obs):
+        strat_bank, sid_of = rt.build_bank(reqs, mk, (name, None))
+        pool = KVPool(n_lanes=3, page_size=4, lane_pages=8, n_pages=12)
+        stepper = CascadeSimStepper(bank, strat_bank, bank_traces,
+                                    overhead=0.002, policy=policy,
+                                    patience=3, chunk=16, pool=pool)
+        server = rt.Server(stepper, rt.LaneScheduler(3), sid_of,
+                           slo=SLO, obs=obs)
+        return server.serve(reqs)
+
+    ledger_kwargs = {"policy": policy, "boundaries": casc.boundaries}
+    return requests, serve, ledger_kwargs, None
+
+
+LEGS = {
+    "bursty_pagepressure": lambda d, s: _leg_bursty_pagepressure(d, s),
+    "diurnal_escalation": lambda d, s: _leg_cascade(
+        d, s, workload="diurnal", policy="recall"),
+    "bursty_commit": lambda d, s: _leg_cascade(
+        d, s, workload="bursty", policy="commit"),
+}
+
+
+# --------------------------------------------------------------------------
+# the soak driver
+# --------------------------------------------------------------------------
+
+def run_leg(leg: str, duration: float, seed: int,
+            out_dir: str | None) -> dict:
+    requests, serve, ledger_kwargs, ceiling = LEGS[leg](duration, seed)
+    t0 = time.time()
+    ledger = InvariantLedger(out_dir=out_dir, **ledger_kwargs)
+    flight = FlightRecorder(out_dir=out_dir,
+                            rearm_interval=max(60.0, duration / 8))
+    obs = Observability(tracer=_tracer(duration), flight=flight,
+                        ledger=ledger)
+    metrics = serve(requests, obs)
+    wall = time.time() - t0
+    summary = metrics.summary(slo=SLO)
+
+    rep = ledger.report()
+    doc = events_doc(obs.tracer)
+
+    def reserve(reqs):
+        fresh = Observability(tracer=_tracer(duration))
+        serve(reqs, fresh)
+        return fresh
+
+    res = replay(doc, reserve)
+
+    lossmap = goodput_lossmap(obs.tracer.events, slo=SLO,
+                              duration=summary["duration"],
+                              ceiling_tok_s=ceiling) \
+        if not obs.tracer.dropped else None
+
+    bundle_errors: list[str] = []
+    if out_dir is not None:
+        with open(os.path.join(out_dir, "events.json"), "w") as f:
+            json.dump(doc, f, default=float)
+        write_trace(obs.tracer, os.path.join(out_dir, "trace.json"),
+                    title=f"soak:{leg}")
+        with open(os.path.join(out_dir, "ledger.json"), "w") as f:
+            json.dump(rep, f, indent=1, default=float)
+        with open(os.path.join(out_dir, "metrics.json"), "w") as f:
+            json.dump({"schema": "obs_metrics/v1",
+                       "metrics": {f"runtime_{k}": v
+                                   for k, v in summary.items()
+                                   if isinstance(v, (int, float))},
+                       "lossmap": lossmap}, f, indent=1, default=float)
+        bundle_errors += validate_events(doc)
+        bundle_errors += validate_ledger(rep)
+        for path in sorted(glob.glob(os.path.join(out_dir, "flight-*.json"))
+                           + glob.glob(os.path.join(out_dir,
+                                                    "ledger-*.json"))):
+            with open(path) as f:
+                bundle_errors += [f"{path}: {e}"
+                                  for e in validate_bundle(json.load(f))]
+
+    row = {
+        "leg": leg,
+        "duration_s": duration,
+        "wall_s": round(wall, 2),
+        "requests": len(requests),
+        "completed": summary["completed"],
+        "tokens": summary["tokens"],
+        "events": obs.tracer.n_emitted,
+        "events_dropped": obs.tracer.dropped,
+        "ledger_checks": sum(c["checks"]
+                             for c in rep["contracts"].values()),
+        "ledger_violations": rep["total_violations"],
+        "flight_bundles": len(flight.bundles),
+        "flight_rearms": flight.stats()["rearms"],
+        "replay_ok": res.ok,
+        "replay_detail": res.summary(),
+        "span_digest": doc["span_digest"],
+        "decision_digest": doc["decision_digest"],
+        "artifact_errors": bundle_errors,
+        "lossmap": lossmap,
+    }
+    ok = (rep["total_violations"] == 0 and res.ok
+          and not bundle_errors and obs.tracer.dropped == 0)
+    row["ok"] = ok
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hours", type=float, default=2.0,
+                    help="total simulated hours across all legs "
+                         "(virtual clock; wall time is minutes)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="write per-leg artifact directories plus a "
+                         "soak_report/v1 summary under DIR")
+    ap.add_argument("--legs", default=",".join(LEGS),
+                    help=f"comma-separated subset of: {', '.join(LEGS)}")
+    args = ap.parse_args()
+    legs = [l.strip() for l in args.legs.split(",") if l.strip()]
+    unknown = [l for l in legs if l not in LEGS]
+    if unknown:
+        ap.error(f"unknown legs {unknown}; choose from {list(LEGS)}")
+    per_leg = args.hours * 3600.0 / len(legs)
+
+    rows = []
+    for i, leg in enumerate(legs):
+        out_dir = None
+        if args.obs_dir:
+            out_dir = os.path.join(args.obs_dir, leg)
+            os.makedirs(out_dir, exist_ok=True)
+        print(f"[{leg}] serving {per_leg:.0f} virtual seconds "
+              f"(seed {args.seed + 17 * i}) ...")
+        row = run_leg(leg, per_leg, args.seed + 17 * i, out_dir)
+        rows.append(row)
+        print(f"[{leg}] {row['completed']}/{row['requests']} requests, "
+              f"{row['tokens']} tokens, {row['events']} events "
+              f"({row['events_dropped']} dropped) "
+              f"in {row['wall_s']:.1f}s wall")
+        print(f"[{leg}] ledger: {row['ledger_checks']} checks, "
+              f"{row['ledger_violations']} violations; "
+              f"flight: {row['flight_bundles']} bundles "
+              f"({row['flight_rearms']} re-arms)")
+        print(f"[{leg}] {row['replay_detail']}")
+        if row["lossmap"]:
+            lm = row["lossmap"]
+            parts = ", ".join(f"{c} {v:.2f}"
+                              for c, v in sorted(lm["loss_tok_s"].items(),
+                                                 key=lambda kv: -kv[1])
+                              if v > 0)
+            print(f"[{leg}] lossmap: ceiling {lm['ceiling_tok_s']:.1f} "
+                  f"goodput {lm['goodput_tok_s']:.1f} tok/s"
+                  + (f" ({parts})" if parts else ""))
+        for err in row["artifact_errors"]:
+            print(f"[{leg}] ARTIFACT FAIL  {err}")
+        if not row["ok"]:
+            print(f"[{leg}] FAILED")
+
+    report = {"schema": "soak_report/v1",
+              "hours": args.hours,
+              "seed": args.seed,
+              "legs": rows,
+              "ok": all(r["ok"] for r in rows)}
+    if args.obs_dir:
+        os.makedirs(args.obs_dir, exist_ok=True)
+        with open(os.path.join(args.obs_dir, "soak_report.json"),
+                  "w") as f:
+            json.dump(report, f, indent=1, default=float)
+        print(f"wrote soak report to "
+              f"{os.path.join(args.obs_dir, 'soak_report.json')}")
+    verdict = "PASS" if report["ok"] else "FAIL"
+    total_checks = sum(r["ledger_checks"] for r in rows)
+    total_viol = sum(r["ledger_violations"] for r in rows)
+    print(f"soak {verdict}: {args.hours:.2f} simulated hours over "
+          f"{len(legs)} legs, {total_checks} ledger checks, "
+          f"{total_viol} violations, replay "
+          f"{'MATCH' if all(r['replay_ok'] for r in rows) else 'MISMATCH'}"
+          )
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,7 @@ the metrics registry the console report renders from,
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -62,8 +63,11 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.models.param import materialize
 from repro.serving.engine import Engine
-from repro.serving.obs import FlightRecorder, Observability
-from repro.serving.obs.export import profiler_capture, write_trace
+from repro.serving.obs import (FlightRecorder, InvariantLedger,
+                               Observability)
+from repro.serving.obs.export import (profiler_capture, write_events,
+                                      write_trace)
+from repro.serving.obs.lossmap import goodput_lossmap
 from repro.serving.obs.report import ServeReport, segments_saved_line
 from repro.training import checkpoint
 
@@ -109,10 +113,25 @@ def build_strategy(name: str, casc: strategy.Cascade, *, threshold: float,
     return strategy.make(name, casc)
 
 
-def _build_obs(args) -> Observability | None:
-    """The observability plane (DESIGN.md §12), built only when asked —
-    a ``None`` obs keeps every producer guard dead and the serve loop
-    byte-identical to the pre-observability path."""
+def _build_obs(args, *, policy=None, boundaries=None,
+               ) -> Observability | None:
+    """The observability plane (DESIGN.md §12/§13), built only when
+    asked — a ``None`` obs keeps every producer guard dead and the
+    serve loop byte-identical to the pre-observability path.
+
+    ``--obs-dir DIR`` is the one-flag bundle: it defaults every sink
+    the four separate flags name into DIR (trace.json, events.json,
+    metrics.json, flight bundles) and additionally arms the
+    `InvariantLedger` (audit contracts + ledger.json); explicit flags
+    still win for their own sink.
+    """
+    if args.obs_dir:
+        os.makedirs(args.obs_dir, exist_ok=True)
+        args.trace_out = args.trace_out or \
+            os.path.join(args.obs_dir, "trace.json")
+        args.metrics_out = args.metrics_out or \
+            os.path.join(args.obs_dir, "metrics.json")
+        args.flight_recorder = args.flight_recorder or args.obs_dir
     if not (args.trace_out or args.metrics_out or args.flight_recorder
             or args.profile_dir):
         return None
@@ -120,7 +139,12 @@ def _build_obs(args) -> Observability | None:
     if args.flight_recorder:
         os.makedirs(args.flight_recorder, exist_ok=True)
         flight = FlightRecorder(out_dir=args.flight_recorder)
-    return Observability(flight=flight, profile_dir=args.profile_dir)
+    ledger = None
+    if args.obs_dir:
+        ledger = InvariantLedger(policy=policy, boundaries=boundaries,
+                                 out_dir=args.obs_dir)
+    return Observability(flight=flight, ledger=ledger,
+                         profile_dir=args.profile_dir)
 
 
 def _finish_obs(args, obs: Observability | None,
@@ -130,6 +154,11 @@ def _finish_obs(args, obs: Observability | None,
     Perfetto trace and the registry snapshot, if asked for."""
     if obs is not None:
         report.add_trace(obs.tracer, obs.flight)
+        if obs.ledger is not None:
+            report.add_ledger(obs.ledger.report())
+        if obs.tracer.n_emitted and not obs.tracer.dropped:
+            report.add_lossmap(goodput_lossmap(
+                obs.tracer.events, slo=args.slo_ms / 1e3))
     report.print()
     if obs is not None and args.trace_out:
         write_trace(obs.tracer, args.trace_out)
@@ -138,6 +167,13 @@ def _finish_obs(args, obs: Observability | None,
     if args.metrics_out:
         report.registry.to_json(args.metrics_out)
         print(f"wrote metrics snapshot to {args.metrics_out}")
+    if obs is not None and args.obs_dir:
+        write_events(obs.tracer, os.path.join(args.obs_dir, "events.json"))
+        if obs.ledger is not None:
+            with open(os.path.join(args.obs_dir, "ledger.json"), "w") as f:
+                json.dump(obs.ledger.report(), f, indent=1, default=float)
+        print(f"wrote observability bundle to {args.obs_dir} "
+              "(trace + events + metrics + ledger)")
     if obs is not None and obs.flight is not None and obs.flight.bundles:
         print(f"flight recorder: {len(obs.flight.bundles)} anomaly "
               f"bundle(s) in {args.flight_recorder}")
@@ -264,7 +300,8 @@ def _serve_cascade(args) -> None:
         policy=args.escalate_policy, patience=args.escalate_patience,
         paged_kernel=args.paged_kernel)
     slo = args.slo_ms / 1e3
-    obs = _build_obs(args)
+    obs = _build_obs(args, policy=args.escalate_policy,
+                     boundaries=casc.boundaries)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos, obs=obs)
     print(f"serving {len(requests)} {args.workload} requests "
@@ -543,6 +580,14 @@ def main() -> None:
                          "last events + metrics) land in DIR on TTFT-"
                          "SLO breach bursts, page exhaustion, stuck "
                          "escalation waiters, or gear thrash")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="one-flag observability bundle: write the "
+                         "Perfetto trace, the lossless obs_trace/v1 "
+                         "event log, the metrics snapshot, flight "
+                         "bundles, AND the invariant-ledger report "
+                         "into DIR (arms the audit ledger; subsumes "
+                         "--trace-out/--metrics-out/--flight-recorder, "
+                         "which still win for their own sink)")
     ap.add_argument("--profile-dir", default=None,
                     help="jax.profiler logdir captured around the "
                          "serve loop (kernel-level attribution)")
@@ -594,10 +639,12 @@ def main() -> None:
         if args.kv != "ring":
             print("note: --kv paged applies to --server traffic mode; "
                   "the one-shot batch path always uses ring caches")
-        if args.trace_out or args.metrics_out or args.flight_recorder:
-            print("note: --trace-out/--metrics-out/--flight-recorder "
-                  "observe --server traffic sessions; the one-shot "
-                  "batch path has no request lifecycle to trace")
+        if (args.trace_out or args.metrics_out or args.flight_recorder
+                or args.obs_dir):
+            print("note: --trace-out/--metrics-out/--flight-recorder/"
+                  "--obs-dir observe --server traffic sessions; the "
+                  "one-shot batch path has no request lifecycle to "
+                  "trace")
         _serve_batch(args, cfg, params, strat)
 
 

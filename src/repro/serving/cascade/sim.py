@@ -130,7 +130,13 @@ class CascadeSimStepper:
 
     def __init__(self, bank: ModelBank, strategies: tuple, trace_bank, *,
                  overhead: float = 0.25, policy: str = "recall",
-                 patience: int = 4, chunk: int = 16, budgets=None):
+                 patience: int = 4, chunk: int = 16, budgets=None,
+                 pool=None):
+        # optional rung-0 paged-KV admission gate (DESIGN.md §13): the
+        # same host-side `KVPool` bookkeeping the single-model sim can
+        # carry — the soak harness shrinks it to put the cascade under
+        # genuine page pressure while the invariant ledger audits it
+        self.pool = pool
         self.bank = bank
         self.strategies = strategies
         self.traces = np.asarray(trace_bank, np.float32)
@@ -180,6 +186,8 @@ class CascadeSimStepper:
     # ------------------------------------------------------------------
 
     def alloc(self) -> None:
+        if self.pool is not None:
+            self.pool.reset()
         n = self.n_lanes
         self.lane_req: list[Request | None] = [None] * n
         self.lane_tidx = np.zeros(n, np.int64)
@@ -204,16 +212,22 @@ class CascadeSimStepper:
         self.alloc()
 
     def reserve(self, req: Request) -> bool:
-        return True
+        if self.pool is None:
+            return True
+        return self.pool.reserve(req.prompt, req.max_tokens)
 
     def admit(self, slot: int, req: Request) -> None:
         self.lane_req[slot] = req
         self.lane_tidx[slot] = 0
         lp = len(req.prompt)
+        if self.pool is not None:
+            self.pool.admit(slot, req.prompt, req.max_tokens)
         self.prefill0[slot] = lp
         self.router.admit(slot, lp)
 
     def release(self, slot: int) -> None:
+        if self.pool is not None:
+            self.pool.release(slot)
         for m in self.router.release(slot):
             if m >= 1:
                 self.esc.release(slot, m)
@@ -432,6 +446,12 @@ class CascadeSimStepper:
                             otr.emit("deescalate",
                                     rid=self.lane_req[slot].rid,
                                     lane=slot, model=m)
+
+        if self.pool is not None and emit.any():
+            # rung-0 paged bookkeeping per emitted token (fresh tail
+            # pages from the reserved budget, COW on shared tails)
+            self.pool.prepare_step(emit)
+            self.pool.note_written(emit)
 
         # 5. the virtual clock: serial across models, piggyback
         #    roofline within each (catch-up hides under decode)

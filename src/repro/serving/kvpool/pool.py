@@ -387,6 +387,59 @@ class KVPool:
 
     # ------------------------------------------------------------------
 
+    def check_invariants(self) -> list[str]:
+        """Audit the pool's conservation laws; returns violations (empty
+        when healthy).  This is the invariant ledger's page-conservation
+        probe (DESIGN.md §13) — pure host numpy over small arrays, cheap
+        enough to run at every counter-event edge of a soak:
+
+          * refcounts never negative; free XOR referenced per page,
+          * allocs == frees + in_use: ``free_count + pages_in_use``
+            covers every non-garbage page exactly once,
+          * every reference is accounted for: a page's refcount equals
+            the lane tables' holds plus the prefix cache's entry refs,
+          * reserved budgets never exceed the free list
+            (the never-fail-mid-stream admission guarantee).
+        """
+        bad: list[str] = []
+        alloc = self.allocator
+        ref = alloc._ref
+        if (ref < 0).any():
+            bad.append(f"negative refcount at pages "
+                       f"{np.flatnonzero(ref < 0).tolist()}")
+        free = set(alloc._free)
+        if len(free) != len(alloc._free):
+            bad.append("free list holds duplicate page ids")
+        if alloc.free_count + alloc.pages_in_use != alloc.n_pages - 1:
+            bad.append(
+                f"page conservation broken: free={alloc.free_count} + "
+                f"in_use={alloc.pages_in_use} != {alloc.n_pages - 1}")
+        for pid in free:
+            if ref[pid] != 0:
+                bad.append(f"page {pid} free but refcount {int(ref[pid])}")
+        # reference accounting: lane holds + cache refs == refcount
+        held: collections.Counter[int] = collections.Counter()
+        for lane in range(self.n_lanes):
+            for pid in self.table[lane, :self.n_held[lane]]:
+                held[int(pid)] += 1
+        for pid in range(1, alloc.n_pages):
+            if pid in free:
+                continue
+            expect = held.get(pid, 0) + self.prefix._page_refs.get(pid, 0)
+            if int(ref[pid]) != expect:
+                bad.append(
+                    f"page {pid} refcount {int(ref[pid])} != "
+                    f"{held.get(pid, 0)} lane holds + "
+                    f"{self.prefix._page_refs.get(pid, 0)} cache refs")
+            if int(ref[pid]) == 0:
+                bad.append(f"page {pid} in use but refcount 0")
+        pending = sum(need for need, _ in self._pending)
+        if int(self.budget.sum()) + pending > alloc.free_count:
+            bad.append(
+                f"reserved budget {int(self.budget.sum())}+{pending} "
+                f"pending exceeds free pages {alloc.free_count}")
+        return bad
+
     @property
     def pages_in_use(self) -> int:
         return int(self.allocator.pages_in_use)

@@ -16,6 +16,14 @@ One package threads through every serving subsystem:
   * `flight`   — `FlightRecorder`: last-N-events post-mortem bundles
     on anomaly triggers (TTFT-SLO breach burst, page exhaustion,
     stuck escalation waiter, gear thrash).
+  * `audit`    — `InvariantLedger`: streaming contracts over the same
+    listener hook (page conservation, escalations resolve, lane
+    occupancy, walk-floor monotonicity, TTFT-exactly-once, admission
+    never drops) with flight-bundle dumps on violation.
+  * `replay`   — deterministic re-serve of an exported trace artifact
+    with `span_digest` / `decision_digest` equality checks.
+  * `lossmap`  — goodput-loss attribution: the achieved-vs-roofline
+    gap decomposed into causes from span intervals.
   * `report`   — the one serve report renderer (replaces the bespoke
     print blocks `launch/serve.py` used to duplicate).
 
@@ -26,15 +34,18 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.serving.obs.audit import InvariantLedger, audit_events
 from repro.serving.obs.flight import FlightRecorder
 from repro.serving.obs.registry import MetricsRegistry
 from repro.serving.obs.trace import SpanTracer, decision_attribution
 
 __all__ = [
     "FlightRecorder",
+    "InvariantLedger",
     "MetricsRegistry",
     "Observability",
     "SpanTracer",
+    "audit_events",
     "decision_attribution",
 ]
 
@@ -42,10 +53,12 @@ __all__ = [
 @dataclass
 class Observability:
     """What a `Server` threads through a serve: a tracer (always, when
-    observability is on), an optional flight recorder riding the same
-    event stream, and an optional ``jax.profiler`` logdir for
-    kernel-level capture around token steps."""
+    observability is on), an optional flight recorder and invariant
+    ledger riding the same event stream, and an optional
+    ``jax.profiler`` logdir for kernel-level capture around token
+    steps."""
 
     tracer: SpanTracer = field(default_factory=SpanTracer)
     flight: FlightRecorder | None = None
+    ledger: InvariantLedger | None = None
     profile_dir: str | None = None

@@ -26,7 +26,8 @@ from typing import Any, Iterable
 
 from repro.serving.obs.trace import Event
 
-__all__ = ["to_perfetto", "write_trace", "profiler_capture"]
+__all__ = ["to_perfetto", "write_trace", "events_doc", "write_events",
+           "profiler_capture"]
 
 _LANE_KINDS = {"token", "prefill_chunk", "admitted", "finish"}
 _MODEL_KINDS = {"escalate", "esc_wait", "esc_grant", "esc_resolve",
@@ -62,6 +63,10 @@ def to_perfetto(events: Iterable[Event], *,
                                 if isinstance(v, (int, float, str, bool))}
         if ev.rid >= 0:
             args["rid"] = ev.rid
+        if ev.kind == "queued":
+            # Exact arrival stamp: the instant's ``ts`` is µs-rounded,
+            # but replay (obs/replay.py) needs the raw serve-clock float.
+            args["t_s"] = ev.t
         if ev.kind == "finish":
             start = admit_at.pop(ev.rid, None)
             if start is not None:
@@ -115,6 +120,31 @@ def write_trace(tracer, path: str, *, title: str = "t-tamer serve",
                 ) -> dict[str, Any]:
     doc = to_perfetto(tracer.events, title=title)
     doc["otherData"]["events_dropped"] = tracer.dropped
+    doc["otherData"]["span_digest"] = tracer.span_digest()
+    doc["otherData"]["decision_digest"] = tracer.decision_digest()
+    with open(path, "w") as f:
+        json.dump(doc, f, default=float)
+    return doc
+
+
+def events_doc(tracer) -> dict[str, Any]:
+    """Raw-ring export (schema ``obs_trace/v1``): the lossless
+    counterpart to the Perfetto document.  Keeps every event field
+    bit-exactly (JSON floats round-trip), plus the two digests and the
+    drop count — everything `obs/replay.py` needs to reconstruct the
+    workload and verify a re-serve, with no µs rounding in the way."""
+    return {
+        "schema": "obs_trace/v1",
+        "clock": "serve-seconds",
+        "events": [ev.as_dict() for ev in tracer.events],
+        "events_dropped": tracer.dropped,
+        "span_digest": tracer.span_digest(),
+        "decision_digest": tracer.decision_digest(),
+    }
+
+
+def write_events(tracer, path: str) -> dict[str, Any]:
+    doc = events_doc(tracer)
     with open(path, "w") as f:
         json.dump(doc, f, default=float)
     return doc

@@ -26,7 +26,12 @@ Triggers (all thresholds constructor-tunable):
 
 Each trigger kind fires at most ``max_bundles_per_kind`` times per
 serve (anomalies tend to repeat every step once entered — one bundle
-per failure mode is the useful artifact, a dump storm is not).
+per failure mode is the useful artifact, a dump storm is not).  For
+long soaks that cap is too blunt — it would only ever capture the
+first anomaly of each kind across simulated hours — so
+``rearm_interval`` re-arms all triggers every N serve-seconds:
+bundles stay capped *per window*, and every window gets a fresh
+budget.  `reset()` does the same re-arm explicitly.
 """
 
 from __future__ import annotations
@@ -46,7 +51,8 @@ class FlightRecorder:
                  slo_burst: int = 5, page_burst: int = 3,
                  stuck_after: float = 30.0, thrash_count: int = 6,
                  thrash_window: float = 60.0, out_dir: str | None = None,
-                 max_bundles_per_kind: int = 1):
+                 max_bundles_per_kind: int = 1,
+                 rearm_interval: float | None = None):
         self.window = int(window)
         self.slo = slo
         self.slo_burst = int(slo_burst)
@@ -56,12 +62,16 @@ class FlightRecorder:
         self.thrash_window = float(thrash_window)
         self.out_dir = out_dir
         self.max_bundles_per_kind = int(max_bundles_per_kind)
+        self.rearm_interval = (float(rearm_interval)
+                               if rearm_interval else None)
 
         self.bundles: list[dict[str, Any]] = []
         self.dump_paths: list[str] = []
         self._tracer: SpanTracer | None = None
         self._snapshot_fn: Callable[[], dict[str, Any]] | None = None
         self._fired: collections.Counter = collections.Counter()
+        self._rearms = 0
+        self._window_end: float | None = None
 
         self._slo_streak = 0
         self._page_streak = 0
@@ -72,14 +82,31 @@ class FlightRecorder:
     def bind(self, tracer: SpanTracer,
              snapshot_fn: Callable[[], dict[str, Any]] | None = None,
              ) -> None:
-        """Attach to a tracer as its listener.  ``snapshot_fn`` is
+        """Attach to a tracer as a listener (chained — the ledger and
+        other consumers can ride the same stream).  ``snapshot_fn`` is
         called lazily at dump time for the metrics section."""
         self._tracer = tracer
         self._snapshot_fn = snapshot_fn
-        tracer.listener = self.observe
+        tracer.add_listener(self.observe)
+
+    def reset(self) -> None:
+        """Re-arm every trigger: clear streak state and the per-kind
+        fired counters.  Captured bundles and dump paths are kept."""
+        self._fired.clear()
+        self._slo_streak = 0
+        self._page_streak = 0
+        self._waiters.clear()
+        self._switch_ts.clear()
+        self._rearms += 1
 
     # ---------------------------------------------------------- stream
     def observe(self, ev: Event) -> None:
+        if self.rearm_interval is not None:
+            if self._window_end is None:
+                self._window_end = ev.t + self.rearm_interval
+            elif ev.t >= self._window_end:
+                self.reset()
+                self._window_end = ev.t + self.rearm_interval
         kind = ev.kind
         if kind == "token":
             ttft = dict(ev.data).get("ttft")
@@ -157,8 +184,10 @@ class FlightRecorder:
         self.bundles.append(bundle)
         if self.out_dir:
             os.makedirs(self.out_dir, exist_ok=True)
+            # len(bundles) is a monotone sequence — unlike the per-kind
+            # fired counter, it never collides across re-arm windows.
             path = os.path.join(
-                self.out_dir, f"flight-{kind}-{self._fired[kind]}.json")
+                self.out_dir, f"flight-{kind}-{len(self.bundles)}.json")
             with open(path, "w") as f:
                 json.dump(bundle, f, indent=2, default=float)
             self.dump_paths.append(path)
@@ -168,4 +197,5 @@ class FlightRecorder:
     def stats(self) -> dict[str, Any]:
         return {"bundles": len(self.bundles),
                 "triggers": dict(self._fired),
+                "rearms": self._rearms,
                 "pending_waiters": len(self._waiters)}

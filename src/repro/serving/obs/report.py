@@ -101,6 +101,25 @@ class ServeReport:
             self.registry.absorb("flight", flight.stats())
         self._sections.append("trace")
 
+    def add_ledger(self, report: Mapping[str, Any]) -> None:
+        """Invariant-ledger verdicts (audit.py's ``ledger_report/v1``)."""
+        self._ledger = dict(report)
+        self.registry.absorb("ledger", {
+            "events_seen": report.get("events_seen", 0),
+            "total_violations": report.get("total_violations", 0),
+            "checks": sum(c.get("checks", 0) for c in
+                          report.get("contracts", {}).values()),
+        })
+        self._sections.append("ledger")
+
+    def add_lossmap(self, lm: Mapping[str, Any]) -> None:
+        """Goodput-loss attribution (lossmap.py's ``obs_lossmap/v1``)."""
+        self._lossmap = dict(lm)
+        self.registry.absorb("lossmap", {
+            k: v for k, v in lm.items()
+            if k not in ("schema", "stalls_s")})
+        self._sections.append("lossmap")
+
     # -------------------------------------------------------- renderers
     def _v(self, name: str, default=None, **labels):
         return self.registry.value(name, default, **labels)
@@ -205,16 +224,47 @@ class ServeReport:
             line += f"; flight recorder bundles: {bundles:.0f}"
         return [line]
 
+    def _ledger_lines(self) -> list[str]:
+        rep = getattr(self, "_ledger", {})
+        contracts = rep.get("contracts", {})
+        total = rep.get("total_violations", 0)
+        checks = sum(c.get("checks", 0) for c in contracts.values())
+        verdict = "PASS" if total == 0 else "VIOLATED"
+        if any(c.get("verdict") == "unverifiable"
+               for c in contracts.values()):
+            verdict = "UNVERIFIABLE"
+        lines = [f"ledger: {len(contracts)} contracts, {checks} checks, "
+                 f"{total} violations ({verdict})"]
+        for v in rep.get("violations", ())[:5]:
+            lines.append(f"  {v['contract']} @ t={v['t']:.2f}s: "
+                         f"{v['detail']}")
+        return lines
+
+    def _lossmap_lines(self) -> list[str]:
+        lm = getattr(self, "_lossmap", {})
+        loss = lm.get("loss_tok_s", {})
+        gap = lm.get("loss_total_tok_s", 0.0)
+        head = (f"lossmap: ceiling {lm.get('ceiling_tok_s', 0.0):.1f} "
+                f"tok/s, goodput {lm.get('goodput_tok_s', 0.0):.1f} "
+                f"tok/s (gap {gap:.1f})")
+        parts = [f"{c} {v:.2f}" for c, v in sorted(
+            loss.items(), key=lambda kv: -kv[1]) if v > 0]
+        if parts:
+            head += ": " + ", ".join(parts)
+        return [head]
+
     def lines(self) -> list[str]:
         order = ("runtime", "adaptive", "segments", "cascade", "pool",
-                 "chunk", "trace")
+                 "chunk", "trace", "ledger", "lossmap")
         render = {"runtime": self._runtime_lines,
                   "adaptive": self._adaptive_lines,
                   "segments": self._segments_lines,
                   "cascade": self._cascade_lines,
                   "pool": self._pool_lines,
                   "chunk": self._chunk_lines,
-                  "trace": self._trace_lines}
+                  "trace": self._trace_lines,
+                  "ledger": self._ledger_lines,
+                  "lossmap": self._lossmap_lines}
         out: list[str] = []
         for section in order:
             if section in self._sections:

@@ -103,6 +103,22 @@ class SpanTracer:
         whole trace is deterministic)."""
         self._clock = clock
 
+    def add_listener(self, fn: Callable[[Event], None]) -> None:
+        """Chain ``fn`` onto the listener hook so several consumers
+        (flight recorder, invariant ledger, ...) can ride the same
+        stream.  Listeners fire in registration order and see every
+        emit — including events the bounded ring later evicts."""
+        prev = self.listener
+        if prev is None:
+            self.listener = fn
+            return
+
+        def _fan(ev: Event, _a=prev, _b=fn) -> None:
+            _a(ev)
+            _b(ev)
+
+        self.listener = _fan
+
     # ---------------------------------------------------------- emit
     def emit(self, kind: str, *, t: float | None = None, rid: int = -1,
              lane: int = -1, model: int = -1, **data: Any) -> None:

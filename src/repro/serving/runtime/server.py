@@ -124,10 +124,16 @@ class SimStepper:
                  seg_time: float = 1.0, overhead: float = 0.25,
                  cost: str = "lane", prefill_tok_time: float = 0.0,
                  prefill_chunk: int | None = None,
-                 prefill_budget: int | None = None):
+                 prefill_budget: int | None = None, pool=None):
         if cost not in ("lane", "batch"):
             raise ValueError(f"unknown cost model {cost!r}")
         from repro.serving.runtime.scheduler import ChunkPlanner
+        # optional paged-KV admission gate (DESIGN.md §13): a real
+        # `KVPool` doing its full host-side bookkeeping — reservation,
+        # prefix sharing, per-token page growth and COW — with no device
+        # arrays behind it.  The soak harness shrinks this pool to
+        # manufacture genuine page pressure the invariant ledger audits.
+        self.pool = pool
         self.prefill_tok_time = float(prefill_tok_time)
         prefill_chunk = prefill_chunk or None      # 0 == disabled
         self.prefill_chunk = None if prefill_chunk is None \
@@ -214,11 +220,26 @@ class SimStepper:
         # monolith Pareto sweep compares on
         self.served_loss_sum = 0.0
         self.served_loss_n = 0
+        if self.pool is not None:
+            self.pool.reset()
+
+    def reserve(self, req: Request) -> bool:
+        """Admission gate: with a pool attached, reserve the request's
+        worst-case page need (or leave it queued); gate-free otherwise."""
+        if self.pool is None:
+            return True
+        return self.pool.reserve(req.prompt, req.max_tokens)
+
+    def release(self, lane: int) -> None:
+        if self.pool is not None:
+            self.pool.release(lane)
 
     def admit(self, lane: int, req: Request) -> None:
         self.lane_req[lane] = req
         self.lane_tidx[lane] = 0
         lp = len(req.prompt)
+        if self.pool is not None:
+            self.pool.admit(lane, req.prompt, req.max_tokens)
         if self.prefill_chunk is not None:
             self.lane_prefill[lane] = lp
         elif self.prefill_tok_time > 0.0:
@@ -261,6 +282,12 @@ class SimStepper:
                             "prefill_chunk", lane=lane,
                             rid=self.lane_req[lane].rid, width=int(w),
                             left=int(self.lane_prefill[lane]))
+        if self.pool is not None and emit.any():
+            # real paged bookkeeping per decode token: fresh tail pages
+            # from the reserved budget, COW splits on shared tails —
+            # the reservation guarantees these can never fail mid-stream
+            self.pool.prepare_step(emit)
+            self.pool.note_written(emit)
         losses = np.zeros((self.n_lanes, self.n_nodes), np.float32)
         for lane in np.flatnonzero(emit):
             losses[lane] = self._row(self.lane_req[lane],
@@ -372,6 +399,9 @@ class Server:
                     flight.slo = self.slo
                 flight.bind(tracer,
                             snapshot_fn=lambda: metrics.summary(self.slo))
+            ledger = getattr(self.obs, "ledger", None)
+            if ledger is not None:
+                ledger.bind(tracer, pool=getattr(stepper, "pool", None))
         deadline_of = None
         if self.order == "edf" and self.slo is not None:
             deadline_of = lambda r: r.arrival + self.slo  # noqa: E731
@@ -400,7 +430,20 @@ class Server:
                 queue.push(req)
                 pushed.append(req.arrival)
                 if tracer is not None:
-                    tracer.emit("queued", t=req.arrival, rid=req.rid)
+                    # self-contained for replay (obs/replay.py): the
+                    # queued event carries everything needed to rebuild
+                    # the request — prompt bytes included, since paged
+                    # admission and prefix sharing key on content
+                    extra = {"plen": len(req.prompt),
+                             "ntok": int(req.max_tokens),
+                             "prompt": np.asarray(
+                                 req.prompt, np.uint32).tobytes().hex()}
+                    if req.strategy is not None:
+                        extra["strategy"] = req.strategy
+                    if req.lam is not None:
+                        extra["lam"] = float(req.lam)
+                    tracer.emit("queued", t=req.arrival, rid=req.rid,
+                                **extra)
             if self.controller is not None and pushed:
                 self.controller.on_arrivals(pushed)
             for lane, req in sched.admit(
@@ -485,4 +528,7 @@ class Server:
                 self.controller.on_step_end(self._now(), len(queue))
 
         metrics.t_end = self._now()
+        if self.obs is not None and getattr(self.obs, "ledger", None) \
+                is not None:
+            self.obs.ledger.finalize(self._now())
         return metrics

@@ -1,0 +1,523 @@
+"""Audit & replay plane tests (DESIGN.md §13):
+
+  * the `InvariantLedger` passes a clean pool-gated serve with zero
+    violations (and the audited serve's token streams are bit-identical
+    to an unaudited serve — the ledger is a pure observer),
+  * each contract fires on a synthetic violating stream,
+  * `KVPool.check_invariants` catches a tampered allocator,
+  * replay: an exported ``obs_trace/v1`` artifact reconstructs the
+    exact workload (prompt bytes included) and a re-serve reproduces
+    both digests; a divergent re-serve is reported as MISMATCH,
+  * ring overflow: a tiny-capacity tracer under load keeps
+    ``events_dropped`` exact and `span_digest` well-defined, offline
+    audit degrades to explicit ``unverifiable`` (never false-positive),
+    and replay refuses the truncated artifact,
+  * lossmap: the TTFT partition sums exactly, totals behave,
+  * flight recorder re-arm windows fire repeat bundles,
+  * the soak harness's bundle/events/ledger validators accept real
+    artifacts and reject corrupted ones.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import strategy
+from repro.core import traces
+from repro.serving import runtime as rt
+from repro.serving.kvpool import KVPool
+from repro.serving.obs import (FlightRecorder, InvariantLedger,
+                               Observability, SpanTracer, audit_events)
+from repro.serving.obs.export import events_doc
+from repro.serving.obs.lossmap import (STALL_CAUSES, goodput_lossmap,
+                                       sim_token_ceiling,
+                                       stall_decomposition)
+from repro.serving.obs.replay import (replay, workload_from_events,
+                                      workload_from_perfetto,
+                                      events_from_doc)
+from repro.serving.runtime.request import Request
+from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+N_NODES = 5
+
+
+@pytest.fixture(scope="module")
+def sim_cascade():
+    rng = np.random.default_rng(0)
+    losses, _, flops = traces.ee_like_traces(rng, 3_000, N_NODES)
+    casc = strategy.Cascade.from_traces(losses[:1_500], 0.4 * flops,
+                                        k=12, lam=0.6)
+    return casc, losses[1_500:]
+
+
+def _workload(seed=11, rate=4.0, duration=10.0):
+    spec = WorkloadSpec(rate=rate, duration=duration, prompt_len=4,
+                        max_tokens=(2, 9), seed=seed)
+    return make_workload("poisson", spec)
+
+
+def _pool():
+    return KVPool(n_lanes=3, page_size=4, lane_pages=8, n_pages=16)
+
+
+def _serve(casc, bank, requests, *, obs=None, pool=None, lanes=3,
+           tracer_kw=None):
+    strategies, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                       ("recall_index", None))
+    kw = {"pool": pool} if pool is not None else {}
+    stepper = rt.SimStepper(strategies, bank, n_lanes=lanes,
+                            seg_time=0.05, overhead=0.01, **kw)
+    server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
+                       slo=5.0, obs=obs)
+    return server.serve(requests), obs
+
+
+# --------------------------------------------------------------------------
+# ledger over real serves
+# --------------------------------------------------------------------------
+
+def test_ledger_clean_pool_gated_serve(sim_cascade):
+    casc, bank = sim_cascade
+    requests = _workload()
+    ledger = InvariantLedger()
+    obs = Observability(ledger=ledger)
+    metrics, _ = _serve(casc, bank, requests, obs=obs, pool=_pool())
+    rep = ledger.report()
+    assert rep["schema"] == "ledger_report/v1"
+    assert rep["total_violations"] == 0, rep["violations"]
+    assert rep["finalized"]           # server finalized at serve end
+    assert rep["mode"] == "live"
+    # real work was audited: lanes, ttft, pages all saw checks
+    for c in ("lane_conservation", "ttft_exactly_once",
+              "page_conservation", "admission_never_drop"):
+        assert rep["contracts"][c]["checks"] > 0, c
+        assert rep["contracts"][c]["verdict"] == "pass"
+
+
+def test_audited_serve_is_pure_observer(sim_cascade):
+    """Bit-identical token streams with the full audit plane on vs no
+    observability at all — the acceptance criterion."""
+    casc, bank = sim_cascade
+    requests = _workload()
+    m_off, _ = _serve(casc, bank, requests, obs=None, pool=_pool())
+    obs = Observability(ledger=InvariantLedger(),
+                        flight=FlightRecorder())
+    m_on, _ = _serve(casc, bank, requests, obs=obs, pool=_pool())
+    assert set(m_on.records) == set(m_off.records)
+    for rid in m_off.records:
+        assert m_on.records[rid].tokens == m_off.records[rid].tokens, rid
+        assert m_on.records[rid].served_depth_sum == \
+            m_off.records[rid].served_depth_sum, rid
+
+
+# --------------------------------------------------------------------------
+# per-contract synthetic violations
+# --------------------------------------------------------------------------
+
+def _feed(ledger, rows):
+    tr = SpanTracer()
+    ledger.bind(tr)
+    for kind, t, kw in rows:
+        tr.emit(kind, t=t, **kw)
+    return ledger
+
+
+def test_lane_conservation_double_occupancy():
+    led = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("queued", 0.0, {"rid": 2}),
+        ("admitted", 1.0, {"rid": 1, "lane": 0}),
+        ("admitted", 2.0, {"rid": 2, "lane": 0}),   # lane still held
+    ])
+    assert led.n_violations["lane_conservation"] == 1
+    assert "still holding rid 1" in led.violations[0]["detail"]
+
+
+def test_lane_conservation_token_before_admission():
+    led = _feed(InvariantLedger(), [
+        ("token", 1.0, {"rid": 5, "lane": 0, "ttft": 1.0}),
+    ])
+    assert led.n_violations["lane_conservation"] == 1
+
+
+def test_ttft_exactly_once_contract():
+    led = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("token", 1.0, {"rid": 1, "lane": 0, "ttft": 1.0}),
+        ("token", 2.0, {"rid": 1, "lane": 0, "ttft": 2.0}),  # second ttft
+    ])
+    assert led.n_violations["ttft_exactly_once"] == 1
+    led2 = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("token", 1.0, {"rid": 1, "lane": 0}),   # first token, no ttft
+    ])
+    assert led2.n_violations["ttft_exactly_once"] == 1
+
+
+def test_escalation_horizon_and_finalize():
+    led = _feed(InvariantLedger(horizon=5.0), [
+        ("escalate", 0.0, {"rid": 1, "model": 1}),
+        ("counter", 10.0, {"queue": 0}),      # sweep: 10s > 5s horizon
+        ("escalate", 11.0, {"rid": 2, "model": 1}),
+    ])
+    assert led.n_violations["escalation_resolves"] == 1
+    led.finalize(12.0)                        # rid 2 never resolved
+    assert led.n_violations["escalation_resolves"] == 2
+    # in-horizon resolution is clean
+    led2 = _feed(InvariantLedger(horizon=5.0), [
+        ("escalate", 0.0, {"rid": 1, "model": 1}),
+        ("esc_resolve", 1.0, {"rid": 1, "model": 1}),
+    ])
+    led2.finalize(2.0)
+    assert led2.n_violations["escalation_resolves"] == 0
+    assert led2.checks["escalation_resolves"] == 1
+
+
+def test_walk_floor_monotonic_under_commit():
+    kw = {"policy": "commit", "boundaries": (2, 3)}
+    led = _feed(InvariantLedger(**kw), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("token", 1.0, {"rid": 1, "lane": 0, "ttft": 1.0, "node": 1}),
+        ("token", 2.0, {"rid": 1, "lane": 0, "node": 3}),  # model 1
+        ("token", 3.0, {"rid": 1, "lane": 0, "node": 0}),  # back down!
+    ])
+    assert led.n_violations["walk_floor_monotonic"] == 1
+    # recall policy: the same stream is legal (no contract armed)
+    led2 = _feed(InvariantLedger(policy="recall", boundaries=(2, 3)), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("token", 1.0, {"rid": 1, "lane": 0, "ttft": 1.0, "node": 3}),
+        ("token", 2.0, {"rid": 1, "lane": 0, "node": 0}),
+    ])
+    assert led2.n_violations["walk_floor_monotonic"] == 0
+
+
+def test_admission_never_drop_at_finalize():
+    led = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("queued", 0.0, {"rid": 2}),
+        ("admitted", 0.5, {"rid": 2, "lane": 0}),
+    ])
+    led.finalize(9.0)
+    # rid 1 queued-never-admitted + rid 2 admitted-never-finished
+    assert led.n_violations["admission_never_drop"] == 2
+    assert led.report()["contracts"]["admission_never_drop"][
+        "verdict"] == "violated"
+
+
+def test_violation_freezes_flight_bundle(tmp_path):
+    led = InvariantLedger(out_dir=str(tmp_path))
+    _feed(led, [
+        ("queued", 0.0, {"rid": 7}),
+        ("admitted", 0.5, {"rid": 7, "lane": 0}),
+        ("token", 1.0, {"rid": 7, "lane": 0, "ttft": 1.0}),
+        ("token", 2.0, {"rid": 7, "lane": 1, "ttft": 2.0}),  # wrong lane
+    ])
+    assert led.total_violations >= 1
+    [bundle] = led.bundles[:1]
+    assert bundle["schema"] == "flight_bundle/v1"
+    assert bundle["trigger"].startswith("ledger:")
+    assert bundle["rid"] == 7
+    kinds = [e["kind"] for e in bundle["request_span"]]
+    assert kinds[0] == "queued"
+    # on disk too, and it passes the CI bundle validator
+    from benchmarks.check_trace import validate_bundle
+    assert led.dump_paths
+    with open(led.dump_paths[0]) as f:
+        on_disk = json.load(f)
+    assert validate_bundle(on_disk) == []
+
+
+def test_pool_check_invariants_catches_tampering():
+    pool = _pool()
+    assert pool.check_invariants() == []
+    ok = pool.reserve(np.arange(4, dtype=np.int32), 8)
+    assert ok
+    pool.admit(0, np.arange(4, dtype=np.int32), 8)
+    assert pool.check_invariants() == []
+    # tamper: leak a refcount
+    pool.allocator._ref[int(pool.table[0][0])] += 1
+    assert pool.check_invariants() != []
+
+
+# --------------------------------------------------------------------------
+# replay
+# --------------------------------------------------------------------------
+
+def test_replay_roundtrip_and_divergence(sim_cascade):
+    casc, bank = sim_cascade
+    requests = _workload()
+    obs = Observability()
+    _serve(casc, bank, requests, obs=obs, pool=_pool())
+    doc = json.loads(json.dumps(events_doc(obs.tracer), default=float))
+
+    # the artifact alone reconstructs the workload, prompt bytes exact
+    rebuilt = workload_from_events(events_from_doc(doc))
+    by_rid = {r.rid: r for r in rebuilt}
+    assert set(by_rid) == {r.rid for r in requests}
+    for r in requests:
+        b = by_rid[r.rid]
+        assert b.arrival == r.arrival
+        assert b.max_tokens == r.max_tokens
+        assert np.array_equal(np.asarray(r.prompt, np.int32), b.prompt)
+
+    def reserve(reqs):
+        fresh = Observability()
+        _serve(casc, bank, reqs, obs=fresh, pool=_pool())
+        return fresh
+
+    res = replay(doc, reserve)
+    assert res.ok, res.mismatches
+    assert res.span_digest == doc["span_digest"]
+    assert res.decision_digest == doc["decision_digest"]
+
+    # a divergent re-serve (different lane count) must be caught
+    def diverge(reqs):
+        fresh = Observability()
+        _serve(casc, bank, reqs, obs=fresh, pool=None, lanes=2)
+        return fresh
+
+    bad = replay(doc, diverge)
+    assert not bad.ok and bad.mismatches
+
+
+def test_replay_from_perfetto_decision_digest(sim_cascade):
+    from repro.serving.obs.export import to_perfetto
+    casc, bank = sim_cascade
+    requests = _workload()
+    obs = Observability()
+    _serve(casc, bank, requests, obs=obs)
+    doc = to_perfetto(obs.tracer.events)
+    doc["otherData"] = {"events_dropped": obs.tracer.dropped,
+                        "decision_digest": obs.tracer.decision_digest()}
+    doc = json.loads(json.dumps(doc, default=float))
+    rebuilt = workload_from_perfetto(doc)
+    assert {r.rid for r in rebuilt} == {r.rid for r in requests}
+    # raw t_s args survive µs rounding: arrivals are exact
+    by_rid = {r.rid: r for r in rebuilt}
+    for r in requests:
+        assert by_rid[r.rid].arrival == r.arrival
+
+    def reserve(reqs):
+        fresh = Observability()
+        _serve(casc, bank, reqs, obs=fresh)
+        return fresh
+
+    res = replay(doc, reserve)
+    assert res.ok, res.mismatches
+    assert res.ref_span_digest is None     # µs rounding: not carried
+
+
+# --------------------------------------------------------------------------
+# ring overflow: exact drop accounting, honest unverifiable verdicts
+# --------------------------------------------------------------------------
+
+def test_ring_overflow_degrades_honestly(sim_cascade):
+    casc, bank = sim_cascade
+    requests = _workload()
+    # generous ring first: the ground truth event count
+    full = Observability()
+    _serve(casc, bank, requests, obs=full)
+    n_total = full.tracer.n_emitted
+    assert full.tracer.dropped == 0
+
+    tiny_cap = 32
+    tiny = Observability(tracer=SpanTracer(capacity=tiny_cap))
+    _serve(casc, bank, requests, obs=tiny)
+    # events_dropped is exact: emitted - capacity
+    assert tiny.tracer.n_emitted == n_total
+    assert tiny.tracer.dropped == n_total - tiny_cap
+    assert len(tiny.tracer.events) == tiny_cap
+    # span digest stays well-defined (stable over the surviving ring)
+    d1 = tiny.tracer.span_digest()
+    assert isinstance(d1, str) and len(d1) == 64
+    assert d1 == tiny.tracer.span_digest()
+
+    # offline audit of the truncated ring: explicit unverifiable, zero
+    # counted violations (no false positives from evicted admissions)
+    rep = audit_events(tiny.tracer.events, dropped=tiny.tracer.dropped)
+    assert rep["mode"] == "offline"
+    assert rep["total_violations"] == 0
+    assert all(c["verdict"] == "unverifiable"
+               for c in rep["contracts"].values())
+    # the evidence is preserved, just not counted
+    assert "suspect" in rep
+    from benchmarks.check_trace import validate_ledger
+    assert validate_ledger(json.loads(json.dumps(rep))) == []
+
+    # the same ring audited as if complete WOULD false-positive —
+    # which is exactly why dropped>0 must demote the verdicts
+    dirty = audit_events(tiny.tracer.events, dropped=0)
+    assert dirty["total_violations"] > 0
+
+    # replay refuses the truncated artifact
+    doc = json.loads(json.dumps(events_doc(tiny.tracer), default=float))
+    res = replay(doc, lambda reqs: (_ for _ in ()).throw(
+        AssertionError("serve_fn must not run for dropped rings")))
+    assert not res.ok
+    assert "unverifiable" in res.mismatches[0]
+
+
+def test_live_ledger_exact_despite_ring_overflow(sim_cascade):
+    """The LIVE listener sees every emit before eviction, so a tiny
+    ring cannot blind it: verdicts stay exact."""
+    casc, bank = sim_cascade
+    requests = _workload()
+    ledger = InvariantLedger()
+    obs = Observability(tracer=SpanTracer(capacity=32), ledger=ledger)
+    _serve(casc, bank, requests, obs=obs)
+    assert obs.tracer.dropped > 0
+    rep = ledger.report()
+    assert rep["total_violations"] == 0
+    assert rep["events_seen"] == obs.tracer.n_emitted
+    assert all(c["verdict"] == "pass"
+               for c in rep["contracts"].values())
+
+
+# --------------------------------------------------------------------------
+# lossmap
+# --------------------------------------------------------------------------
+
+def _emit_all(rows):
+    tr = SpanTracer()
+    for kind, t, kw in rows:
+        tr.emit(kind, t=t, **kw)
+    return tr.events
+
+
+def test_stall_decomposition_partitions_ttft():
+    events = _emit_all([
+        ("queued", 0.0, {"rid": 1}),
+        ("page_blocked", 1.0, {"rid": 1}),
+        ("admitted", 3.0, {"rid": 1, "lane": 0}),
+        ("token", 4.5, {"rid": 1, "lane": 0, "ttft": 4.5}),
+        ("finish", 5.0, {"rid": 1, "lane": 0}),
+    ])
+    d = stall_decomposition(events)
+    b = d["requests"][1]["buckets"]
+    assert b["queue_wait"] == pytest.approx(1.0)     # 0 -> first block
+    assert b["page_blocked"] == pytest.approx(2.0)   # block -> admit
+    assert b["prefill"] == pytest.approx(1.5)        # admit -> token
+    assert sum(b.values()) == pytest.approx(d["requests"][1]["ttft"])
+
+
+def test_stall_decomposition_escalation_and_gear():
+    events = _emit_all([
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.0, {"rid": 1, "lane": 0}),
+        ("escalate", 1.0, {"rid": 1, "model": 1}),
+        ("esc_wait", 1.0, {"rid": 1, "model": 1}),
+        ("esc_grant", 2.0, {"rid": 1, "model": 1, "lane": 0}),
+        ("esc_resolve", 3.0, {"rid": 1, "model": 1}),
+        ("token", 4.0, {"rid": 1, "lane": 0, "ttft": 4.0}),
+        ("finish", 4.5, {"rid": 1, "lane": 0}),
+        ("gear_switch", 10.0, {"src": 0, "dst": 1}),
+    ])
+    d = stall_decomposition(events)
+    b = d["requests"][1]["buckets"]
+    assert b["esc_wait"] == pytest.approx(1.0)       # wait -> grant
+    assert b["esc_catchup"] == pytest.approx(1.0)    # grant -> resolve
+    assert b["prefill"] == pytest.approx(2.0)        # 4s total - 2s esc
+    assert sum(b.values()) == pytest.approx(4.0)
+    # a transient window reclassifies without changing the sum
+    d2 = stall_decomposition(events, gear_transient_s=1.0)
+    assert d2["transient_windows"] == [(10.0, 11.0)]
+
+
+def test_goodput_lossmap_totals(sim_cascade):
+    casc, bank = sim_cascade
+    requests = _workload(rate=8.0)   # overload so some requests miss
+    obs = Observability()
+    metrics, _ = _serve(casc, bank, requests, obs=obs)
+    slo = 0.5
+    ceiling = sim_token_ceiling(3, 0.05, 0.01)
+    lm = goodput_lossmap(obs.tracer.events, slo=slo,
+                         duration=metrics.summary(slo=slo)["duration"],
+                         ceiling_tok_s=ceiling)
+    assert lm["schema"] == "obs_lossmap/v1"
+    assert lm["requests_total"] == len(requests)
+    assert lm["throughput_tok_s"] <= ceiling + 1e-9
+    assert lm["goodput_tok_s"] <= lm["throughput_tok_s"] + 1e-9
+    assert lm["loss_total_tok_s"] == pytest.approx(
+        ceiling - lm["goodput_tok_s"])
+    assert all(v >= 0 for v in lm["loss_tok_s"].values())
+    for c in STALL_CAUSES:
+        assert c in lm["loss_tok_s"]
+    assert "unserved_capacity" in lm["loss_tok_s"]
+
+
+# --------------------------------------------------------------------------
+# flight recorder re-arm
+# --------------------------------------------------------------------------
+
+def test_flight_rearm_fires_repeat_bundles():
+    tr = SpanTracer()
+    fl = FlightRecorder(slo=0.1, slo_burst=2, max_bundles_per_kind=1,
+                        rearm_interval=10.0)
+    fl.bind(tr)
+    for i in range(2):
+        tr.emit("token", t=float(i), rid=i, ttft=0.5, node=0, sid=0)
+    assert [b["trigger"] for b in fl.bundles] == ["slo_burst"]
+    # same window: capped
+    tr.emit("token", t=2.0, rid=9, ttft=0.5, node=0, sid=0)
+    assert len(fl.bundles) == 1
+    # next window re-arms the cap and the streaks
+    for i in range(2):
+        tr.emit("token", t=12.0 + i, rid=20 + i, ttft=0.5, node=0, sid=0)
+    assert len(fl.bundles) == 2
+    assert fl.stats()["rearms"] >= 1
+
+
+def test_flight_reset_unit():
+    tr = SpanTracer()
+    fl = FlightRecorder(slo=0.1, slo_burst=3)
+    fl.bind(tr)
+    tr.emit("token", t=0.0, rid=1, ttft=0.5, node=0, sid=0)
+    tr.emit("token", t=0.1, rid=2, ttft=0.5, node=0, sid=0)
+    assert fl._slo_streak == 2
+    fl.reset()
+    assert fl._slo_streak == 0
+    assert fl.stats()["rearms"] == 1
+    assert not fl.bundles
+
+
+# --------------------------------------------------------------------------
+# artifact validators + soak smoke
+# --------------------------------------------------------------------------
+
+def test_validators_reject_corruption(sim_cascade):
+    from benchmarks.check_trace import (validate_bundle, validate_events,
+                                        validate_ledger)
+    casc, bank = sim_cascade
+    obs = Observability(ledger=InvariantLedger())
+    _serve(casc, bank, _workload(duration=3.0), obs=obs)
+    doc = json.loads(json.dumps(events_doc(obs.tracer), default=float))
+    assert validate_events(doc) == []
+    bad = dict(doc, span_digest="nope")
+    assert validate_events(bad) != []
+    rep = json.loads(json.dumps(obs.ledger.report()))
+    assert validate_ledger(rep) == []
+    rep_bad = json.loads(json.dumps(rep))
+    rep_bad["total_violations"] = 99
+    assert validate_ledger(rep_bad) != []
+    assert validate_bundle({"schema": "flight_bundle/v1"}) != []
+
+
+def test_soak_single_leg_smoke(tmp_path):
+    """One tiny soak leg end-to-end: zero violations, replay MATCH,
+    artifacts written and internally valid."""
+    from benchmarks.soak import run_leg
+    row = run_leg("bursty_pagepressure", 20.0, 3, str(tmp_path))
+    assert row["ok"], row
+    assert row["ledger_violations"] == 0
+    assert row["replay_ok"]
+    assert row["events_dropped"] == 0
+    assert (tmp_path / "events.json").exists()
+    assert (tmp_path / "ledger.json").exists()
+    assert (tmp_path / "trace.json").exists()
+    report = json.loads((tmp_path / "ledger.json").read_text())
+    assert report["total_violations"] == 0

@@ -36,8 +36,10 @@ N_NODES = 5
 # idiom as the strategy goldens: any change to event schema, ordering,
 # timestamps, or decisions shows up here first and must be intentional
 # (recompute with `_traced_serve(...)[1].tracer.span_digest()`).
+# Last recompute: queued events grew the replay payload (prompt bytes,
+# plen/ntok/strategy/lam) so traces are self-contained repros (§13).
 GOLDEN_SPAN_DIGEST = \
-    "77bb1d0f1efe17bdd259d3ec3a15cafef7f0472240df9a11b632d575f120bb3c"
+    "47f5f68846e77d0b2e9413ee211eaa7ddfacb0ec3a301e8ca8ce0667f4adf773"
 
 
 @pytest.fixture(scope="module")
