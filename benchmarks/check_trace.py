@@ -21,7 +21,10 @@ jsonschema dependency — over every document a traced serve writes:
     the replayable raw ring with embedded digests;
   * the audit verdicts (schema ``ledger_report/v1`` from
     `InvariantLedger.report`): per-contract checks/violations with
-    internally-consistent totals.
+    internally-consistent totals, and the fault-plane contracts
+    (cancel / page-release / stall-liveness) must be known;
+  * the chaos script (schema ``faults/v1`` from `FaultPlan.as_doc`)
+    embedded in traces and event logs served under fault injection.
 
 Usage (exit 1 on any violation, so the CI step fails loudly):
 
@@ -39,6 +42,22 @@ import sys
 
 _PHASES = {"M", "X", "i", "C"}
 _SCALARS = (int, float, str, bool)
+
+# every span kind the tracer documents (obs/trace.py) — an event log
+# carrying anything else is from a different (or future) producer and
+# must fail loudly rather than validate by accident
+_EVENT_KINDS = {
+    "queued", "admitted", "token", "prefill_chunk", "finish",
+    "cancel", "deadline_miss", "escalate", "esc_wait", "esc_grant",
+    "esc_resolve", "recall", "deescalate", "rung_stall", "gear_switch",
+    "recal", "page_blocked", "counter",
+}
+
+# contracts every current ledger must know about; a report missing one
+# was produced by a pre-fault-plane audit and cannot vouch for a chaos
+# serve
+_REQUIRED_CONTRACTS = ("cancel_halts_stream", "cancel_releases_pages",
+                       "rung_stall_liveness")
 
 
 def _err(errors: list[str], where: str, msg: str) -> None:
@@ -112,6 +131,45 @@ def validate_trace(doc: dict) -> list[str]:
     other = doc.get("otherData")
     if not isinstance(other, dict) or "events_dropped" not in other:
         _err(errors, "trace", "otherData.events_dropped missing")
+    if isinstance(other, dict) and "faults" in other:
+        errors += validate_faults(other["faults"])
+    return errors
+
+
+def validate_faults(doc) -> list[str]:
+    """Structural checks on an embedded ``faults/v1`` plan block."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["faults: plan block is not a JSON object"]
+    if doc.get("schema") != "faults/v1":
+        _err(errors, "faults", f"schema {doc.get('schema')!r} != "
+             "'faults/v1'")
+    if not isinstance(doc.get("seed"), int):
+        _err(errors, "faults", f"bad seed {doc.get('seed')!r}")
+    for key in ("cancel_at", "deadline"):
+        m = doc.get(key, {})
+        if not isinstance(m, dict):
+            _err(errors, "faults", f"{key} is not a mapping")
+            continue
+        for rid, t in m.items():
+            if not (isinstance(rid, str) and rid.lstrip("-").isdigit()):
+                _err(errors, "faults", f"{key}: non-integer rid {rid!r}")
+            if not isinstance(t, (int, float)) or t < 0:
+                _err(errors, "faults", f"{key}[{rid}]: bad time {t!r}")
+    for i, w in enumerate(doc.get("stalls", ())):
+        if (not isinstance(w, list) or len(w) != 3
+                or not isinstance(w[0], int) or w[0] < 0
+                or not all(isinstance(x, (int, float)) for x in w[1:])
+                or w[1] >= w[2]):
+            _err(errors, "faults", f"stalls[{i}]: bad window {w!r} "
+                 "(want [model, t0, t1] with t0 < t1)")
+    for i, w in enumerate(doc.get("squeezes", ())):
+        if (not isinstance(w, list) or len(w) != 3
+                or not all(isinstance(x, (int, float)) for x in w[:2])
+                or w[0] >= w[1]
+                or not isinstance(w[2], int) or w[2] < 0):
+            _err(errors, "faults", f"squeezes[{i}]: bad window {w!r} "
+                 "(want [t0, t1, pages] with t0 < t1)")
     return errors
 
 
@@ -214,6 +272,10 @@ def validate_events(doc: dict) -> list[str]:
         _err(errors, "events", f"schema {doc.get('schema')!r} != "
              "'obs_trace/v1'")
     _check_event_dicts(errors, "events", doc.get("events"))
+    for i, ev in enumerate(doc.get("events") or ()):
+        kind = ev.get("kind") if isinstance(ev, dict) else None
+        if isinstance(kind, str) and kind and kind not in _EVENT_KINDS:
+            _err(errors, f"events[{i}]", f"unknown span kind {kind!r}")
     dropped = doc.get("events_dropped")
     if not isinstance(dropped, int) or dropped < 0:
         _err(errors, "events", f"bad events_dropped {dropped!r}")
@@ -221,6 +283,8 @@ def validate_events(doc: dict) -> list[str]:
         dig = doc.get(key)
         if not isinstance(dig, str) or len(dig) != 64:
             _err(errors, "events", f"{key} is not a sha256 hex digest")
+    if "faults" in doc:
+        errors += validate_faults(doc["faults"])
     return errors
 
 
@@ -235,6 +299,10 @@ def validate_ledger(doc: dict) -> list[str]:
     contracts = doc.get("contracts")
     if not isinstance(contracts, dict) or not contracts:
         return errors + ["ledger: contracts mapping missing or empty"]
+    for name in _REQUIRED_CONTRACTS:
+        if name not in contracts:
+            _err(errors, "ledger", f"contract {name!r} unknown to this "
+                 "ledger — report predates the fault plane")
     tally = 0
     for name, c in contracts.items():
         where = f"ledger.contracts[{name}]"

@@ -18,7 +18,7 @@ observability plane armed:
     Perfetto trace + metrics + ledger report + bundles) plus a
     ``soak_report/v1`` summary.
 
-Legs (each runs hours/3 of virtual time):
+Legs (virtual time is split evenly across the selected legs):
 
   * ``bursty_pagepressure`` — single-model sim serve, bursty arrivals,
     a real paged `KVPool` shrunk so admission blocks under bursts
@@ -27,7 +27,12 @@ Legs (each runs hours/3 of virtual time):
     ``recall`` residency, 30% head-overthink traces: constant
     escalate/grant/recall/de-escalate churn;
   * ``bursty_commit``       — the same cascade under ``commit``
-    residency: the walk-floor monotonicity contract is live.
+    residency: the walk-floor monotonicity contract is live;
+  * ``chaos_faults``        — the recall cascade under a scripted
+    `FaultPlan` (cancellation storm, deadline squeezes, rung stalls,
+    page squeezes) with the `DegradeGovernor`, deadline reaping and
+    KV reclamation armed; gates on zero leaked pages at exit and on
+    governor-on goodput strictly beating a governor-off re-serve.
 
 Usage:
 
@@ -155,12 +160,107 @@ def _leg_cascade(duration: float, seed: int, *, workload: str,
     return requests, serve, ledger_kwargs, None
 
 
+def _leg_chaos_faults(duration: float, seed: int):
+    """Cascade recall serve under a scripted `FaultPlan`: a
+    cancellation storm, per-request deadline squeezes, periodic
+    rung-1 stall windows and KV page squeezes — with the
+    `DegradeGovernor` demoting instead of failing, deadline
+    enforcement reaping expired lanes, and sliding-window page
+    reclamation armed.  Two extra gates ride the leg: the pool must
+    end the serve with ZERO pages in use, and governor-on goodput
+    must strictly beat a governor-off re-serve of the same stamped
+    workload."""
+    from repro.serving.cascade import CascadeSimStepper
+    from repro.serving.faults import DegradeGovernor, FaultPlan
+    casc, bank, bank_traces = _cascade_setup(seed)
+    name = "skip_recall"
+
+    def mk(sname, lam):
+        return strategy.make("skip_recall", casc, mode="cascade")
+
+    spec = WorkloadSpec(rate=2.0, duration=duration, prompt_len=8,
+                        max_tokens=(6, 22), seed=seed + 2, strategy=name)
+    requests = make_workload("bursty", spec)
+
+    # serve-borne chaos windows scale with the leg: rung-1 freezes
+    # roughly every quarter of the leg, page squeezes every third
+    stall_len = min(6.0, max(0.5, duration * 0.05))
+    stalls, t = [], duration * 0.15
+    while t < duration * 0.95:
+        stalls.append((1, round(t, 3), round(t + stall_len, 3)))
+        t += max(stall_len * 4, duration / 4)
+    squeeze_len = min(8.0, max(0.5, duration * 0.06))
+    squeezes, t = [], duration * 0.30
+    while t < duration * 0.95:
+        squeezes.append((round(t, 3), round(t + squeeze_len, 3), 2))
+        t += max(squeeze_len * 3, duration / 3)
+    plan = FaultPlan.generate(requests, seed=seed + 7,
+                              cancel_rate=0.15, cancel_after=(0.1, 1.5),
+                              deadline=(2.0, 6.0),
+                              stalls=stalls, squeezes=squeezes)
+    requests = plan.stamp(requests)
+
+    pool_box: dict = {}
+
+    def _serve(reqs, obs, governor):
+        strat_bank, sid_of = rt.build_bank(reqs, mk, (name, None))
+        pool = KVPool(n_lanes=3, page_size=4, lane_pages=8, n_pages=12,
+                      reclaim_watermark=0.6)
+        pool_box["pool"] = pool
+        stepper = CascadeSimStepper(bank, strat_bank, bank_traces,
+                                    overhead=0.002, policy="recall",
+                                    patience=3, chunk=16, pool=pool,
+                                    faults=plan, governor=governor)
+        server = rt.Server(stepper, rt.LaneScheduler(3), sid_of,
+                           slo=SLO, obs=obs, enforce_deadlines=True)
+        return server.serve(reqs)
+
+    def serve(reqs, obs):
+        gov = DegradeGovernor()
+        pool_box["governor"] = gov
+        return _serve(reqs, obs, gov)
+
+    def gates(summary) -> list[str]:
+        errs: list[str] = []
+        pool = pool_box.get("pool")
+        if pool is not None:
+            # drop cached prefixes, then demand a page-clean exit
+            pool.prefix.clear()
+            in_use = pool.pages_in_use
+            if in_use:
+                errs.append(f"{in_use} KV pages still in use at exit")
+            errs += [f"pool at exit: {m}"
+                     for m in pool.check_invariants()]
+        # degradation must PAY: same stamped workload, governor off.
+        # Strict improvement is demanded whenever the governor actually
+        # intervened; if it never denied, the two serves are identical
+        # and equality is the honest outcome.
+        base = Observability(tracer=_tracer(duration))
+        off = _serve(requests, base, None).summary(slo=SLO)
+        on_good, off_good = summary["goodput_tok_s"], \
+            off["goodput_tok_s"]
+        gov = pool_box.get("governor")
+        denied = gov.denied if gov is not None else 0
+        if denied > 0 and not on_good > off_good:
+            errs.append(f"governor denied {denied} escalations but "
+                        f"goodput {on_good:.3f} tok/s does not beat "
+                        f"governor-off {off_good:.3f}")
+        elif denied == 0 and not on_good >= off_good:
+            errs.append(f"governor idle yet goodput {on_good:.3f} "
+                        f"tok/s fell below governor-off {off_good:.3f}")
+        return errs
+
+    return (requests, serve, {}, None,
+            {"faults": plan, "gates": gates})
+
+
 LEGS = {
     "bursty_pagepressure": lambda d, s: _leg_bursty_pagepressure(d, s),
     "diurnal_escalation": lambda d, s: _leg_cascade(
         d, s, workload="diurnal", policy="recall"),
     "bursty_commit": lambda d, s: _leg_cascade(
         d, s, workload="bursty", policy="commit"),
+    "chaos_faults": lambda d, s: _leg_chaos_faults(d, s),
 }
 
 
@@ -170,7 +270,10 @@ LEGS = {
 
 def run_leg(leg: str, duration: float, seed: int,
             out_dir: str | None) -> dict:
-    requests, serve, ledger_kwargs, ceiling = LEGS[leg](duration, seed)
+    requests, serve, ledger_kwargs, ceiling, *rest = \
+        LEGS[leg](duration, seed)
+    extra = rest[0] if rest else {}
+    plan = extra.get("faults")
     t0 = time.time()
     ledger = InvariantLedger(out_dir=out_dir, **ledger_kwargs)
     flight = FlightRecorder(out_dir=out_dir,
@@ -182,7 +285,7 @@ def run_leg(leg: str, duration: float, seed: int,
     summary = metrics.summary(slo=SLO)
 
     rep = ledger.report()
-    doc = events_doc(obs.tracer)
+    doc = events_doc(obs.tracer, faults=plan)
 
     def reserve(reqs):
         fresh = Observability(tracer=_tracer(duration))
@@ -201,7 +304,7 @@ def run_leg(leg: str, duration: float, seed: int,
         with open(os.path.join(out_dir, "events.json"), "w") as f:
             json.dump(doc, f, default=float)
         write_trace(obs.tracer, os.path.join(out_dir, "trace.json"),
-                    title=f"soak:{leg}")
+                    title=f"soak:{leg}", faults=plan)
         with open(os.path.join(out_dir, "ledger.json"), "w") as f:
             json.dump(rep, f, indent=1, default=float)
         with open(os.path.join(out_dir, "metrics.json"), "w") as f:
@@ -219,12 +322,18 @@ def run_leg(leg: str, duration: float, seed: int,
                 bundle_errors += [f"{path}: {e}"
                                   for e in validate_bundle(json.load(f))]
 
+    gate_errors: list[str] = []
+    if "gates" in extra:
+        gate_errors = extra["gates"](summary)
+
     row = {
         "leg": leg,
         "duration_s": duration,
         "wall_s": round(wall, 2),
         "requests": len(requests),
         "completed": summary["completed"],
+        "cancelled": summary.get("cancelled", 0),
+        "timed_out": summary.get("timed_out", 0),
         "tokens": summary["tokens"],
         "events": obs.tracer.n_emitted,
         "events_dropped": obs.tracer.dropped,
@@ -238,10 +347,12 @@ def run_leg(leg: str, duration: float, seed: int,
         "span_digest": doc["span_digest"],
         "decision_digest": doc["decision_digest"],
         "artifact_errors": bundle_errors,
+        "gate_errors": gate_errors,
         "lossmap": lossmap,
     }
     ok = (rep["total_violations"] == 0 and res.ok
-          and not bundle_errors and obs.tracer.dropped == 0)
+          and not bundle_errors and not gate_errors
+          and obs.tracer.dropped == 0)
     row["ok"] = ok
     return row
 
@@ -274,8 +385,12 @@ def main() -> int:
               f"(seed {args.seed + 17 * i}) ...")
         row = run_leg(leg, per_leg, args.seed + 17 * i, out_dir)
         rows.append(row)
-        print(f"[{leg}] {row['completed']}/{row['requests']} requests, "
-              f"{row['tokens']} tokens, {row['events']} events "
+        reap = ""
+        if row["cancelled"] or row["timed_out"]:
+            reap = (f" ({row['cancelled']} cancelled, "
+                    f"{row['timed_out']} deadline-missed)")
+        print(f"[{leg}] {row['completed']}/{row['requests']} requests"
+              f"{reap}, {row['tokens']} tokens, {row['events']} events "
               f"({row['events_dropped']} dropped) "
               f"in {row['wall_s']:.1f}s wall")
         print(f"[{leg}] ledger: {row['ledger_checks']} checks, "
@@ -294,6 +409,8 @@ def main() -> int:
                   + (f" ({parts})" if parts else ""))
         for err in row["artifact_errors"]:
             print(f"[{leg}] ARTIFACT FAIL  {err}")
+        for err in row["gate_errors"]:
+            print(f"[{leg}] GATE FAIL  {err}")
         if not row["ok"]:
             print(f"[{leg}] FAILED")
 

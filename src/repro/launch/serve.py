@@ -148,10 +148,12 @@ def _build_obs(args, *, policy=None, boundaries=None,
 
 
 def _finish_obs(args, obs: Observability | None,
-                report: ServeReport) -> None:
+                report: ServeReport, *, faults=None) -> None:
     """Render the report, then the sinks: trace stats fold into the
     report first (so they land in the metrics snapshot too), then the
-    Perfetto trace and the registry snapshot, if asked for."""
+    Perfetto trace and the registry snapshot, if asked for.  A
+    `FaultPlan` the serve ran under is embedded in the trace/events
+    artifacts (``faults/v1``) so replay reproduces the chaos."""
     if obs is not None:
         report.add_trace(obs.tracer, obs.flight)
         if obs.ledger is not None:
@@ -161,14 +163,15 @@ def _finish_obs(args, obs: Observability | None,
                 obs.tracer.events, slo=args.slo_ms / 1e3))
     report.print()
     if obs is not None and args.trace_out:
-        write_trace(obs.tracer, args.trace_out)
+        write_trace(obs.tracer, args.trace_out, faults=faults)
         print(f"wrote Perfetto trace to {args.trace_out} "
               "(load in ui.perfetto.dev)")
     if args.metrics_out:
         report.registry.to_json(args.metrics_out)
         print(f"wrote metrics snapshot to {args.metrics_out}")
     if obs is not None and args.obs_dir:
-        write_events(obs.tracer, os.path.join(args.obs_dir, "events.json"))
+        write_events(obs.tracer, os.path.join(args.obs_dir, "events.json"),
+                     faults=faults)
         if obs.ledger is not None:
             with open(os.path.join(args.obs_dir, "ledger.json"), "w") as f:
                 json.dump(obs.ledger.report(), f, indent=1, default=float)
@@ -177,6 +180,53 @@ def _finish_obs(args, obs: Observability | None,
     if obs is not None and obs.flight is not None and obs.flight.bundles:
         print(f"flight recorder: {len(obs.flight.bundles)} anomaly "
               f"bundle(s) in {args.flight_recorder}")
+
+
+def _fault_plan(args, requests):
+    """The fault plane's launch wiring (DESIGN.md §14): load the
+    ``--faults`` chaos script and/or draw seeded per-request faults
+    from ``--deadline-ms`` / ``--cancel-rate``, then stamp the
+    request-borne faults onto the workload.  Returns ``(plan,
+    stamped_requests)``; ``(None, requests)`` when no fault flag is
+    set, keeping the default serve path byte-identical."""
+    from repro.serving.faults import FaultPlan
+    plan = None
+    if args.faults:
+        plan = FaultPlan.load(args.faults)
+    if args.cancel_rate or args.deadline_ms is not None:
+        gen = FaultPlan.generate(
+            requests, seed=args.seed + 7, cancel_rate=args.cancel_rate,
+            deadline=(args.deadline_ms / 1e3
+                      if args.deadline_ms is not None else None))
+        if plan is None:
+            plan = gen
+        else:
+            # a scripted plan wins per rid; flags fill the gaps
+            gen.cancel_at.update(plan.cancel_at)
+            gen.deadline.update(plan.deadline)
+            plan.cancel_at, plan.deadline = gen.cancel_at, gen.deadline
+    if plan is not None:
+        requests = plan.stamp(requests)
+    return plan, requests
+
+
+def _governor(args, plan):
+    """A `DegradeGovernor` when faults are active and not opted out."""
+    if plan is None or args.no_governor:
+        return None
+    from repro.serving.faults import DegradeGovernor
+    return DegradeGovernor()
+
+
+def _set_reclaim(args, *pools) -> None:
+    """Arm ``--kv-reclaim`` on every paged pool the stepper built."""
+    if args.kv_reclaim is None:
+        return
+    if not 0.0 < args.kv_reclaim <= 1.0:
+        raise SystemExit(f"--kv-reclaim {args.kv_reclaim} outside (0, 1]")
+    for pool in pools:
+        if pool is not None:
+            pool.reclaim_watermark = float(args.kv_reclaim)
 
 
 def _serve_batch(args, cfg, params, strat) -> None:
@@ -288,6 +338,7 @@ def _serve_cascade(args) -> None:
         return build_strategy(sname, casc, threshold=args.threshold,
                               patience=args.patience, lam=lam)
 
+    plan, requests = _fault_plan(args, requests)
     strat_bank, sid_of = rt.build_bank(requests, make_strategy,
                                        (name, None))
     stepper = CascadeEngineStepper(
@@ -298,12 +349,15 @@ def _serve_cascade(args) -> None:
                  if args.prefill_budget else None),
         pages=([args.pages] * len(cfgs) if args.pages else None),
         policy=args.escalate_policy, patience=args.escalate_patience,
-        paged_kernel=args.paged_kernel)
+        paged_kernel=args.paged_kernel,
+        faults=plan, governor=_governor(args, plan))
+    _set_reclaim(args, *(st.pool for st in stepper.steppers))
     slo = args.slo_ms / 1e3
     obs = _build_obs(args, policy=args.escalate_policy,
                      boundaries=casc.boundaries)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
-                       order=args.order, slo=slo, eos=args.eos, obs=obs)
+                       order=args.order, slo=slo, eos=args.eos, obs=obs,
+                       enforce_deadlines=bool(plan and plan.deadline))
     print(f"serving {len(requests)} {args.workload} requests "
           f"(rate {args.rate}/s x {args.duration}s) on a "
           f"{'->'.join(arch_names)} cascade "
@@ -320,7 +374,7 @@ def _serve_cascade(args) -> None:
                         steps=metrics.steps, n_seg=bank.n_total,
                         lane_steps=metrics.lane_steps)
     report.add_cascade(cs)
-    _finish_obs(args, obs, report)
+    _finish_obs(args, obs, report, faults=plan)
     if args.json:
         extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
                  "cascade": args.cascade,
@@ -415,6 +469,7 @@ def _serve_traffic(args, cfg, params, casc) -> None:
 
         bank, sid_of = rt.build_bank(requests, make_strategy,
                                      (name, None))
+    plan, requests = _fault_plan(args, requests)
     stepper = rt.EngineStepper(params, cfg, bank, n_lanes=args.lanes,
                                cache_len=args.cache_len,
                                prompt_len=args.prompt_len,
@@ -423,11 +478,17 @@ def _serve_traffic(args, cfg, params, casc) -> None:
                                paged_kernel=args.paged_kernel,
                                prefill_chunk=args.prefill_chunk,
                                prefill_budget=args.prefill_budget)
+    if plan is not None:
+        # single-model engine: request-borne faults plus page squeezes
+        # (the Server reads the plan off the stepper each step)
+        stepper.faults = plan
+    _set_reclaim(args, stepper.pool)
     slo = args.slo_ms / 1e3
     obs = _build_obs(args)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos,
-                       controller=controller, obs=obs)
+                       controller=controller, obs=obs,
+                       enforce_deadlines=bool(plan and plan.deadline))
     kv_desc = args.kv if args.kv == "ring" else (
         f"paged ({stepper.pool.n_pages} pages x {args.page_size} tokens)")
     if args.prefill_chunk:
@@ -454,7 +515,7 @@ def _serve_traffic(args, cfg, params, casc) -> None:
         report.add_pool(pool_stats)
     if args.prefill_chunk:
         report.add_chunked_prefill(stepper.chunk_stats)
-    _finish_obs(args, obs, report)
+    _finish_obs(args, obs, report, faults=plan)
     if args.json:
         extra = {"policy": name, "rate": args.rate, "lanes": args.lanes,
                  "kv": args.kv, "prefill_chunk": args.prefill_chunk}
@@ -591,6 +652,32 @@ def main() -> None:
     ap.add_argument("--profile-dir", default=None,
                     help="jax.profiler logdir captured around the "
                          "serve loop (kernel-level attribution)")
+    # fault plane (repro.serving.faults, DESIGN.md §14)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline budget from arrival: "
+                         "expired requests are reaped mid-stream "
+                         "(pages released, counted timed_out) and "
+                         "escalations the deadline cannot afford are "
+                         "denied by the degrade governor")
+    ap.add_argument("--cancel-rate", type=float, default=0.0,
+                    help="seeded per-request probability of a client "
+                         "cancellation shortly after arrival (chaos "
+                         "input; deterministic in --seed)")
+    ap.add_argument("--faults", default=None, metavar="PLAN.json",
+                    help="serve under a faults/v1 chaos script "
+                         "(FaultPlan.save): scripted cancellations, "
+                         "deadlines, rung-stall windows and KV page "
+                         "squeezes")
+    ap.add_argument("--kv-reclaim", type=float, default=None,
+                    metavar="FRAC",
+                    help="paged-KV occupancy watermark in (0,1]: above "
+                         "it admission pressure clips attention history "
+                         "off the longest lanes (sliding-window "
+                         "reclamation) instead of refusing admission")
+    ap.add_argument("--no-governor", action="store_true",
+                    help="serve faults WITHOUT the degrade governor "
+                         "(escalations park past their deadlines; the "
+                         "chaos baseline the governor is gated against)")
     args = ap.parse_args()
     if args.lanes is None:
         args.lanes = args.batch

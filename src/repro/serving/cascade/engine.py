@@ -99,7 +99,8 @@ class CascadeEngineStepper:
                  cache_len: int, prompt_len: int, page_size: int = 16,
                  chunk: int = 8, budgets=None, pages=None,
                  policy: str = "recall", patience: int = 4,
-                 paged_kernel: bool = False, jit: bool = True):
+                 paged_kernel: bool = False, jit: bool = True,
+                 faults=None, governor=None):
         if any(sp.cfg is None or sp.params is None for sp in bank.specs):
             raise ValueError("CascadeEngineStepper needs real cfg+params "
                              "on every ModelSpec (sim specs drive "
@@ -117,6 +118,10 @@ class CascadeEngineStepper:
                     "root; use --escalate-policy recall")
         self.bank = bank
         self.strategies = strategies
+        # fault plane (DESIGN.md §14): scripted chaos + degrade governor
+        self.faults = faults
+        self.fault_now = 0.0
+        self.governor = governor
         self.n_lanes = bank[0].n_lanes        # Server request slots
         self.full_depth = bank.n_total
         self.prompt_len = int(prompt_len)
@@ -192,6 +197,18 @@ class CascadeEngineStepper:
             else:
                 self.steppers[m].release(self._rung_lane(slot, m))
                 self.esc.release(slot, m)
+        # granted-but-unresolved deep lanes are NOT in the resident set
+        # (catch-up still in flight, or parked in page_wait before the
+        # rung stepper ever admitted them) — free them too, or a reaped
+        # slot leaks the rung's lane and its catch-up pages
+        waiting = {(w[0], w[1]) for w in self.page_wait}
+        for m in range(1, len(self.bank)):
+            lane = self.esc.lane_of(slot, m)
+            if lane is None:
+                continue
+            if (slot, m) not in waiting:
+                self.steppers[m].release(lane)
+            self.esc.release(slot, m)
         self.esc.cancel(slot)
         self.page_wait = [w for w in self.page_wait if w[0] != slot]
         self.ready.discard(slot)
@@ -556,11 +573,28 @@ class CascadeEngineStepper:
     def _next_targets(self, slot: int, probed_models) -> list[int]:
         """The walk is active past the deepest rung it ran: the next
         ladder rung is the escalation target (rung-by-rung; a still-
-        deeper need surfaces after that rung's own step)."""
+        deeper need surfaces after that rung's own step).  With a
+        `DegradeGovernor` attached, a denied escalation returns no
+        targets — the slot then serves the walk's resident-depth
+        answer through the normal emit path (the same legal serve the
+        last rung uses), instead of parking past its deadline."""
         deepest = max(probed_models)
         if deepest + 1 >= len(self.bank):
             return []        # past the last head: nothing deeper exists
-        return self.router.escalation_targets(slot, [deepest + 1])
+        targets = self.router.escalation_targets(slot, [deepest + 1])
+        if targets and self.governor is not None:
+            req = self.lane_req[slot]
+            need = max(0, len(self.history[slot]) - 1)
+            cost = sum(need * self.bank[m].prefill_tok_time
+                       for m in targets)
+            stalled = self.faults is not None and any(
+                self.faults.stall_active(m, self.fault_now)
+                for m in targets)
+            if not self.governor.allow_escalation(
+                    now=self.fault_now, deadline=req.deadline,
+                    catchup_cost=cost, stalled=stalled):
+                return []
+        return targets
 
     def cascade_stats(self) -> dict:
         # deeper rungs only ever chunk-prefill catch-ups, so their chunk
@@ -576,4 +610,6 @@ class CascadeEngineStepper:
                         for sp, st in zip(self.bank.specs, self.steppers)}
         out["chunks"] = {sp.name: dict(st.chunk_stats)
                         for sp, st in zip(self.bank.specs, self.steppers)}
+        if self.governor is not None:
+            out.update(self.governor.stats())
         return out

@@ -131,14 +131,16 @@ class EscalationScheduler:
                                   self.lanes_in_use(m))
         return lane
 
-    def grants(self) -> list[tuple[int, int, int]]:
+    def grants(self, skip=()) -> list[tuple[int, int, int]]:
         """Serve waiters whose rung has a free lane now; returns
-        ``(slot, model, lane)`` in FIFO order."""
+        ``(slot, model, lane)`` in FIFO order.  Waiters on a rung in
+        ``skip`` (e.g. one frozen by a fault-plan stall window) stay
+        queued in place — their FIFO position survives the window."""
         out = []
         still = collections.deque()
         while self._wait:
             slot, m = self._wait.popleft()
-            if self._can_grant(m):
+            if m not in skip and self._can_grant(m):
                 out.append((slot, m, self._grant(slot, m)))
             else:
                 still.append((slot, m))

@@ -127,16 +127,23 @@ class CascadeSimStepper:
     tracer = None
     last_loss = None
     last_escalated = None
+    # fault plane (DESIGN.md §14): the server stamps its virtual clock
+    # here each iteration when a FaultPlan rides the stepper
+    fault_now = 0.0
 
     def __init__(self, bank: ModelBank, strategies: tuple, trace_bank, *,
                  overhead: float = 0.25, policy: str = "recall",
                  patience: int = 4, chunk: int = 16, budgets=None,
-                 pool=None):
+                 pool=None, faults=None, governor=None):
         # optional rung-0 paged-KV admission gate (DESIGN.md §13): the
         # same host-side `KVPool` bookkeeping the single-model sim can
         # carry — the soak harness shrinks it to put the cascade under
         # genuine page pressure while the invariant ledger audits it
         self.pool = pool
+        # fault plane: scripted chaos windows + the degrade governor
+        # that turns deadline pressure into demotion (DESIGN.md §14)
+        self.faults = faults
+        self.governor = governor
         self.bank = bank
         self.strategies = strategies
         self.traces = np.asarray(trace_bank, np.float32)
@@ -201,6 +208,7 @@ class CascadeSimStepper:
         # slot -> {model: the catch-up's full length} (planner buckets)
         self.catchup_total: dict[int, dict[int, int]] = {}
         self.stats = CascadeStats(len(self.bank))
+        self._stall_seen: set = set()   # (model, window-start) emitted
 
     def warmup(self) -> None:
         self._decide(self.bank_arrays(),
@@ -228,8 +236,14 @@ class CascadeSimStepper:
     def release(self, slot: int) -> None:
         if self.pool is not None:
             self.pool.release(slot)
-        for m in self.router.release(slot):
-            if m >= 1:
+        self.router.release(slot)
+        # free EVERY granted deep lane, resident or not: a reaped slot
+        # may hold lanes granted to escalation targets that never
+        # became resident (catch-up unfinished) — the router's resident
+        # set alone would leak those (the fault plane's lane audit
+        # caught exactly this)
+        for m in range(1, len(self.bank)):
+            if self.esc.lane_of(slot, m) is not None:
                 self.esc.release(slot, m)
         self.esc.cancel(slot)
         self.catchup.pop(slot, None)
@@ -263,6 +277,43 @@ class CascadeSimStepper:
         cu = self.catchup.get(slot, {})
         return all(m in cu and cu[m] == 0 for m in tr.pending["targets"])
 
+    def _demoted_node(self, slot: int, probed, resident, probes,
+                      losses, floor: int) -> int:
+        """Denied escalation: the best (lowest-loss) node the walk
+        actually observed on a RESIDENT rung this token.  The walk
+        stops early on the node line instead of crossing to the target
+        model — a legal T-Tamer stop, paid for with recall."""
+        cand = []
+        for m in probed:
+            if m not in resident:
+                continue
+            start = max(self.bank.offset(m), floor)
+            cand.extend(range(start, start + int(probes[m, slot])))
+        if not cand:
+            # degenerate (no observed resident probes): the floor node
+            return int(floor)
+        return min(cand, key=lambda n: float(losses[slot, n]))
+
+    def _note_stall(self, model: int) -> None:
+        """Emit one `rung_stall` span per scripted window edge."""
+        win = self.faults.stall_window(model, self.fault_now)
+        if win is None or (model, win[0]) in self._stall_seen:
+            return
+        self._stall_seen.add((model, win[0]))
+        if self.tracer is not None:
+            self.tracer.emit("rung_stall", model=model,
+                             t0=round(win[0], 9), until=round(win[1], 9))
+
+    def _stalled_models(self) -> set:
+        if self.faults is None:
+            return set()
+        out = set()
+        for m in range(len(self.bank)):
+            if self.faults.stall_active(m, self.fault_now):
+                out.add(m)
+                self._note_stall(m)
+        return out
+
     def step(self, occupied: np.ndarray, sid: np.ndarray):
         """Returns ``(emitted, served, seg_batch, seg_policy, cost,
         emit_mask)`` — the SimStepper contract; ``emitted`` carries the
@@ -278,9 +329,15 @@ class CascadeSimStepper:
         if otr is not None:
             self.last_loss = np.full(self.n_lanes, np.nan)
             self.last_escalated = np.zeros(self.n_lanes, bool)
+        # fault plane: rungs frozen by a scripted stall window do no
+        # work this step — no grants, no prefill, no catch-up, no
+        # decode on their lanes.  The clock still advances (cost >=
+        # overhead), so a finite window always passes.
+        stalled = self._stalled_models()
 
-        # 0. lanes freed since last step go to FIFO waiters
-        for slot, m, _lane in self.esc.grants():
+        # 0. lanes freed since last step go to FIFO waiters (waiters on
+        #    a stalled rung hold their FIFO position)
+        for slot, m, _lane in self.esc.grants(skip=stalled):
             self._start_catchup(slot, m)
             if otr is not None:
                 otr.emit("esc_grant", rid=self.lane_req[slot].rid,
@@ -289,7 +346,7 @@ class CascadeSimStepper:
         # 1. initial model-0 admission prefill (chunked, budgeted)
         prefilling = occupied & (self.prefill0 > 0)
         emit &= ~prefilling
-        if prefilling.any():
+        if prefilling.any() and 0 not in stalled:
             widths = self.esc.plan_catchup(0, {
                 int(s): (int(self.prefill0[s]),
                          len(self.lane_req[s].prompt))
@@ -305,6 +362,8 @@ class CascadeSimStepper:
 
         # 2. escalation catch-up chunks, per target model, budgeted
         for m in range(1, m_count):
+            if m in stalled:
+                continue
             lanes = {slot: (cu[m], self.catchup_total[slot][m])
                      for slot, cu in self.catchup.items()
                      if occupied[slot] and cu.get(m, 0) > 0}
@@ -323,9 +382,17 @@ class CascadeSimStepper:
         #    target-model probes stashed in its handoff
         resolved = set()
         for slot in range(self.n_lanes):
-            if not occupied[slot] or not self._escalation_ready(slot):
-                if (occupied[slot] and self.router.slots[slot] is not None
-                        and self.router.slots[slot].pending is not None):
+            pend = (occupied[slot]
+                    and self.router.slots[slot] is not None
+                    and self.router.slots[slot].pending is not None)
+            # a ready escalation whose target rung is stalled cannot
+            # resolve this step — it stays silent until the window ends
+            target_stalled = pend and stalled and any(
+                m in stalled
+                for m in self.router.slots[slot].pending["targets"])
+            if (not occupied[slot] or not self._escalation_ready(slot)
+                    or target_stalled):
+                if pend:
                     emit[slot] = False      # escalating: silent
                 continue
             tr = self.router.slots[slot]
@@ -372,6 +439,15 @@ class CascadeSimStepper:
         # 4. the walk for every normally decoding slot (one batched,
         #    jitted fold over the combined ladder)
         decode = [s for s in np.flatnonzero(emit) if s not in resolved]
+        if stalled and decode:
+            # a slot whose resident rung is frozen decodes nothing —
+            # its row is not consumed, so the decision stream is
+            # untouched by where the stall landed
+            frozen = [s for s in decode
+                      if set(self.router.resident(s)) & stalled]
+            for s in frozen:
+                emit[s] = False
+            decode = [s for s in decode if s not in frozen]
         if decode:
             losses = np.zeros((self.n_lanes, self.bank.n_total),
                               np.float32)
@@ -399,7 +475,24 @@ class CascadeSimStepper:
                 for m in probed:
                     if m in resident:
                         probes_paid[m] += int(probes[m, slot])
-                if targets:
+                denied = False
+                if targets and self.governor is not None:
+                    # degrade governor (DESIGN.md §14): deny the
+                    # escalation when the targets' catch-up prefill
+                    # cannot fit the request's remaining deadline
+                    # budget, or when a target rung is frozen by a
+                    # stall window — the slot serves its best shallow
+                    # (recalled) answer instead of parking
+                    req = self.lane_req[slot]
+                    cost = sum(
+                        self.router.catchup_need(slot, m, lp)
+                        * self.bank[m].prefill_tok_time
+                        for m in targets)
+                    denied = not self.governor.allow_escalation(
+                        now=self.fault_now, deadline=req.deadline,
+                        catchup_cost=cost,
+                        stalled=any(m in stalled for m in targets))
+                if targets and not denied:
                     # the token cannot finish on the resident rungs:
                     # stash the handoff, request deeper lanes, go silent
                     emit[slot] = False
@@ -427,14 +520,31 @@ class CascadeSimStepper:
                                     lane=slot, model=m)
                 else:
                     sv = int(served[slot])
-                    served_out[slot] = sv
+                    if denied:
+                        # demotion: serve the best node the walk
+                        # actually OBSERVED on a resident rung — a
+                        # legal earlier stop on the node line (recall),
+                        # not a fabricated answer
+                        sv = self._demoted_node(slot, probed, resident,
+                                                probes, losses,
+                                                int(floor[slot]))
+                        served_out[slot] = sv
+                        deepest = max((m for m in probed
+                                       if m in resident), default=0)
+                    else:
+                        served_out[slot] = sv
+                        deepest = max(probed) if probed else 0
                     sm = self.bank.model_of(sv)
-                    deepest = max(probed) if probed else 0
                     self.stats.on_served(sm, deepest,
                                          loss=float(losses[slot, sv]))
                     if otr is not None:
                         self.last_loss[slot] = float(losses[slot, sv])
-                        if deepest > sm:
+                        if denied:
+                            otr.emit("recall",
+                                    rid=self.lane_req[slot].rid,
+                                    lane=slot, model=sm, node=sv,
+                                    deepest=deepest, denied=True)
+                        elif deepest > sm:
                             otr.emit("recall",
                                     rid=self.lane_req[slot].rid,
                                     lane=slot, model=sm, node=sv,
@@ -470,4 +580,6 @@ class CascadeSimStepper:
         out["models"] = [s.name for s in self.bank.specs]
         out["peak_lanes"] = {f"m{m}": v
                              for m, v in self.esc.peak_in_use.items()}
+        if self.governor is not None:
+            out.update(self.governor.stats())
         return out

@@ -1,0 +1,16 @@
+"""Fault-tolerance plane: deterministic chaos scripts and graceful
+degradation (DESIGN.md §14).
+
+`FaultPlan` scripts request cancellations, deadline squeezes, rung-stall
+windows, and page-pressure events as a pure function of a seed — every
+fault lands at a scripted virtual time, so a faulted serve replays
+bit-identically.  `DegradeGovernor` turns deadline pressure into
+demotion instead of failure: escalations whose catch-up cost cannot fit
+the remaining budget are denied and the small rung's recalled answer is
+served instead.
+"""
+
+from repro.serving.faults.governor import DegradeGovernor
+from repro.serving.faults.plan import FaultPlan
+
+__all__ = ["FaultPlan", "DegradeGovernor"]

@@ -75,12 +75,25 @@ class KVPool:
     def __init__(self, *, n_lanes: int, page_size: int, lane_pages: int,
                  n_pages: int | None = None,
                  max_lane_pages: int | None = None,
-                 model_key: str | None = None):
+                 model_key: str | None = None,
+                 reclaim_watermark: float | None = None):
         if page_size < 1 or lane_pages < 1:
             raise ValueError("page_size and lane_pages must be >= 1")
+        if reclaim_watermark is not None and not 0.0 < reclaim_watermark <= 1.0:
+            raise ValueError(
+                f"reclaim_watermark must be in (0, 1], got "
+                f"{reclaim_watermark}")
         self.n_lanes = int(n_lanes)
         self.page_size = int(page_size)
         self.lane_pages = int(lane_pages)
+        # sliding-window reclamation (DESIGN.md §14): above this
+        # occupancy fraction an admission short on headroom may CLIP the
+        # oldest sole-owner page off the longest lane — trading that
+        # lane's attention history for admission instead of refusing it.
+        # None disables (engine mode: device page-table positions assume
+        # an unclipped table).
+        self.reclaim_watermark = (None if reclaim_watermark is None
+                                  else float(reclaim_watermark))
         # the device page-table WIDTH (static shape): admission reserves
         # against `lane_pages`, but `grow` may extend a lane's budget in
         # page-aligned increments up to this hard capacity — the knob
@@ -118,6 +131,13 @@ class KVPool:
         # admissions refused for lack of headroom — the page-exhaustion
         # signal the observability flight recorder triggers on
         self.reserve_failures = 0
+        # fault plane (DESIGN.md §14): pages clipped off each lane's
+        # front by sliding-window reclamation (positions shift by
+        # clipped * page_size), plus the chaos harness's page squeeze —
+        # pages withheld from headroom while a pressure window is active
+        self.clipped = np.zeros(self.n_lanes, np.int32)
+        self.reclaimed_pages = 0
+        self.squeezed = 0
 
     # ------------------------------------------------------------------
     # admission
@@ -146,9 +166,17 @@ class KVPool:
         return total - n_tok // self.page_size + contested, pages
 
     def _headroom(self) -> int:
-        """Pages neither allocated, lane-reserved, nor pending-reserved."""
+        """Pages neither allocated, lane-reserved, pending-reserved,
+        nor withheld by an active pressure squeeze."""
         return (self.allocator.free_count - int(self.budget.sum())
-                - sum(need for need, _ in self._pending))
+                - sum(need for need, _ in self._pending)
+                - self.squeezed)
+
+    def set_squeeze(self, pages: int) -> None:
+        """Withhold ``pages`` from admission headroom (chaos page
+        pressure).  Squeezes only gate NEW reservations — budgets
+        already granted keep the never-fail-mid-stream guarantee."""
+        self.squeezed = max(0, int(pages))
 
     def reserve(self, prompt, max_tokens: int) -> bool:
         """The admission gate: reserve the request's worst-case page need
@@ -172,12 +200,64 @@ class KVPool:
             self.prefix.evict(need - self._headroom(),
                               pinned=self._pinned)
         if need > self._headroom():
+            # degradation ladder's last rung before refusing: clip
+            # attention history off the longest lanes (DESIGN.md §14)
+            self._reclaim(need - self._headroom())
+        if need > self._headroom():
             self._pinned.subtract(match)
             self._pinned = +self._pinned        # drop zero counts
             self.reserve_failures += 1
             return False
         self._pending.append((need, tuple(match)))
         return True
+
+    # ------------------------------------------------------------------
+    # sliding-window reclamation (DESIGN.md §14)
+    # ------------------------------------------------------------------
+
+    def _occupancy(self) -> float:
+        return self.allocator.pages_in_use / max(1, self.n_pages - 1)
+
+    def _clip_candidate(self, lane: int) -> bool:
+        """A lane may lose its head page only when that page is pure
+        private history: the lane alone references it (so it is neither
+        a prefix-cache chain nor pinned by a pending reservation) and
+        the lane has at least one more page behind it — the tail being
+        written is never clipped."""
+        if self.n_held[lane] < 2:
+            return False
+        head = int(self.table[lane, 0])
+        if head == GARBAGE_PAGE or self._pinned.get(head, 0):
+            return False
+        return self.allocator.refcount(head) == 1
+
+    def _reclaim(self, need_pages: int) -> int:
+        """Clip up to ``need_pages`` oldest sole-owner pages off the
+        longest lanes while occupancy sits above the watermark.  Each
+        clip shifts the victim's page table left one slot and frees the
+        head page — the lane keeps decoding with a shorter attention
+        window (``clipped[lane]`` records the shift so position math
+        stays exact).  Returns pages actually reclaimed."""
+        if self.reclaim_watermark is None:
+            return 0
+        got = 0
+        while got < need_pages and self._occupancy() > self.reclaim_watermark:
+            live = self.seq_len - self.clipped * self.page_size
+            order = sorted(range(self.n_lanes),
+                           key=lambda ln: (-int(live[ln]), ln))
+            victim = next((ln for ln in order
+                           if self._clip_candidate(ln)), None)
+            if victim is None:
+                break
+            head = int(self.table[victim, 0])
+            self.allocator.decref(head)           # sole ref: page freed
+            self.table[victim, :-1] = self.table[victim, 1:]
+            self.table[victim, -1] = GARBAGE_PAGE
+            self.n_held[victim] -= 1
+            self.clipped[victim] += 1
+            self.reclaimed_pages += 1
+            got += 1
+        return got
 
     def admit(self, lane: int, prompt, max_tokens: int, *,
               register_prefix: bool = True) -> AdmitPlan:
@@ -219,6 +299,7 @@ class KVPool:
         row[:len(pages)] = pages
         self.n_held[lane] = len(pages)
         self.seq_len[lane] = lp
+        self.clipped[lane] = 0
 
         # per-token scatter targets; shared tokens go to the sink
         tok = np.arange(lp, dtype=np.int32)
@@ -275,7 +356,9 @@ class KVPool:
         for lane in np.flatnonzero(occupied):
             pos = int(self.seq_len[lane])
             slot = pos % self.page_size
-            pidx = pos // self.page_size
+            # physical table index: reclamation shifts the table left,
+            # so clipped pages no longer occupy slots
+            pidx = pos // self.page_size - int(self.clipped[lane])
             if pidx >= self.max_lane_pages:
                 raise PoolExhausted(
                     f"lane {lane} exceeded its page table "
@@ -323,7 +406,7 @@ class KVPool:
         including the lane in a step and defer it when growth fails
         (the never-fail-mid-stream guarantee, kept incrementally)."""
         pos = int(self.seq_len[lane])
-        pidx = pos // self.page_size
+        pidx = pos // self.page_size - int(self.clipped[lane])
         if pidx >= self.max_lane_pages:
             return False
         need = 0
@@ -336,8 +419,8 @@ class KVPool:
     def tokens_headroom(self, lane: int) -> int:
         """Tokens the lane can still append WITHOUT another `grow`:
         slack in its held pages plus its reserved (budgeted) pages."""
-        cap = (int(self.n_held[lane]) + int(self.budget[lane])) \
-            * self.page_size
+        cap = (int(self.clipped[lane]) + int(self.n_held[lane])
+               + int(self.budget[lane])) * self.page_size
         return cap - int(self.seq_len[lane])
 
     def grow(self, lane: int, extra_tokens: int) -> bool:
@@ -384,6 +467,7 @@ class KVPool:
         self.n_held[lane] = 0
         self.seq_len[lane] = 0
         self.budget[lane] = 0
+        self.clipped[lane] = 0
 
     # ------------------------------------------------------------------
 
@@ -462,4 +546,6 @@ class KVPool:
             "evictions": pf.evictions,
             "grows": self.grows,
             "reserve_failures": self.reserve_failures,
+            "reclaimed_pages": self.reclaimed_pages,
+            "squeezed_pages": self.squeezed,
         }

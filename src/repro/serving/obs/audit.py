@@ -32,6 +32,19 @@ Contracts (each reports ``checks`` / ``violations`` and a verdict):
   * ``admission_never_drop`` — the T-Tamer admission guarantee: queue,
     never drop.  At finalize every queued rid must have been admitted
     and finished — a page-blocked request may wait, but must land.
+  * ``cancel_halts_stream`` — a reaped rid (``cancel`` /
+    ``deadline_miss``) emits NOTHING afterwards: no tokens, no prefill
+    chunks, no escalation grants.  A late emission means the server
+    reaped the bookkeeping but left the lane running.
+  * ``cancel_releases_pages`` — at the reap event of a lane-holding
+    request, the pool shows zero pages and zero budget on that lane
+    (the server releases BEFORE emitting, so the probe reads the
+    post-teardown state; COW-shared prefix pages survive via their
+    cache refs, which is the point).
+  * ``rung_stall_liveness`` — an escalation whose window overlaps a
+    scripted ``rung_stall`` may take the stall's duration extra, but
+    no more: the stall allowance is added to the horizon, and
+    exceeding even that is a deadlocked waiter, not a slow one.
 
 Verdicts are ``pass`` / ``violated`` / ``unverifiable``.  The live
 listener sees every emit regardless of ring evictions, so live verdicts
@@ -63,6 +76,9 @@ CONTRACTS = (
     "walk_floor_monotonic",
     "ttft_exactly_once",
     "admission_never_drop",
+    "cancel_halts_stream",
+    "cancel_releases_pages",
+    "rung_stall_liveness",
 )
 
 _ESC_CLEARS = {"esc_resolve", "recall", "deescalate", "finish"}
@@ -116,6 +132,9 @@ class InvariantLedger:
         self._floor: dict[int, int] = {}          # rid -> deepest model rung
         self._counters = 0
         self._t_last = 0.0
+        # fault plane (DESIGN.md §14)
+        self._reaped: set[int] = set()            # cancelled / expired rids
+        self._stalls: list[tuple[int, float, float]] = []  # (model, t0, t1)
 
     # ------------------------------------------------------------ wiring
     def bind(self, tracer: SpanTracer, *, pool=None) -> None:
@@ -142,6 +161,14 @@ class InvariantLedger:
         self.events_seen += 1
         self._t_last = max(self._t_last, ev.t)
         kind = ev.kind
+        if (ev.rid >= 0 and self._reaped and ev.rid in self._reaped
+                and kind in ("token", "prefill_chunk", "escalate",
+                             "esc_wait", "esc_grant", "esc_resolve",
+                             "recall", "finish")):
+            self._violate("cancel_halts_stream", ev,
+                          f"rid {ev.rid} emitted {kind} after being "
+                          f"reaped")
+            return   # a phantom emission must not feed other contracts
         if kind == "queued":
             self._queued.add(ev.rid)
         elif kind == "admitted":
@@ -208,6 +235,14 @@ class InvariantLedger:
                 key = (ev.rid, ev.model)
                 if key in self._esc_open:
                     self._close_escalation(key, ev.t)
+        elif kind in ("cancel", "deadline_miss"):
+            self._reap(ev)
+        elif kind == "rung_stall":
+            d = dict(ev.data)
+            self.checks["rung_stall_liveness"] += 1
+            self._stalls.append((int(ev.model),
+                                 float(d.get("t0", ev.t)),
+                                 float(d.get("until", ev.t))))
         elif kind == "counter":
             self._counters += 1
             d = dict(ev.data)
@@ -223,28 +258,76 @@ class InvariantLedger:
                 for msg in self.pool.check_invariants():
                     self._violate("page_conservation", ev, msg)
         # horizon sweep piggybacks on every event's timestamp — same
-        # no-timer-thread idiom as the flight recorder's stuck waiter
+        # no-timer-thread idiom as the flight recorder's stuck waiter.
+        # An escalation whose window overlaps a scripted rung stall
+        # gets the stall's duration as extra allowance; exceeding even
+        # that is a DEADLOCKED waiter (the rung-stall contract), while
+        # exceeding the plain horizon with no stall in sight stays an
+        # escalation-resolves break.
         if self._esc_open:
             key, t0 = min(self._esc_open.items(), key=lambda kv: kv[1])
-            if ev.t - t0 > self.horizon:
+            allow = self._stall_allowance(key[1], t0, ev.t)
+            if ev.t - t0 > self.horizon + allow:
                 del self._esc_open[key]
                 rid, model = key
+                contract = ("rung_stall_liveness" if allow > 0
+                            else "escalation_resolves")
                 self._violate(
-                    "escalation_resolves",
+                    contract,
                     Event(ev.t, "escalate", rid, -1, model),
                     f"rid {rid} escalation to model {model} unresolved "
-                    f"after {ev.t - t0:.3f}s (horizon {self.horizon}s)")
+                    f"after {ev.t - t0:.3f}s (horizon {self.horizon}s"
+                    f" + stall allowance {allow:.3f}s)")
+
+    def _stall_allowance(self, model: int, t0: float, t1: float) -> float:
+        """Scripted stall time of ``model`` inside ``[t0, t1]``."""
+        total = 0.0
+        for m, s0, s1 in self._stalls:
+            if m == model:
+                total += max(0.0, min(t1, s1) - max(t0, s0))
+        return total
+
+    def _reap(self, ev: Event) -> None:
+        """Fold a ``cancel`` / ``deadline_miss`` event: the rid is
+        terminal — its open escalations close (the reap freed the deep
+        lanes), its lane/queue state drops WITHOUT the finish-path
+        violations (a reaped request is legally never finished), and
+        with a bound pool the lane must already be page-clean."""
+        rid = ev.rid
+        self.checks["cancel_halts_stream"] += 1
+        self._reaped.add(rid)
+        for key in [k for k in self._esc_open if k[0] == rid]:
+            del self._esc_open[key]
+        self._queued.discard(rid)
+        lane = self._admitted.pop(rid, None)
+        if lane is not None and self._lane_rid.get(lane) == rid:
+            del self._lane_rid[lane]
+        self._tokens.pop(rid, None)
+        self._ttft_seen.discard(rid)
+        self._floor.pop(rid, None)
+        if ev.lane >= 0 and self.pool is not None:
+            self.checks["cancel_releases_pages"] += 1
+            held = int(self.pool.n_held[ev.lane])
+            budget = int(self.pool.budget[ev.lane])
+            if held or budget:
+                self._violate(
+                    "cancel_releases_pages", ev,
+                    f"rid {rid} reaped off lane {ev.lane} but the lane "
+                    f"still holds {held} pages / {budget} budget")
 
     def _close_escalation(self, key: tuple[int, int], t: float) -> None:
         t0 = self._esc_open.pop(key)
-        self.checks["escalation_resolves"] += 1
-        if t - t0 > self.horizon:
-            rid, model = key
+        rid, model = key
+        allow = self._stall_allowance(model, t0, t)
+        contract = ("rung_stall_liveness" if allow > 0
+                    else "escalation_resolves")
+        self.checks[contract] += 1
+        if t - t0 > self.horizon + allow:
             self._violate(
-                "escalation_resolves", Event(t, "esc_resolve", rid, -1,
-                                             model),
+                contract, Event(t, "esc_resolve", rid, -1, model),
                 f"rid {rid} escalation to model {model} resolved only "
-                f"after {t - t0:.3f}s (horizon {self.horizon}s)")
+                f"after {t - t0:.3f}s (horizon {self.horizon}s"
+                f" + stall allowance {allow:.3f}s)")
 
     def _finish(self, ev: Event) -> None:
         self.checks["lane_conservation"] += 1

@@ -29,9 +29,10 @@ from repro.serving.obs.trace import Event
 __all__ = ["to_perfetto", "write_trace", "events_doc", "write_events",
            "profiler_capture"]
 
-_LANE_KINDS = {"token", "prefill_chunk", "admitted", "finish"}
+_LANE_KINDS = {"token", "prefill_chunk", "admitted", "finish",
+               "cancel", "deadline_miss"}
 _MODEL_KINDS = {"escalate", "esc_wait", "esc_grant", "esc_resolve",
-                "recall", "deescalate"}
+                "recall", "deescalate", "rung_stall"}
 
 
 def _us(t: float) -> float:
@@ -67,15 +68,21 @@ def to_perfetto(events: Iterable[Event], *,
             # Exact arrival stamp: the instant's ``ts`` is µs-rounded,
             # but replay (obs/replay.py) needs the raw serve-clock float.
             args["t_s"] = ev.t
-        if ev.kind == "finish":
+        if ev.kind in ("finish", "cancel", "deadline_miss"):
+            # every terminal kind closes the admit->end request span;
+            # a reaped request renders with its terminal kind suffixed
             start = admit_at.pop(ev.rid, None)
             if start is not None:
                 t0, lane = start
-                out.append({"ph": "X", "name": f"req {ev.rid}",
+                name = (f"req {ev.rid}" if ev.kind == "finish"
+                        else f"req {ev.rid} ({ev.kind})")
+                out.append({"ph": "X", "name": name,
                             "cat": "request", "pid": 0, "tid": lane,
                             "ts": _us(t0), "dur": _us(ev.t - t0),
                             "args": args})
-            continue
+            if ev.kind == "finish":
+                continue
+            # cancel / deadline_miss keep their instant marker too
         if ev.kind == "counter":
             for k, v in d.items():
                 if isinstance(v, (int, float)):
@@ -117,23 +124,27 @@ def to_perfetto(events: Iterable[Event], *,
 
 
 def write_trace(tracer, path: str, *, title: str = "t-tamer serve",
-                ) -> dict[str, Any]:
+                faults=None) -> dict[str, Any]:
     doc = to_perfetto(tracer.events, title=title)
     doc["otherData"]["events_dropped"] = tracer.dropped
     doc["otherData"]["span_digest"] = tracer.span_digest()
     doc["otherData"]["decision_digest"] = tracer.decision_digest()
+    if faults is not None:
+        doc["otherData"]["faults"] = faults.as_doc()
     with open(path, "w") as f:
         json.dump(doc, f, default=float)
     return doc
 
 
-def events_doc(tracer) -> dict[str, Any]:
+def events_doc(tracer, *, faults=None) -> dict[str, Any]:
     """Raw-ring export (schema ``obs_trace/v1``): the lossless
     counterpart to the Perfetto document.  Keeps every event field
     bit-exactly (JSON floats round-trip), plus the two digests and the
     drop count — everything `obs/replay.py` needs to reconstruct the
-    workload and verify a re-serve, with no µs rounding in the way."""
-    return {
+    workload and verify a re-serve, with no µs rounding in the way.
+    ``faults``: an optional `FaultPlan` whose ``faults/v1`` doc is
+    embedded so a chaos serve replays under the same script."""
+    doc = {
         "schema": "obs_trace/v1",
         "clock": "serve-seconds",
         "events": [ev.as_dict() for ev in tracer.events],
@@ -141,10 +152,13 @@ def events_doc(tracer) -> dict[str, Any]:
         "span_digest": tracer.span_digest(),
         "decision_digest": tracer.decision_digest(),
     }
+    if faults is not None:
+        doc["faults"] = faults.as_doc()
+    return doc
 
 
-def write_events(tracer, path: str) -> dict[str, Any]:
-    doc = events_doc(tracer)
+def write_events(tracer, path: str, *, faults=None) -> dict[str, Any]:
+    doc = events_doc(tracer, faults=faults)
     with open(path, "w") as f:
         json.dump(doc, f, default=float)
     return doc

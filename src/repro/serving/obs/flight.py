@@ -129,8 +129,10 @@ class FlightRecorder:
             self._page_streak = 0
         elif kind == "esc_wait":
             self._waiters[(ev.rid, ev.model)] = ev.t
-        elif kind in ("esc_grant", "esc_resolve", "finish", "deescalate"):
-            if kind == "finish":
+        elif kind in ("esc_grant", "esc_resolve", "finish", "deescalate",
+                      "cancel", "deadline_miss"):
+            if kind in ("finish", "cancel", "deadline_miss"):
+                # terminal for the rid: sweep every model's waiter
                 stale = [k for k in self._waiters if k[0] == ev.rid]
             else:
                 stale = [(ev.rid, ev.model)]

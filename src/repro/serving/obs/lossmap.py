@@ -26,6 +26,17 @@ Escalation intervals after the first token are tallied into the same
 ``esc_*`` totals (they stretch streams, not TTFT) but never into the
 TTFT partition.
 
+Under the fault plane (DESIGN.md §14) two more causes keep the
+partition exact:
+
+  * ``cancelled``     — a reaped request's wait from its last
+    lifecycle edge (admission, else arrival) to its ``cancel`` /
+    ``deadline_miss`` event; its emitted tokens are charged here
+    wholesale in `goodput_lossmap` (they never count as goodput).
+  * ``stall``         — any bucket time overlapping a scripted
+    ``rung_stall`` window, reclassified the same way gear transients
+    are (transient windows take precedence where the two overlap).
+
 `goodput_lossmap` then attributes the tokens of every SLO-missing
 request across its TTFT buckets proportionally, prices them per second,
 and — when a roofline ceiling is supplied — adds the capacity the serve
@@ -43,7 +54,7 @@ __all__ = ["stall_decomposition", "goodput_lossmap", "sim_token_ceiling",
            "STALL_CAUSES"]
 
 STALL_CAUSES = ("queue_wait", "page_blocked", "prefill", "esc_wait",
-                "esc_catchup", "gear_transient")
+                "esc_catchup", "gear_transient", "cancelled", "stall")
 
 
 def _merge(windows: list[tuple[float, float]]) -> list[tuple[float, float]]:
@@ -71,6 +82,18 @@ def _overlap(s: float, e: float,
     return tot
 
 
+def _intersect(a: list[tuple[float, float]],
+               b: list[tuple[float, float]]) -> list[tuple[float, float]]:
+    """Intersection of two merged window lists (both sorted)."""
+    out = []
+    for s, e in a:
+        for ws, we in b:
+            lo, hi = max(s, ws), min(e, we)
+            if hi > lo:
+                out.append((lo, hi))
+    return _merge(out)
+
+
 def stall_decomposition(events: Iterable[Event], *,
                         gear_transient_s: float = 0.0,
                         ) -> dict[str, Any]:
@@ -87,10 +110,12 @@ def stall_decomposition(events: Iterable[Event], *,
     first_tok: dict[int, float] = {}
     tokens: dict[int, int] = {}
     finished: set[int] = set()
+    reap_t: dict[int, float] = {}
     # escalation interval capture: (rid, model) -> [t_esc, t_wait, t_grant]
     esc_open: dict[tuple[int, int], list] = {}
     esc_ivals: dict[int, list[tuple[float, float, str]]] = {}
     switches: list[float] = []
+    stall_w: list[tuple[float, float]] = []
 
     def _close(key: tuple[int, int], t_end: float) -> None:
         t0, tw, tg = esc_open.pop(key)
@@ -130,11 +155,23 @@ def stall_decomposition(events: Iterable[Event], *,
             finished.add(ev.rid)
             for key in [key for key in esc_open if key[0] == ev.rid]:
                 _close(key, ev.t)
+        elif k in ("cancel", "deadline_miss"):
+            reap_t.setdefault(ev.rid, ev.t)
+            for key in [key for key in esc_open if key[0] == ev.rid]:
+                _close(key, ev.t)
+        elif k == "rung_stall":
+            d = dict(ev.data)
+            stall_w.append((float(d.get("t0", ev.t)),
+                            float(d.get("until", ev.t))))
         elif k == "gear_switch":
             switches.append(ev.t)
 
     transient = _merge([(t, t + gear_transient_s) for t in switches]) \
         if gear_transient_s > 0 else []
+    stall_w = _merge(stall_w)
+    # transient windows win where the two overlap (the partition must
+    # charge each second exactly once)
+    stall_x = _intersect(stall_w, transient)
 
     requests: dict[int, dict[str, Any]] = {}
     stalls = {c: 0.0 for c in STALL_CAUSES}
@@ -159,14 +196,24 @@ def stall_decomposition(events: Iterable[Event], *,
                 ivals.extend(esc_in)
                 ivals.append((ta, t1, "prefill"))
                 buckets["prefill"] -= esc_s   # net out the overlap
+        tr = reap_t.get(rid)
+        if tr is not None and t1 is None:
+            # reaped before its first token: the tail from the last
+            # lifecycle edge to the reap is the cancel's cost
+            start = ta if ta is not None else tq
+            if tr > start:
+                ivals.append((start, tr, "cancelled"))
         for s, e, c in ivals:
             dur = max(0.0, e - s)
             hot = _overlap(s, e, transient)
-            buckets[c] += dur - hot
+            st = _overlap(s, e, stall_w) - _overlap(s, e, stall_x)
+            buckets[c] += dur - hot - st
             buckets["gear_transient"] += hot
+            buckets["stall"] += st
         ttft = (t1 - tq) if t1 is not None else None
         requests[rid] = {"ttft": ttft, "tokens": tokens.get(rid, 0),
-                         "finished": rid in finished, "buckets": buckets}
+                         "finished": rid in finished,
+                         "reaped": rid in reap_t, "buckets": buckets}
         for c, v in buckets.items():
             stalls[c] += v
         # post-first-token escalation time: stream stretch, not TTFT
@@ -175,7 +222,7 @@ def stall_decomposition(events: Iterable[Event], *,
                 if e > t1:
                     stalls[c] += e - max(s, t1)
     return {"requests": requests, "stalls_s": stalls,
-            "transient_windows": transient}
+            "transient_windows": transient, "stall_windows": stall_w}
 
 
 def sim_token_ceiling(n_lanes: int, seg_time: float, overhead: float,
@@ -207,9 +254,17 @@ def goodput_lossmap(events: Iterable[Event], *, slo: float,
     total_tokens = 0
     good_tokens = 0
     missed = 0
+    reaped = 0
     loss_tokens = {c: 0.0 for c in STALL_CAUSES}
     for rid, rec in decomp["requests"].items():
         total_tokens += rec["tokens"]
+        if rec.get("reaped"):
+            # a reaped request's tokens never count as goodput — the
+            # answer was abandoned — so they are charged to the cancel
+            # wholesale, keeping the partition exact
+            reaped += 1
+            loss_tokens["cancelled"] += rec["tokens"]
+            continue
         ttft = rec["ttft"]
         if ttft is None:
             continue
@@ -220,6 +275,9 @@ def goodput_lossmap(events: Iterable[Event], *, slo: float,
         buckets = rec["buckets"]
         mass = sum(buckets.values())
         if mass <= 0:
+            # zero-width partition (e.g. instant admission + token):
+            # charge the scheduling bucket so no token goes unattributed
+            loss_tokens["queue_wait"] += rec["tokens"]
             continue
         for c, v in buckets.items():
             loss_tokens[c] += rec["tokens"] * (v / mass)
@@ -241,5 +299,6 @@ def goodput_lossmap(events: Iterable[Event], *, slo: float,
         "loss_tok_s": loss_rate,
         "stalls_s": decomp["stalls_s"],
         "requests_missed": missed,
+        "requests_reaped": reaped,
         "requests_total": len(decomp["requests"]),
     }

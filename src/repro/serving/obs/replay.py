@@ -71,7 +71,11 @@ def _request_from(rid: int, t: float, d: dict[str, Any]) -> Request:
     return Request(rid=int(rid), prompt=prompt,
                    max_tokens=int(d.get("ntok", 1)), arrival=float(t),
                    lam=float(d["lam"]) if "lam" in d else None,
-                   strategy=d.get("strategy"))
+                   strategy=d.get("strategy"),
+                   deadline=(float(d["deadline"])
+                             if "deadline" in d else None),
+                   cancel_at=(float(d["cancel_at"])
+                              if "cancel_at" in d else None))
 
 
 def events_from_doc(doc: dict[str, Any]) -> list[Event]:

@@ -126,11 +126,17 @@ class ServeReport:
 
     def _runtime_lines(self) -> list[str]:
         v = self._v
+        head = (f"completed {v('runtime_completed', 0):.0f}/"
+                f"{v('runtime_requests', 0):.0f} requests, "
+                f"{v('runtime_tokens', 0):.0f} tokens in "
+                f"{v('runtime_duration', 0.0):.2f}s")
+        ncan = v("runtime_cancelled", 0)
+        nmiss = v("runtime_timed_out", 0)
+        if ncan or nmiss:
+            head += (f" (cancelled {ncan:.0f}, "
+                     f"deadline-missed {nmiss:.0f})")
         lines = [
-            (f"completed {v('runtime_completed', 0):.0f}/"
-             f"{v('runtime_requests', 0):.0f} requests, "
-             f"{v('runtime_tokens', 0):.0f} tokens in "
-             f"{v('runtime_duration', 0.0):.2f}s"),
+            head,
             (f"throughput: {v('runtime_throughput_tok_s', 0.0):.1f} tok/s "
              f"({v('runtime_throughput_req_s', 0.0):.2f} req/s)"),
             (f"latency: ttft p50 {_ms(v('runtime_ttft_p50'))} "
@@ -148,6 +154,11 @@ class ServeReport:
                          f"(attainment {100 * att:.0f}%)")
         else:
             lines.append("goodput: n/a")
+        slack50 = v("runtime_deadline_slack_p50")
+        if slack50 is not None:
+            lines.append(f"deadline slack: p50 {_ms(slack50)} "
+                         f"p95 {_ms(v('runtime_deadline_slack_p95'))} "
+                         f"p99 {_ms(v('runtime_deadline_slack_p99'))}")
         return lines
 
     def _segments_lines(self) -> list[str]:

@@ -27,6 +27,9 @@ Event kinds (the schema CI validates in `benchmarks/check_trace.py`):
   recal         tables re-fit from served rows   (n_rows)
   counter       sampled gauges at a step edge    (queue, pages, ...)
   finish        request completed                (rid, lane)
+  cancel        client hung up, request reaped   (rid, lane?)
+  deadline_miss deadline expired, request reaped (rid, lane?)
+  rung_stall    fault window froze a model rung  (model, t0, until)
 
 Two digests:
 
@@ -138,7 +141,7 @@ class SpanTracer:
                 span.append(ev)
             else:
                 self._span_dropped[ev.rid] += 1
-            if kind == "finish":
+            if kind in ("finish", "cancel", "deadline_miss"):
                 self._retire(ev.rid)
         if self.listener is not None:
             self.listener(ev)

@@ -43,6 +43,9 @@ class RequestRecord:
     served_depth_sum: int = 0       # sum over tokens of served node idx
     strategy: str | None = None
     tokens: list = dataclasses.field(default_factory=list)  # emitted ids
+    status: str = "active"          # -> completed | cancelled | timed_out
+    deadline: float | None = None   # absolute deadline, if any
+    ended: float | None = None      # terminal timestamp (any status)
     _last_token: float | None = None
 
     @property
@@ -64,6 +67,8 @@ class RequestRecord:
             "mean_served_node": (self.served_depth_sum / self.n_tokens
                                  if self.n_tokens else None),
             "strategy": self.strategy,
+            "status": self.status,
+            "deadline": self.deadline,
             "tokens": list(self.tokens),
         }
 
@@ -170,7 +175,7 @@ class RuntimeMetrics:
     def on_admit(self, req, now: float) -> None:
         self.records[req.rid] = RequestRecord(
             rid=req.rid, arrival=req.arrival, admitted=now,
-            strategy=req.strategy)
+            strategy=req.strategy, deadline=req.deadline)
 
     def on_step(self, seg_batch: int, seg_policy: int,
                 n_occupied: int) -> None:
@@ -199,7 +204,30 @@ class RuntimeMetrics:
             rec.tokens.append(int(token))
 
     def on_finish(self, rid: int, now: float) -> None:
-        self.records[rid].finished = now
+        rec = self.records[rid]
+        rec.finished = now
+        rec.ended = now
+        rec.status = "completed"
+
+    def on_reap(self, req, now: float, status: str) -> None:
+        """Terminal accounting for a cancelled / timed-out request.
+
+        ``finished`` stays None — a reaped request never completes, so
+        it can never enter the goodput numerator or distort TTFT
+        percentiles — but the partial-token work it consumed remains in
+        its record (and in throughput), which is exactly the gap the
+        lossmap's ``cancelled`` cause accounts for.  Queue-reaped
+        requests that were never admitted get a record here."""
+        if status not in ("cancelled", "timed_out"):
+            raise ValueError(f"unknown terminal status {status!r}")
+        rec = self.records.get(req.rid)
+        if rec is None:
+            rec = RequestRecord(
+                rid=req.rid, arrival=req.arrival,
+                strategy=req.strategy, deadline=req.deadline)
+            self.records[req.rid] = rec
+        rec.ended = now
+        rec.status = status
 
     # ------------------------------------------------------------------
     # aggregation
@@ -208,10 +236,22 @@ class RuntimeMetrics:
     def summary(self, slo: float | None = None) -> dict:
         recs = list(self.records.values())
         done = [r for r in recs if r.finished is not None]
+        cancelled = [r for r in recs if r.status == "cancelled"]
+        timed_out = [r for r in recs if r.status == "timed_out"]
         duration = max(self.t_end - self.t_start, 1e-9)
         tokens = sum(r.n_tokens for r in recs)
-        ttfts = [r.ttft for r in recs if r.ttft is not None]
+        # TTFT percentiles over non-reaped records only: a request
+        # cancelled mid-queue-wait has no first token, and one reaped
+        # just after its first token would drag the percentiles toward
+        # the reap schedule rather than the scheduler's behavior.
+        ttfts = [r.ttft for r in recs
+                 if r.ttft is not None and r.status not in
+                 ("cancelled", "timed_out")]
         e2es = [r.e2e for r in done]
+        # deadline slack: deadline minus terminal time for every
+        # terminal record carrying a deadline (negative == missed)
+        slack = [r.deadline - r.ended for r in recs
+                 if r.deadline is not None and r.ended is not None]
 
         met_slo = None
         goodput = None
@@ -227,6 +267,9 @@ class RuntimeMetrics:
             "duration": duration,
             "requests": len(recs),
             "completed": len(done),
+            "cancelled": len(cancelled),
+            "timed_out": len(timed_out),
+            "deadline_slack": (_pct(slack) if slack else None),
             "tokens": tokens,
             "throughput_tok_s": tokens / duration,
             "throughput_req_s": len(done) / duration,

@@ -32,6 +32,7 @@ class Request:
     lam: float | None = None       # per-request trade-off (None: server's)
     strategy: str | None = None    # registry name (None: server default)
     deadline: float | None = None  # absolute deadline for EDF ordering
+    cancel_at: float | None = None  # client hang-up time (fault plane)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -79,6 +80,21 @@ class RequestQueue:
 
     def peek(self) -> Request:
         return self._heap[0][2]
+
+    def reap(self, predicate) -> list[Request]:
+        """Remove and return every queued request for which
+        ``predicate(req)`` is true — the fault plane's pre-admission
+        sweep for cancelled / expired requests.  The surviving heap is
+        re-heapified, so ordering semantics are untouched."""
+        reaped = [req for _, _, req in self._heap if predicate(req)]
+        if reaped:
+            self._heap = [e for e in self._heap if not predicate(e[2])]
+            heapq.heapify(self._heap)
+        return reaped
+
+    def requests(self) -> list[Request]:
+        """Snapshot of all queued requests (arbitrary order)."""
+        return [req for _, _, req in self._heap]
 
     def __len__(self) -> int:
         return len(self._heap)

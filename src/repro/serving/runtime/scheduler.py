@@ -408,7 +408,11 @@ class EngineStepper:
 
     def release(self, lane: int) -> None:
         """Return the lane's pages to the pool (prefix-cache refs keep
-        shared prompt pages warm).  Ring lanes have nothing to return."""
+        shared prompt pages warm).  Ring lanes have nothing to return.
+        A lane reaped mid-chunked-prefill (fault plane) also drops its
+        prefill cursor — otherwise the freed lane would keep receiving
+        chunk plans."""
+        self._prefilling.pop(lane, None)
         if self.pool is not None:
             self.pool.release(lane)
 

@@ -119,12 +119,16 @@ class SimStepper:
     # `is not None`, so an untraced serve pays nothing
     tracer = None
     last_loss = None       # per-lane served-node loss of the last step
+    # fault plane (DESIGN.md §14): the server stamps its clock here
+    # each iteration when a FaultPlan is attached
+    fault_now = 0.0
 
     def __init__(self, strategies: tuple, trace_bank, *, n_lanes: int,
                  seg_time: float = 1.0, overhead: float = 0.25,
                  cost: str = "lane", prefill_tok_time: float = 0.0,
                  prefill_chunk: int | None = None,
-                 prefill_budget: int | None = None, pool=None):
+                 prefill_budget: int | None = None, pool=None,
+                 faults=None):
         if cost not in ("lane", "batch"):
             raise ValueError(f"unknown cost model {cost!r}")
         from repro.serving.runtime.scheduler import ChunkPlanner
@@ -134,6 +138,7 @@ class SimStepper:
         # arrays behind it.  The soak harness shrinks this pool to
         # manufacture genuine page pressure the invariant ledger audits.
         self.pool = pool
+        self.faults = faults
         self.prefill_tok_time = float(prefill_tok_time)
         prefill_chunk = prefill_chunk or None      # 0 == disabled
         self.prefill_chunk = None if prefill_chunk is None \
@@ -220,8 +225,19 @@ class SimStepper:
         # monolith Pareto sweep compares on
         self.served_loss_sum = 0.0
         self.served_loss_n = 0
+        self._stall_seen: set = set()   # (model, window-start) emitted
         if self.pool is not None:
             self.pool.reset()
+
+    def _note_stall(self, model: int) -> None:
+        """Emit one `rung_stall` span per scripted window edge."""
+        win = self.faults.stall_window(model, self.fault_now)
+        if win is None or (model, win[0]) in self._stall_seen:
+            return
+        self._stall_seen.add((model, win[0]))
+        if self.tracer is not None:
+            self.tracer.emit("rung_stall", model=model,
+                             t0=round(win[0], 9), until=round(win[1], 9))
 
     def reserve(self, req: Request) -> bool:
         """Admission gate: with a pool attached, reserve the request's
@@ -231,6 +247,7 @@ class SimStepper:
         return self.pool.reserve(req.prompt, req.max_tokens)
 
     def release(self, lane: int) -> None:
+        self.lane_prefill[lane] = 0     # reaped mid-prefill: drop debt
         if self.pool is not None:
             self.pool.release(lane)
 
@@ -262,6 +279,17 @@ class SimStepper:
         emit_mask)`` — lanes mid-prefill are occupied but emit nothing
         and consume no trace row."""
         occupied = np.asarray(occupied, bool)
+        if (self.faults is not None
+                and self.faults.stall_active(0, self.fault_now)):
+            # the single sim rung is frozen: no rows consumed, no
+            # tokens, no prefill progress — only the clock moves, so a
+            # finite window always passes (liveness)
+            self._note_stall(0)
+            if self.tracer is not None:
+                self.last_loss = np.full(self.n_lanes, np.nan)
+            served = np.zeros(self.n_lanes, np.int64)
+            return (served, served, 0, 0, self.overhead,
+                    np.zeros(self.n_lanes, bool))
         emit = occupied.copy()
         stall = self._stall                 # stop-the-world: serial
         self._stall = 0.0
@@ -332,7 +360,8 @@ class Server:
     def __init__(self, stepper, scheduler: LaneScheduler, sid_of, *,
                  order: str = "fifo", slo: float | None = None,
                  static_batching: bool = False, eos: int | None = None,
-                 controller=None, obs=None):
+                 controller=None, obs=None,
+                 enforce_deadlines: bool = False):
         self.stepper = stepper
         self.scheduler = scheduler
         self.sid_of = sid_of
@@ -340,6 +369,10 @@ class Server:
         self.slo = slo
         self.static_batching = static_batching
         self.eos = eos
+        # fault plane (DESIGN.md §14): deadlines double as EDF ordering
+        # hints, so reaping on expiry is opt-in — `cancel_at` (a client
+        # hang-up) is always enforced when present
+        self.enforce_deadlines = bool(enforce_deadlines)
         # observability plane (DESIGN.md §12): an `Observability` bundle
         # — tracer + optional flight recorder.  The server binds its own
         # clock to the tracer (virtual in sim mode, so traces are
@@ -368,6 +401,65 @@ class Server:
             gap = t - self._now()
             if gap > 0:
                 time.sleep(gap)
+
+    # ---- fault plane ---------------------------------------------------
+    def _reap_status(self, req, now: float) -> str | None:
+        """Terminal status a live request has earned by ``now``, or
+        None.  Cancellation wins ties — a hung-up client's deadline is
+        moot."""
+        if req.cancel_at is not None and req.cancel_at <= now:
+            return "cancelled"
+        if (self.enforce_deadlines and req.deadline is not None
+                and req.deadline <= now):
+            return "timed_out"
+        return None
+
+    def _reap(self, queue, metrics, tracer, release, now: float) -> None:
+        """Sweep cancelled / expired requests out of the queue and off
+        their lanes between steps.  Lane teardown runs release-first so
+        the span events land on an already-clean pool — the ledger's
+        `cancel_releases_pages` probe reads pool state at the event."""
+        sched = self.scheduler
+        for req in queue.reap(
+                lambda r: self._reap_status(r, now) is not None):
+            status = self._reap_status(req, now)
+            metrics.on_reap(req, now, status)
+            if tracer is not None:
+                kind = ("cancel" if status == "cancelled"
+                        else "deadline_miss")
+                tracer.emit(kind, rid=req.rid)
+        for lane in np.flatnonzero(sched.occupied_mask()):
+            req = sched.lane_req[lane]
+            status = self._reap_status(req, now)
+            if status is None:
+                continue
+            if release is not None:
+                release(int(lane))  # KV pages + escalation lanes freed
+            sched.release(int(lane))
+            metrics.on_reap(req, now, status)
+            if tracer is not None:
+                kind = ("cancel" if status == "cancelled"
+                        else "deadline_miss")
+                tracer.emit(kind, rid=req.rid, lane=int(lane))
+
+    def _fault_wake(self, queue, faults, reaping: bool,
+                    now: float) -> float | None:
+        """Earliest future instant at which the fault plane changes the
+        picture for a queue that cannot admit right now: a queued
+        request's reap time, or a scripted stall/squeeze boundary."""
+        wake = None
+        if reaping:
+            for r in queue.requests():
+                for t in (r.cancel_at,
+                          r.deadline if self.enforce_deadlines else None):
+                    if t is not None and t > now and (wake is None
+                                                      or t < wake):
+                        wake = t
+        if faults is not None:
+            nc = faults.next_change(now)
+            if nc is not None and (wake is None or nc < wake):
+                wake = nc
+        return wake
 
     # ---- the loop ------------------------------------------------------
     def serve(self, requests, warmup: bool = True) -> RuntimeMetrics:
@@ -407,6 +499,17 @@ class Server:
             deadline_of = lambda r: r.arrival + self.slo  # noqa: E731
         queue = RequestQueue(self.order, deadline_of=deadline_of)
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        # fault plane (DESIGN.md §14): the stepper may carry a FaultPlan
+        # whose serve-borne windows (rung stalls, page squeezes) are
+        # read off the virtual clock each iteration; request-borne
+        # faults ride the requests themselves
+        faults = getattr(stepper, "faults", None)
+        # the degrade governor reads the clock too: its deadline-budget
+        # check needs `now` even when no FaultPlan is attached
+        clocked = (faults is not None
+                   or getattr(stepper, "governor", None) is not None)
+        reaping = self.enforce_deadlines or any(
+            r.cancel_at is not None for r in pending)
         self._vt = 0.0
         self._t0 = time.perf_counter()
         metrics.t_start = self._now()
@@ -424,6 +527,12 @@ class Server:
 
         while pending or len(queue) or sched.busy():
             now = self._now()
+            if clocked:
+                stepper.fault_now = now
+            if faults is not None:
+                pool = getattr(stepper, "pool", None)
+                if pool is not None and hasattr(pool, "set_squeeze"):
+                    pool.set_squeeze(faults.squeeze_pages(now))
             pushed = []
             while pending and pending[0].arrival <= now:
                 req = pending.pop(0)
@@ -442,10 +551,16 @@ class Server:
                         extra["strategy"] = req.strategy
                     if req.lam is not None:
                         extra["lam"] = float(req.lam)
+                    if req.deadline is not None:
+                        extra["deadline"] = float(req.deadline)
+                    if req.cancel_at is not None:
+                        extra["cancel_at"] = float(req.cancel_at)
                     tracer.emit("queued", t=req.arrival, rid=req.rid,
                                 **extra)
             if self.controller is not None and pushed:
                 self.controller.on_arrivals(pushed)
+            if reaping:
+                self._reap(queue, metrics, tracer, release, now)
             for lane, req in sched.admit(
                     queue, self.sid_of,
                     static_batching=self.static_batching,
@@ -461,8 +576,16 @@ class Server:
                     # may still hold page-blocked requests; one more
                     # admit pass runs next iteration after lanes/pages
                     # freed (len(queue) keeps the loop alive).  Guard
-                    # against a request that can NEVER be admitted.
+                    # against a request that can NEVER be admitted —
+                    # unless the fault plane will change the picture (a
+                    # queued request about to be reaped, a squeeze or
+                    # stall window about to end): then jump there.
                     if len(queue):
+                        wake = self._fault_wake(queue, faults, reaping,
+                                                now)
+                        if wake is not None and wake > now:
+                            self._advance_to(wake)
+                            continue
                         raise RuntimeError(
                             "admission deadlock: queued requests but no "
                             "lane busy and no pending arrivals")

@@ -1,0 +1,802 @@
+"""Fault-tolerance plane tests (DESIGN.md §14):
+
+  * `FaultPlan`: seeded generation is deterministic, stamping is
+    non-destructive, and the ``faults/v1`` doc round-trips through the
+    same validator CI runs on exported traces,
+  * chaos determinism: the same (workload, plan) pair — cancellation
+    storm + deadline squeeze + rung stall + page squeeze all at once —
+    replays with bit-identical span digests, zero ledger violations,
+    and a page-clean pool at exit,
+  * cancellation mid-stream releases pages under COW-shared prefixes
+    (the ledger's `cancel_releases_pages` probe reads the post-teardown
+    pool at the cancel event),
+  * the `DegradeGovernor` denies unaffordable escalations — deadline
+    squeeze and stalled-rung cases — and the slot serves its best
+    already-probed shallow answer (a legal T-Tamer walk stop, flagged
+    ``denied`` on the recall span),
+  * sliding-window reclamation clips only sole-owner history pages:
+    pinned reservation chains and prefix-cache pages are never touched,
+  * lossmap under faults: the TTFT partition stays exact, reaped
+    requests land in the ``cancelled`` cause, scripted stall windows in
+    ``stall``,
+  * terminal metrics (cancelled / timed_out counts, deadline slack) and
+    the three fault-plane ledger contracts on synthetic streams.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import strategy
+from repro.core import traces
+from repro.serving import runtime as rt
+from repro.serving.faults import DegradeGovernor, FaultPlan
+from repro.serving.kvpool import KVPool
+from repro.serving.obs import (InvariantLedger, Observability, SpanTracer)
+from repro.serving.obs.export import events_doc
+from repro.serving.obs.lossmap import (STALL_CAUSES, goodput_lossmap,
+                                       sim_token_ceiling,
+                                       stall_decomposition)
+from repro.serving.runtime.request import Request
+from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+N_NODES = 5
+
+
+@pytest.fixture(scope="module")
+def sim_cascade():
+    rng = np.random.default_rng(0)
+    losses, _, flops = traces.ee_like_traces(rng, 3_000, N_NODES)
+    casc = strategy.Cascade.from_traces(losses[:1_500], 0.4 * flops,
+                                        k=12, lam=0.6)
+    return casc, losses[1_500:]
+
+
+# --------------------------------------------------------------------------
+# the plan itself
+# --------------------------------------------------------------------------
+
+def _requests(n=12, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=r, prompt=rng.integers(0, 512, 4, np.int32),
+                    max_tokens=3 + r % 5, arrival=r * 0.2)
+            for r in range(n)]
+
+
+def test_fault_plan_seeded_and_deterministic():
+    reqs = _requests()
+    kw = dict(seed=7, cancel_rate=0.5, cancel_after=(0.5, 2.0),
+              deadline=(1.0, 4.0), stalls=[(1, 2.0, 3.0)],
+              squeezes=[(1.0, 2.5, 2)])
+    p1 = FaultPlan.generate(reqs, **kw)
+    p2 = FaultPlan.generate(reqs, **kw)
+    assert p1.as_doc() == p2.as_doc()
+    assert 0 < len(p1.cancel_at) < len(reqs)     # a storm, not a wipe
+    assert len(p1.deadline) == len(reqs)
+    for rid, t in p1.cancel_at.items():
+        assert reqs[rid].arrival + 0.5 <= t <= reqs[rid].arrival + 2.0
+    # a different seed draws a different storm
+    p3 = FaultPlan.generate(reqs, **{**kw, "seed": 8})
+    assert p3.cancel_at != p1.cancel_at or p3.deadline != p1.deadline
+
+
+def test_fault_plan_stamp_and_doc_roundtrip(tmp_path):
+    reqs = _requests()
+    plan = FaultPlan.generate(reqs, seed=7, cancel_rate=0.4,
+                              deadline=3.0, stalls=[(0, 1.0, 2.0)],
+                              squeezes=[(0.5, 1.5, 1)])
+    stamped = plan.stamp(reqs)
+    for orig, new in zip(reqs, stamped):
+        assert orig.cancel_at is None            # originals untouched
+        assert new.cancel_at == plan.cancel_at.get(orig.rid)
+        assert new.deadline == plan.deadline.get(orig.rid)
+        if orig.rid not in plan.cancel_at and orig.rid not in plan.deadline:
+            assert new is orig                   # untouched == same object
+    # faults/v1 round-trip + the CI validator accepts it
+    doc = json.loads(json.dumps(plan.as_doc()))
+    assert FaultPlan.from_doc(doc).as_doc() == plan.as_doc()
+    plan.save(str(tmp_path / "plan.json"))
+    assert FaultPlan.load(str(tmp_path / "plan.json")).as_doc() \
+        == plan.as_doc()
+    from benchmarks.check_trace import validate_faults
+    assert validate_faults(doc) == []
+    assert validate_faults({**doc, "schema": "nope"}) != []
+    assert validate_faults({**doc, "stalls": [[1, 3.0, 2.0]]}) != []
+    assert validate_faults({**doc, "cancel_at": {"x": 1.0}}) != []
+
+
+def test_fault_plan_serve_queries():
+    plan = FaultPlan(stalls=[(1, 2.0, 4.0), (0, 3.0, 5.0)],
+                     squeezes=[(1.0, 2.0, 2), (1.5, 3.0, 1)])
+    assert plan.stall_active(1, 2.0) and not plan.stall_active(1, 4.0)
+    assert plan.stall_window(1, 3.0) == (2.0, 4.0)
+    assert plan.stall_overlap(1, 0.0, 10.0) == pytest.approx(2.0)
+    assert plan.stall_overlap(1, 3.0, 3.5) == pytest.approx(0.5)
+    assert plan.squeeze_pages(1.7) == 3          # both windows active
+    assert plan.squeeze_pages(2.5) == 1
+    assert plan.squeeze_pages(5.0) == 0
+    assert plan.next_change(0.0) == 1.0
+    assert plan.next_change(2.5) == 3.0
+    assert plan.next_change(99.0) is None
+
+
+# --------------------------------------------------------------------------
+# chaos determinism: the full storm replays bit-identically
+# --------------------------------------------------------------------------
+
+def _chaos_serve(casc, bank, *, obs):
+    """Cancellation storm + deadline squeeze + rung stall + page squeeze
+    through one pool-gated sim serve."""
+    spec = WorkloadSpec(rate=3.0, duration=8.0, prompt_len=4,
+                        max_tokens=(5, 25), seed=7)
+    requests = make_workload("poisson", spec)
+    plan = FaultPlan.generate(requests, seed=13, cancel_rate=0.25,
+                              cancel_after=(0.1, 1.0), deadline=(3.0, 9.0),
+                              stalls=[(0, 1.0, 2.0)],
+                              squeezes=[(2.5, 4.0, 2)])
+    requests = plan.stamp(requests)
+    pool = KVPool(n_lanes=3, page_size=4, lane_pages=12, n_pages=24)
+    strategies, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                       ("recall_index", None))
+    stepper = rt.SimStepper(strategies, bank, n_lanes=3, seg_time=0.05,
+                            overhead=0.01, pool=pool, faults=plan)
+    server = rt.Server(stepper, rt.LaneScheduler(3), sid_of, slo=5.0,
+                       obs=obs, enforce_deadlines=True)
+    return server.serve(requests), plan, pool
+
+
+def test_chaos_serve_deterministic_and_clean(sim_cascade):
+    casc, bank = sim_cascade
+    m1, plan, pool = _chaos_serve(casc, bank, obs=Observability(
+        ledger=InvariantLedger()))
+    m2, _, _ = _chaos_serve(casc, bank, obs=Observability())
+    # the storm actually happened, and it is part of the trace
+    s = m1.summary()
+    assert s["cancelled"] > 0
+    assert s["completed"] > 0
+    assert s["cancelled"] + s["timed_out"] + s["completed"] == \
+        s["requests"]
+    # bit-identical replay: same digests, same streams
+    # (fault injection is a pure function of (workload, plan))
+    for rid in m1.records:
+        assert m1.records[rid].tokens == m2.records[rid].tokens, rid
+        assert m1.records[rid].status == m2.records[rid].status, rid
+
+
+def test_chaos_serve_span_digest_reproducible(sim_cascade):
+    casc, bank = sim_cascade
+    _, _, _ = _chaos_serve(casc, bank, obs=(o1 := Observability()))
+    _, _, _ = _chaos_serve(casc, bank, obs=(o2 := Observability()))
+    assert o1.tracer.span_digest() == o2.tracer.span_digest()
+    kinds = {ev.kind for ev in o1.tracer.events}
+    assert "cancel" in kinds
+    assert "rung_stall" in kinds
+
+
+def test_chaos_serve_ledger_clean_and_pool_empty(sim_cascade):
+    casc, bank = sim_cascade
+    ledger = InvariantLedger()
+    _, plan, pool = _chaos_serve(casc, bank,
+                                 obs=Observability(ledger=ledger))
+    rep = ledger.report()
+    assert rep["total_violations"] == 0, rep["violations"]
+    assert rep["contracts"]["cancel_halts_stream"]["checks"] > 0
+    # pool exit gate: only prefix-cache refs may survive a serve
+    assert pool.n_held.sum() == 0
+    assert int(pool.budget.sum()) == 0
+    pool.prefix.clear()
+    assert pool.pages_in_use == 0
+    assert pool.check_invariants() == []
+
+
+def test_chaos_events_doc_carries_plan(sim_cascade):
+    casc, bank = sim_cascade
+    obs = Observability()
+    _, plan, _ = _chaos_serve(casc, bank, obs=obs)
+    doc = json.loads(json.dumps(events_doc(obs.tracer, faults=plan),
+                                default=float))
+    assert doc["faults"]["schema"] == "faults/v1"
+    assert FaultPlan.from_doc(doc["faults"]).as_doc() == plan.as_doc()
+    from benchmarks.check_trace import validate_events
+    assert validate_events(doc) == []
+    bad = json.loads(json.dumps(doc))
+    bad["faults"]["squeezes"] = [[3.0, 1.0, 2]]    # t1 < t0
+    assert validate_events(bad) != []
+
+
+# --------------------------------------------------------------------------
+# cancellation releases pages (COW-shared prefixes)
+# --------------------------------------------------------------------------
+
+def test_cancel_mid_stream_releases_pages_under_cow(sim_cascade):
+    """Two lanes share a prompt whose partial tail page forces COW
+    splits; cancelling one mid-decode must leave its lane page-clean at
+    the cancel event (probed live by the ledger) without disturbing the
+    survivor or the shared prefix chain."""
+    casc, bank = sim_cascade
+    prompt = np.arange(6, dtype=np.int32)        # 6 % 4: partial tail
+    requests = [
+        Request(rid=0, prompt=prompt, max_tokens=20, arrival=0.0),
+        Request(rid=1, prompt=prompt.copy(), max_tokens=20, arrival=0.0,
+                cancel_at=0.4),
+    ]
+    pool = KVPool(n_lanes=2, page_size=4, lane_pages=8, n_pages=16)
+    ledger = InvariantLedger()
+    obs = Observability(ledger=ledger)
+    strategies, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                       ("recall_index", None))
+    stepper = rt.SimStepper(strategies, bank, n_lanes=2, seg_time=0.05,
+                            overhead=0.01, pool=pool)
+    server = rt.Server(stepper, rt.LaneScheduler(2), sid_of, slo=5.0,
+                       obs=obs)
+    metrics = server.serve(requests)
+    # the cancel landed mid-stream, on a lane
+    rec = metrics.records[1]
+    assert rec.status == "cancelled"
+    assert rec.finished is None
+    assert 0 < rec.n_tokens < 20
+    assert metrics.records[0].status == "completed"
+    assert metrics.records[0].n_tokens == 20
+    # the shared partial tail really did split
+    assert pool.cow_splits >= 1
+    # the ledger probed the pool AT the cancel event and found it clean
+    rep = ledger.report()
+    assert rep["contracts"]["cancel_releases_pages"]["checks"] >= 1
+    assert rep["contracts"]["cancel_halts_stream"]["checks"] >= 1
+    assert rep["total_violations"] == 0, rep["violations"]
+    # survivor + prefix cache are intact; clearing the cache drains all
+    assert pool.n_held.sum() == 0                # both lanes released
+    assert len(pool.prefix) >= 1
+    pool.prefix.clear()
+    assert pool.pages_in_use == 0
+    assert pool.check_invariants() == []
+
+
+def test_cancel_in_queue_never_admits(sim_cascade):
+    """A request whose cancel fires while it still waits in the queue is
+    reaped there: no admission, no tokens, no pages ever held."""
+    casc, bank = sim_cascade
+    requests = [
+        Request(rid=0, prompt=np.zeros(4, np.int32), max_tokens=30,
+                arrival=0.0),
+        Request(rid=1, prompt=np.ones(4, np.int32), max_tokens=5,
+                arrival=0.0, cancel_at=0.05),
+    ]
+    obs = Observability(ledger=InvariantLedger())
+    strategies, sid_of = rt.build_bank(requests, rt.cascade_factory(casc),
+                                       ("recall_index", None))
+    stepper = rt.SimStepper(strategies, bank, n_lanes=1, seg_time=0.05,
+                            overhead=0.01)
+    server = rt.Server(stepper, rt.LaneScheduler(1), sid_of, slo=5.0,
+                       obs=obs)
+    metrics = server.serve(requests)
+    rec = metrics.records[1]
+    assert rec.status == "cancelled"
+    assert rec.admitted is None and rec.n_tokens == 0
+    assert metrics.records[0].status == "completed"
+    assert obs.ledger.total_violations == 0
+
+
+def test_deadline_reap_requires_opt_in(sim_cascade):
+    """`deadline` is an EDF ordering hint by default; only
+    ``enforce_deadlines=True`` turns expiry into a reap."""
+    casc, bank = sim_cascade
+    def reqs():
+        return [Request(rid=0, prompt=np.zeros(4, np.int32),
+                        max_tokens=20, arrival=0.0, deadline=0.3)]
+    strategies, sid_of = rt.build_bank(reqs(), rt.cascade_factory(casc),
+                                       ("recall_index", None))
+
+    def serve(enforce):
+        stepper = rt.SimStepper(strategies, bank, n_lanes=1,
+                                seg_time=0.05, overhead=0.01)
+        server = rt.Server(stepper, rt.LaneScheduler(1), sid_of, slo=5.0,
+                           enforce_deadlines=enforce)
+        return server.serve(reqs())
+
+    lax = serve(False)
+    assert lax.records[0].status == "completed"
+    strict = serve(True)
+    assert strict.records[0].status == "timed_out"
+    assert 0 < strict.records[0].n_tokens < 20
+    s = strict.summary()
+    assert s["timed_out"] == 1 and s["completed"] == 0
+    # slack is negative: the deadline was missed
+    assert s["deadline_slack"]["p50"] < 0.0
+
+
+# --------------------------------------------------------------------------
+# degrade governor: demotion instead of failure
+# --------------------------------------------------------------------------
+
+N0, N1 = 2, 3
+
+
+@pytest.fixture(scope="module")
+def casc_setup():
+    from repro.serving.cascade import ModelBank, ModelSpec
+    rng = np.random.default_rng(3)
+    losses, boundaries = traces.cascade_traces(
+        rng, 3_000, [(2.0, 3.0), (5.0, 8.0, 12.0)], head_overthink=0.3)
+    costs = np.concatenate([np.full(N0, 0.5 / N0), np.full(N1, 2.0 / N1)])
+    casc = strategy.Cascade.from_traces(losses[:1_500], 0.1 * costs,
+                                        k=10, lam=0.9,
+                                        boundaries=boundaries)
+    mbank = ModelBank([
+        ModelSpec("small", N0, n_lanes=3, seg_time=0.01,
+                  prefill_tok_time=0.001),
+        ModelSpec("large", N1, n_lanes=2, seg_time=0.04,
+                  prefill_tok_time=0.004),
+    ])
+    return casc, mbank, losses[1_500:]
+
+
+def _casc_requests(n, seed=5, deadline=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=r, prompt=rng.integers(0, 512, 8, np.int32),
+                    max_tokens=3 + r % 5, arrival=r * 0.05,
+                    strategy="skip_recall",
+                    deadline=(r * 0.05 + deadline
+                              if deadline is not None else None))
+            for r in range(n)]
+
+
+def _casc_serve(casc, mbank, bank_traces, requests, *, governor=None,
+                faults=None, obs=None):
+    from repro.serving.cascade import CascadeSimStepper
+
+    def mk(name, lam):
+        return strategy.make("skip_recall", casc, mode="cascade")
+
+    strat_bank, sid_of = rt.build_bank(requests, mk, ("skip_recall", None))
+    stepper = CascadeSimStepper(mbank, strat_bank, bank_traces,
+                                overhead=0.002, policy="recall",
+                                patience=3, chunk=16, faults=faults,
+                                governor=governor)
+    server = rt.Server(stepper, rt.LaneScheduler(mbank[0].n_lanes),
+                       sid_of, slo=2.0, obs=obs)
+    return server.serve(requests), stepper
+
+
+def test_governor_deadline_denial_serves_small_rung(casc_setup):
+    """The acceptance scenario: an escalation the deadline budget cannot
+    afford is denied and the slot serves the best shallow answer it
+    already probed — flagged ``denied`` on the recall span — instead of
+    parking until the deadline expires."""
+    casc, mbank, bank_traces = casc_setup
+    # baseline: the same workload escalates without a governor
+    m0, st0 = _casc_serve(casc, mbank, bank_traces, _casc_requests(10))
+    assert st0.stats.escalations > 0
+
+    gov = DegradeGovernor()
+    requests = _casc_requests(10, deadline=0.001)   # zero budget
+    obs = Observability()
+    m, st = _casc_serve(casc, mbank, bank_traces, requests,
+                        governor=gov, obs=obs)
+    # every escalation attempt was denied on deadline pressure
+    assert st.stats.escalations == 0
+    assert gov.denied > 0 and gov.denied_deadline == gov.denied
+    assert gov.allowed == 0
+    # yet every request still completes, served off the small rung
+    assert m.summary()["completed"] == len(requests)
+    for rec in m.records.values():
+        assert all(node < N0 for node in rec.tokens), rec.rid
+    # the demotion is visible: recall spans carry denied=True
+    denied = [ev for ev in obs.tracer.events
+              if ev.kind == "recall" and dict(ev.data).get("denied")]
+    assert denied
+    cs = st.cascade_stats()
+    assert cs["governor_denied"] == gov.denied
+    assert cs["tokens_served"][1] == 0
+
+
+def test_governor_stall_denial(casc_setup):
+    """Escalating into a rung frozen by a scripted stall parks the
+    request for the whole window — the governor refuses instead."""
+    casc, mbank, bank_traces = casc_setup
+    gov = DegradeGovernor()
+    plan = FaultPlan(stalls=[(1, 0.0, 999.0)])   # large rung dead all run
+    requests = _casc_requests(8, seed=9)
+    obs = Observability()
+    m, st = _casc_serve(casc, mbank, bank_traces, requests,
+                        governor=gov, faults=plan, obs=obs)
+    assert m.summary()["completed"] == len(requests)
+    assert gov.denied_stall > 0
+    assert st.stats.escalations == 0
+    for rec in m.records.values():
+        assert all(node < N0 for node in rec.tokens), rec.rid
+    # the stall window edge was announced exactly once
+    stalls = [ev for ev in obs.tracer.events if ev.kind == "rung_stall"]
+    assert len(stalls) == 1 and stalls[0].model == 1
+
+
+def test_governor_with_slack_allows_escalation(casc_setup):
+    """Loose deadlines deny nothing: the governed serve is the baseline
+    serve (denial is a pure function of budget, not a tax)."""
+    casc, mbank, bank_traces = casc_setup
+    m0, _ = _casc_serve(casc, mbank, bank_traces, _casc_requests(10))
+    gov = DegradeGovernor()
+    m1, st = _casc_serve(casc, mbank, bank_traces,
+                         _casc_requests(10, deadline=100.0), governor=gov)
+    assert gov.denied == 0 and gov.allowed > 0
+    for rid in m0.records:
+        assert m0.records[rid].tokens == m1.records[rid].tokens, rid
+
+
+def test_governor_unit_decisions():
+    gov = DegradeGovernor(safety=2.0)
+    assert gov.allow_escalation(now=0.0, deadline=None, catchup_cost=9.9)
+    assert not gov.allow_escalation(now=0.0, deadline=1.0,
+                                    catchup_cost=0.6)   # 2x0.6 > 1.0
+    assert gov.allow_escalation(now=0.0, deadline=1.0, catchup_cost=0.4)
+    assert not gov.allow_escalation(now=0.0, deadline=None,
+                                    catchup_cost=0.0, stalled=True)
+    assert gov.stats() == {"governor_allowed": 2, "governor_denied": 2,
+                           "governor_denied_deadline": 1,
+                           "governor_denied_stall": 1}
+
+
+# --------------------------------------------------------------------------
+# sliding-window reclamation
+# --------------------------------------------------------------------------
+
+def test_reclaim_clips_sole_owner_history_only():
+    """Under the watermark an admission short on headroom clips the
+    oldest private page off the longest lane; the clip shifts the table
+    so position math stays exact, and the pool stays conservation-clean."""
+    pool = KVPool(n_lanes=2, page_size=2, lane_pages=8, n_pages=10,
+                  reclaim_watermark=0.3)
+    prompt = np.arange(6, dtype=np.int32)
+    assert pool.reserve(prompt, 6)               # 6 pages worst-case
+    pool.admit(0, prompt, 6, register_prefix=False)
+    for _ in range(6):                           # decode to 6 held pages
+        pool.prepare_step(np.array([True, False]))
+        pool.note_written(np.array([True, False]))
+    assert pool.n_held[0] == 6 and pool.budget[0] == 0
+    # 3 free pages left (9 usable); a 4-page request must reclaim one
+    assert pool.reserve(np.arange(100, 104, dtype=np.int32), 4)
+    assert pool.clipped[0] == 1
+    assert pool.reclaimed_pages == 1
+    assert pool.n_held[0] == 5                   # head page clipped off
+    assert pool.check_invariants() == []
+    pool.admit(1, np.arange(100, 104, dtype=np.int32), 4,
+               register_prefix=False)
+    # the survivor keeps decoding against the shifted table: physical
+    # index = pos // page_size - clipped
+    assert pool.check_invariants() == []
+
+
+def test_reclaim_never_touches_pinned_or_prefix_pages():
+    """A prefix-cached chain (refcount > 1) and a chain pinned by a
+    pending reservation are both off-limits: the reserve fails honestly
+    instead of clipping shared history."""
+    pool = KVPool(n_lanes=2, page_size=2, lane_pages=8, n_pages=8,
+                  reclaim_watermark=0.3)
+    prompt = np.arange(6, dtype=np.int32)
+    assert pool.reserve(prompt, 2)
+    pool.admit(0, prompt, 2)                     # registers prefix chain
+    for _ in range(2):
+        pool.prepare_step(np.array([True, False]))
+        pool.note_written(np.array([True, False]))
+    held_before = int(pool.n_held[0])
+    chain = [int(p) for p in pool.table[0, :3]]  # the 3 prompt pages
+    refs = [pool.allocator.refcount(p) for p in chain]
+    assert all(r >= 2 for r in refs)             # prefix-shared history
+    # same prompt again: the matched chain gets PINNED by the pending
+    # reservation, and every other held page is prefix-shared — the
+    # reserve must fail honestly (needs 5 fresh pages of 3 free) rather
+    # than clip shared history
+    assert not pool.reserve(prompt, 10)
+    assert pool.reserve_failures == 1
+    assert pool.clipped[0] == 0                  # nothing clipped
+    assert pool.reclaimed_pages == 0
+    assert pool.n_held[0] == held_before
+    assert [pool.allocator.refcount(p) for p in chain] == refs
+    assert pool.check_invariants() == []
+
+
+def test_reclaim_disabled_without_watermark():
+    pool = KVPool(n_lanes=1, page_size=2, lane_pages=8, n_pages=6)
+    prompt = np.arange(6, dtype=np.int32)
+    assert pool.reserve(prompt, 4)               # 5 pages of 5 usable
+    pool.admit(0, prompt, 4, register_prefix=False)
+    for _ in range(4):
+        pool.prepare_step(np.array([True]))
+        pool.note_written(np.array([True]))
+    # no watermark: pressure refuses instead of clipping
+    assert not pool.reserve(np.arange(10, 14, dtype=np.int32), 2)
+    assert pool.clipped[0] == 0 and pool.reclaimed_pages == 0
+    with pytest.raises(ValueError, match="reclaim_watermark"):
+        KVPool(n_lanes=1, page_size=2, lane_pages=4, reclaim_watermark=1.5)
+
+
+def test_squeeze_withholds_headroom_not_budget():
+    pool = KVPool(n_lanes=2, page_size=2, lane_pages=4, n_pages=9)
+    prompt = np.arange(4, dtype=np.int32)
+    assert pool.reserve(prompt, 4)               # 4 pages reserved
+    pool.admit(0, prompt, 4, register_prefix=False)
+    pool.set_squeeze(4)                          # free 6 -> headroom 2
+    assert not pool.reserve(np.arange(10, 16, dtype=np.int32), 2)  # 4 pg
+    # granted budgets keep the never-fail-mid-stream guarantee
+    for _ in range(4):
+        pool.prepare_step(np.array([True, False]))
+        pool.note_written(np.array([True, False]))
+    assert pool.check_invariants() == []
+    pool.set_squeeze(0)
+    assert pool.reserve(np.arange(10, 16, dtype=np.int32), 2)
+
+
+# --------------------------------------------------------------------------
+# lossmap under faults
+# --------------------------------------------------------------------------
+
+def _emit_all(rows):
+    tr = SpanTracer()
+    for kind, t, kw in rows:
+        tr.emit(kind, t=t, **kw)
+    return tr.events
+
+
+def test_stall_decomposition_cancelled_and_stall_causes():
+    events = _emit_all([
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 1.0, {"rid": 1, "lane": 0}),
+        ("cancel", 2.5, {"rid": 1, "lane": 0}),      # reaped pre-token
+        ("queued", 0.0, {"rid": 2}),
+        ("rung_stall", 1.0, {"model": 0, "t0": 1.0, "until": 3.0}),
+        ("admitted", 4.0, {"rid": 2, "lane": 0}),
+        ("token", 5.0, {"rid": 2, "lane": 0, "ttft": 5.0}),
+        ("finish", 5.5, {"rid": 2, "lane": 0}),
+    ])
+    d = stall_decomposition(events)
+    assert d["stall_windows"] == [(1.0, 3.0)]
+    r1 = d["requests"][1]
+    assert r1["reaped"] and r1["ttft"] is None
+    # admission -> cancel [1, 2.5] sits wholly inside the stall window
+    # [1, 3] and is reclassified; the queue wait [0, 1] stays clean
+    assert r1["buckets"]["cancelled"] == pytest.approx(0.0)
+    assert r1["buckets"]["stall"] == pytest.approx(1.5)
+    assert r1["buckets"]["queue_wait"] == pytest.approx(1.0)
+    r2 = d["requests"][2]
+    assert not r2["reaped"]
+    # queue_wait 0->4 loses its 2s stall overlap; prefill 4->5 clean
+    assert r2["buckets"]["queue_wait"] == pytest.approx(2.0)
+    assert r2["buckets"]["stall"] == pytest.approx(2.0)
+    assert r2["buckets"]["prefill"] == pytest.approx(1.0)
+    assert sum(r2["buckets"].values()) == pytest.approx(r2["ttft"])
+
+
+def test_transient_windows_take_precedence_over_stalls():
+    """Each second is charged exactly once: where a gear transient and a
+    scripted stall overlap, the transient wins."""
+    events = _emit_all([
+        ("gear_switch", 0.0, {"src": 0, "dst": 1}),
+        ("rung_stall", 0.5, {"model": 0, "t0": 0.5, "until": 2.0}),
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 2.0, {"rid": 1, "lane": 0}),
+        ("token", 2.5, {"rid": 1, "lane": 0, "ttft": 2.5}),
+        ("finish", 3.0, {"rid": 1, "lane": 0}),
+    ])
+    d = stall_decomposition(events, gear_transient_s=1.0)
+    b = d["requests"][1]["buckets"]
+    # queue 0->2: transient [0,1), stall [1,2) (its [0.5,1) lost)
+    assert b["gear_transient"] == pytest.approx(1.0)
+    assert b["stall"] == pytest.approx(1.0)
+    assert b["queue_wait"] == pytest.approx(0.0)
+    assert sum(b.values()) == pytest.approx(d["requests"][1]["ttft"])
+
+
+def test_goodput_lossmap_chaos_partition(sim_cascade):
+    casc, bank = sim_cascade
+    obs = Observability()
+    metrics, plan, _ = _chaos_serve(casc, bank, obs=obs)
+    s = metrics.summary()
+    slo = 0.5
+    ceiling = sim_token_ceiling(3, 0.05, 0.01)
+    lm = goodput_lossmap(obs.tracer.events, slo=slo,
+                         duration=s["duration"], ceiling_tok_s=ceiling)
+    assert lm["requests_reaped"] == s["cancelled"] + s["timed_out"]
+    assert lm["requests_reaped"] > 0
+    assert lm["loss_total_tok_s"] == pytest.approx(
+        ceiling - lm["goodput_tok_s"])
+    assert lm["goodput_tok_s"] <= lm["throughput_tok_s"] + 1e-9
+    for c in STALL_CAUSES:
+        assert c in lm["loss_tok_s"]
+        assert lm["loss_tok_s"][c] >= 0.0
+    # reaped work is visible as a cancelled loss (some reaps landed
+    # mid-stream, so their tokens were real work)
+    assert lm["loss_tok_s"]["cancelled"] > 0.0
+    # per-request partitions stay exact for every non-reaped request
+    d = stall_decomposition(obs.tracer.events)
+    for rid, row in d["requests"].items():
+        if row["ttft"] is not None and not row["reaped"]:
+            assert sum(row["buckets"].values()) == \
+                pytest.approx(row["ttft"], abs=1e-9), rid
+
+
+# --------------------------------------------------------------------------
+# terminal metrics
+# --------------------------------------------------------------------------
+
+def test_metrics_terminal_accounting():
+    from repro.serving.runtime.metrics import RuntimeMetrics
+    m = RuntimeMetrics(full_depth=5, n_lanes=2)
+    m.t_start, m.t_end = 0.0, 10.0
+    done = Request(rid=0, prompt=np.zeros(2, np.int32), max_tokens=2,
+                   arrival=0.0, deadline=5.0)
+    m.on_admit(done, 0.1)
+    m.on_token(0, served_node=1, now=0.2, token=1)
+    m.on_finish(0, 0.3)
+    gone = Request(rid=1, prompt=np.zeros(2, np.int32), max_tokens=9,
+                   arrival=0.0, cancel_at=1.0)
+    m.on_admit(gone, 0.1)
+    m.on_token(1, served_node=1, now=0.2, token=1)
+    m.on_reap(gone, 1.0, "cancelled")
+    late = Request(rid=2, prompt=np.zeros(2, np.int32), max_tokens=9,
+                   arrival=0.0, deadline=2.0)
+    m.on_reap(late, 2.0, "timed_out")       # queue-reaped: never admitted
+    s = m.summary(slo=1.0)
+    assert s["completed"] == 1
+    assert s["cancelled"] == 1 and s["timed_out"] == 1
+    # slack over every terminal record with a deadline: +4.7 and 0.0
+    assert s["deadline_slack"]["p99"] == pytest.approx(4.7, abs=0.1)
+    # reaped requests never enter TTFT percentiles or goodput
+    assert s["ttft"]["p99"] == pytest.approx(0.2)
+    assert s["goodput_tok_s"] == pytest.approx(1 / 10.0)
+    assert m.records[1].finished is None
+    assert m.records[2].admitted is None
+    with pytest.raises(ValueError, match="unknown terminal status"):
+        m.on_reap(late, 3.0, "exploded")
+
+
+# --------------------------------------------------------------------------
+# fault-plane ledger contracts (synthetic streams)
+# --------------------------------------------------------------------------
+
+def _feed(ledger, rows):
+    tr = SpanTracer()
+    ledger.bind(tr)
+    for kind, t, kw in rows:
+        tr.emit(kind, t=t, **kw)
+    return ledger
+
+
+def test_cancel_halts_stream_contract():
+    led = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("token", 1.0, {"rid": 1, "lane": 0, "ttft": 1.0}),
+        ("cancel", 1.5, {"rid": 1, "lane": 0}),
+        ("token", 2.0, {"rid": 1, "lane": 0}),    # phantom emission
+    ])
+    assert led.n_violations["cancel_halts_stream"] == 1
+    assert "after being reaped" in led.violations[0]["detail"]
+    # a clean reap is quiet afterwards: no violation
+    led2 = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("token", 1.0, {"rid": 1, "lane": 0, "ttft": 1.0}),
+        ("deadline_miss", 1.5, {"rid": 1, "lane": 0}),
+    ])
+    led2.finalize(2.0)
+    assert led2.total_violations == 0
+    # the lane is reusable after the reap — no conservation break
+    led3 = _feed(InvariantLedger(), [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("cancel", 1.0, {"rid": 1, "lane": 0}),
+        ("queued", 1.0, {"rid": 2}),
+        ("admitted", 1.5, {"rid": 2, "lane": 0}),
+        ("token", 2.0, {"rid": 2, "lane": 0, "ttft": 2.0}),
+        ("finish", 2.5, {"rid": 2, "lane": 0}),
+    ])
+    led3.finalize(3.0)
+    assert led3.total_violations == 0
+
+
+def test_cancel_releases_pages_contract():
+    pool = KVPool(n_lanes=2, page_size=4, lane_pages=4, n_pages=9)
+    assert pool.reserve(np.arange(4, dtype=np.int32), 4)
+    pool.admit(0, np.arange(4, dtype=np.int32), 4)
+    led = InvariantLedger(pool=pool)
+    _feed(led, [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("cancel", 1.0, {"rid": 1, "lane": 0}),   # lane 0 still holds!
+    ])
+    assert led.n_violations["cancel_releases_pages"] == 1
+    assert "still holds" in led.violations[-1]["detail"]
+    # released first (the server's reap order) -> clean
+    pool.release(0)
+    led2 = InvariantLedger(pool=pool)
+    _feed(led2, [
+        ("queued", 0.0, {"rid": 1}),
+        ("admitted", 0.5, {"rid": 1, "lane": 0}),
+        ("cancel", 1.0, {"rid": 1, "lane": 0}),
+    ])
+    assert led2.n_violations["cancel_releases_pages"] == 0
+    assert led2.checks["cancel_releases_pages"] == 1
+
+
+def test_rung_stall_liveness_contract():
+    # an escalation overlapping a scripted stall gets the stall's
+    # duration as extra allowance...
+    led = _feed(InvariantLedger(horizon=5.0), [
+        ("escalate", 0.0, {"rid": 1, "model": 1}),
+        ("rung_stall", 0.0, {"model": 1, "t0": 0.0, "until": 3.0}),
+        ("esc_resolve", 7.0, {"rid": 1, "model": 1}),   # 7 <= 5 + 3
+    ])
+    led.finalize(8.0)
+    assert led.n_violations["rung_stall_liveness"] == 0
+    assert led.checks["rung_stall_liveness"] >= 1
+    # ...but no more: exceeding horizon + allowance is a deadlock
+    led2 = _feed(InvariantLedger(horizon=5.0), [
+        ("escalate", 0.0, {"rid": 1, "model": 1}),
+        ("rung_stall", 0.0, {"model": 1, "t0": 0.0, "until": 3.0}),
+        ("esc_resolve", 9.0, {"rid": 1, "model": 1}),   # 9 > 5 + 3
+    ])
+    assert led2.n_violations["rung_stall_liveness"] == 1
+    # a stall on a DIFFERENT model grants no allowance
+    led3 = _feed(InvariantLedger(horizon=5.0), [
+        ("escalate", 0.0, {"rid": 1, "model": 1}),
+        ("rung_stall", 0.0, {"model": 0, "t0": 0.0, "until": 3.0}),
+        ("esc_resolve", 7.0, {"rid": 1, "model": 1}),   # 7 > 5 + 0
+    ])
+    assert led3.n_violations["escalation_resolves"] == 1
+    assert led3.n_violations["rung_stall_liveness"] == 0
+
+
+def test_ledger_report_lists_fault_contracts():
+    from repro.serving.obs.audit import CONTRACTS
+    for c in ("cancel_halts_stream", "cancel_releases_pages",
+              "rung_stall_liveness"):
+        assert c in CONTRACTS
+    rep = InvariantLedger().report()
+    for c in CONTRACTS:
+        assert c in rep["contracts"]
+    from benchmarks.check_trace import validate_ledger
+    assert validate_ledger(json.loads(json.dumps(rep))) == []
+    # a report missing the fault contracts predates the fault plane
+    old = json.loads(json.dumps(rep))
+    del old["contracts"]["cancel_halts_stream"]
+    assert validate_ledger(old) != []
+
+
+# --------------------------------------------------------------------------
+# perfetto export of reaped spans
+# --------------------------------------------------------------------------
+
+def test_perfetto_reaped_request_closes_span():
+    from repro.serving.obs.export import to_perfetto
+    tr = SpanTracer()
+    tr.emit("queued", t=0.0, rid=5)
+    tr.emit("admitted", t=1.0, rid=5, lane=0, sid=0)
+    tr.emit("token", t=2.0, rid=5, lane=0, node=1, sid=0, ttft=2.0)
+    tr.emit("cancel", t=3.0, rid=5, lane=0)
+    doc = to_perfetto(tr.events)
+    [span] = [ev for ev in doc["traceEvents"] if ev["ph"] == "X"]
+    assert span["name"] == "req 5 (cancel)"
+    assert span["dur"] == pytest.approx(2e6)     # admit -> cancel, µs
+    # the instant marker survives alongside the closed span
+    assert any(ev["ph"] == "i" and ev["name"] == "cancel"
+               for ev in doc["traceEvents"])
+
+
+# --------------------------------------------------------------------------
+# the soak chaos leg end-to-end
+# --------------------------------------------------------------------------
+
+def test_soak_chaos_leg_smoke(tmp_path):
+    """The acceptance gate: the chaos soak leg passes with zero ledger
+    violations, zero leaked pages, a deterministic replay, and
+    governor-on goodput strictly above governor-off at equal rate."""
+    from benchmarks.soak import run_leg
+    row = run_leg("chaos_faults", 30.0, 3, str(tmp_path))
+    assert row["ok"], row
+    assert row["ledger_violations"] == 0
+    assert row["replay_ok"]
+    assert row["gate_errors"] == []
+    assert row["cancelled"] + row["timed_out"] > 0
+    events = json.loads((tmp_path / "events.json").read_text())
+    assert events["faults"]["schema"] == "faults/v1"
