@@ -39,13 +39,14 @@ Run standalone for the CI smoke + JSON artifacts:
       --json
 
 ``--json`` (over)writes the stable ``BENCH_runtime.json`` at the repo
-root (schema ``bench_runtime/v5``: one row per rate x strategy x
+root (schema ``bench_runtime/v6``: one row per rate x strategy x
 kv-mode x prefill-mode x cascade-variant x adaptive-leg with goodput /
 TTFT p50/p99 / pages-in-use; earlier fields are unchanged — v2 added
 the ``prefill`` axis + chunk token counters, v3 the ``cascade`` axis +
 served-loss quality axis, v4 the ``adaptive`` axis + active gear id +
 gear-switch / recalibration counters, v5 the decision-attribution
-cells rolled up from the observability tracer).  Each run is one
+cells rolled up from the observability tracer, v6 the decision-quality
+regret/frontier axis from the `RegretMeter`).  Each run is one
 snapshot; the
 trajectory accumulates across commits via git history and the per-run
 CI artifact upload, and ``benchmarks/check_regression.py`` (CI) fails
@@ -63,7 +64,8 @@ import numpy as np
 from repro import strategy
 from repro.core import traces
 from repro.serving import runtime as rt
-from repro.serving.obs import Observability, decision_attribution
+from repro.serving.obs import (Observability, RegretMeter,
+                               decision_attribution)
 from repro.serving.runtime.request import Request
 from repro.serving.runtime.workload import WorkloadSpec, make_workload
 
@@ -300,7 +302,7 @@ HEAD_OVERTHINK = 0.35          # extra overthink prob on model heads
 DEPTHS = ((2.2, 2.8, 3.2), (4.0, 8.0, 12.0))
 
 
-def _cascade_sim_setup(seed: int = 0):
+def _cascade_sim_setup(seed: int = 0, depths=DEPTHS):
     """Multi-model calibration traces: one (T, 6) bank whose first 3
     columns are the small model's ramps+head and last 3 the large
     model's (`core.traces.cascade_traces`) — the large model is better
@@ -309,11 +311,12 @@ def _cascade_sim_setup(seed: int = 0):
     it probed, while recall serves the argmin over everything it
     probed, exits the small model early on easy tokens, and escalates
     only the hard ones.  That asymmetry is what the frontier
-    measures."""
+    measures.  ``depths`` parameterizes the effective node depths
+    (`regret_smoke` sweeps deeper large-model ladders through it)."""
     from repro.serving.cascade import ModelBank, ModelSpec
     rng = np.random.default_rng(seed)
     losses, boundaries = traces.cascade_traces(
-        rng, 6_000, DEPTHS, overthink_prob=0.15,
+        rng, 6_000, depths, overthink_prob=0.15,
         head_overthink=HEAD_OVERTHINK)
     assert boundaries == (N_SMALL, N_LARGE)
     lam = CASCADE_LAM
@@ -380,7 +383,8 @@ CASCADE_VARIANTS = ("small_only", "large_only", "cascade_norecall",
 
 
 def cascade_vs_monolith(*, rates, duration, seed=0,
-                        variants=CASCADE_VARIANTS, keep_trace=False):
+                        variants=CASCADE_VARIANTS, keep_trace=False,
+                        depths=DEPTHS):
     """Rate x variant sweep: {small-only, large-only, cascade-no-recall,
     cascade-recall} on the SAME request stream and trace rows, reporting
     goodput AND mean served trace loss — the two Pareto axes.  The
@@ -393,8 +397,16 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
     token events roll up into per-row decision-ATTRIBUTION cells
     (exit node x gear x escalated -> tokens / latency / served loss).
     ``keep_trace=True`` additionally hands each row its live tracer
-    under the non-JSON ``"_trace"`` key (cascade_smoke exports one)."""
-    casc, bank, bank_traces = _cascade_sim_setup(seed)
+    under the non-JSON ``"_trace"`` key (cascade_smoke exports one) and
+    the live `RegretMeter` under ``"_regret"`` (regret_smoke exports
+    its ``obs_regret/v1``/``obs_pareto/v1`` docs).
+
+    From v6 on, every cascade leg also serves with the `RegretMeter`
+    armed: per-request distance from the offline-optimal walk over the
+    SAME trace bank the stepper replays (exact mode), rolled up as the
+    ``regret_mean``/``regret_p99``/``pareto_points`` row keys — the
+    separation theorem as a regression axis."""
+    casc, bank, bank_traces = _cascade_sim_setup(seed, depths=depths)
     rows = []
     for rate in rates:
         spec = WorkloadSpec(rate=rate, duration=duration, prompt_len=8,
@@ -404,6 +416,11 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
             stepper, sid_of, lanes = _cascade_variant_stepper(
                 variant, casc, bank, bank_traces, requests)
             obs = Observability()
+            if variant.startswith("cascade_"):
+                # monoliths serve sliced trace columns under their own
+                # uniform ladder — the calibrated oracle is not defined
+                # for them, so only ladder variants meter regret
+                obs.regret = RegretMeter(casc)
             server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
                                slo=SLO, obs=obs)
             s = server.serve(requests).summary(slo=SLO)
@@ -433,8 +450,17 @@ def cascade_vs_monolith(*, rates, duration, seed=0,
             row["attribution"] = decision_attribution(
                 obs.tracer.events,
                 gear_of=lambda sid, v=variant: f"static:{v}")
+            if obs.regret is not None:
+                reg = obs.regret.report()
+                row["regret_mean"] = reg["regret_mean"]
+                row["regret_p99"] = reg["regret_p99"]
+                row["pareto_points"] = \
+                    obs.regret.pareto.as_doc()["frontier_size"]
+                row["derived"] += f" regret={reg['regret_mean']:.4f}"
             if keep_trace:
                 row["_trace"] = obs.tracer
+                if obs.regret is not None:
+                    row["_regret"] = obs.regret
             rows.append(row)
     return rows
 
@@ -686,11 +712,15 @@ def stable_report(rows: list[dict]) -> dict:
     with the served-loss quality axis and escalation/recall counters,
     v4 the ``adaptive`` axis (``adaptive`` | ``frozen_<gear>`` | null)
     plus the active gear id and gear-switch / recalibration counters
-    from the control plane (DESIGN.md §11), and v5 adds per-row
+    from the control plane (DESIGN.md §11), v5 adds per-row
     decision-ATTRIBUTION cells (exit node x gear x escalated ->
     tokens / latency contribution / served-loss contribution) rolled
     up from the observability tracer (DESIGN.md §12; null on untraced
-    legs).  `check_regression` matches rows by name and ignores keys
+    legs), and v6 the decision-quality axis (DESIGN.md §15):
+    ``regret_mean`` / ``regret_p99`` (per-request distance from the
+    offline-optimal walk, exact mode) and ``pareto_points`` (streaming
+    frontier size) on the metered cascade legs, null elsewhere.
+    `check_regression` matches rows by name and ignores keys
     it does not know, so every axis addition is backward-compatible."""
     out = []
     for row in rows:
@@ -728,8 +758,12 @@ def stable_report(rows: list[dict]) -> dict:
             "recalibrations": row.get("recalibrations"),
             # v5 axis: decision attribution (DESIGN.md §12)
             "attribution": row.get("attribution"),
+            # v6 axis: decision-quality regret + frontier (DESIGN.md §15)
+            "regret_mean": row.get("regret_mean"),
+            "regret_p99": row.get("regret_p99"),
+            "pareto_points": row.get("pareto_points"),
         })
-    return {"schema": "bench_runtime/v5", "rows": out}
+    return {"schema": "bench_runtime/v6", "rows": out}
 
 
 def run(smoke: bool = False) -> list[dict]:

@@ -121,6 +121,8 @@ def main() -> int:
                                                or args.metrics_out))
     tracers = {row["name"]: row.pop("_trace")
                for row in rows if "_trace" in row}
+    for row in rows:  # regret_smoke owns the meter docs; drop the live handle
+        row.pop("_regret", None)
     if args.trace_out or args.metrics_out:
         name = f"runtime_sim_cascade_cascade_recall_r{max(RATES):g}"
         row = next(r for r in rows if r["name"] == name)

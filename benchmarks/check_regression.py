@@ -5,7 +5,11 @@ goodput regression at matching (rate, strategy, kv, prefill) points.
 Rows are matched by their stable ``name`` (which encodes the sweep
 point) and cross-checked on the axis fields (rate/strategy/kv/prefill/
 cascade/adaptive), so a renamed or re-scoped row never silently
-compares apples to oranges.  Two thresholds:
+compares apples to oranges.  Besides goodput, rows carrying the v6
+``regret_mean`` decision-quality axis are guarded the same way — a
+>20% regret worsening on a deterministic sim row fails (with an
+absolute epsilon floor, since the recall legs sit at exactly zero
+where relative change is meaningless).  Two thresholds:
 
   * virtual-clock rows (``kv == "sim"``) are DETERMINISTIC — seeded
     workloads, virtual time — so any drop beyond ``--max-drop``
@@ -30,6 +34,10 @@ import json
 import sys
 
 AXES = ("rate", "strategy", "kv", "prefill", "cascade", "adaptive")
+# regret guard floor: below this absolute regret a row counts as "at
+# zero" (the recall legs), where relative worsening is meaningless —
+# crossing the floor from ~0 upward is what fails
+REGRET_EPS = 1e-3
 
 
 def compare(old: dict, new: dict, *, max_drop: float = 0.20,
@@ -57,21 +65,36 @@ def compare(old: dict, new: dict, *, max_drop: float = 0.20,
                 f"{[row.get(a) for a in mismatch]}) — rename the row "
                 "instead of repointing it")
             continue
+        wall = row.get("kv") != "sim"
         g_old = ref.get("goodput_tok_s")
         g_new = row.get("goodput_tok_s")
-        if not g_old or g_new is None:
-            continue
-        checked += 1
-        drop = 1.0 - g_new / g_old
-        wall = row.get("kv") != "sim"
-        limit = max_drop_wall if wall else max_drop
-        msg = (f"{row['name']}: goodput {g_old:.2f} -> {g_new:.2f} tok/s "
-               f"({100 * drop:.0f}% drop"
-               f"{', wall-clock' if wall else ''})")
-        if limit is not None and drop > limit:
-            failures.append(msg)
-        elif drop > max_drop:
-            warnings.append(msg)
+        if g_old and g_new is not None:
+            checked += 1
+            drop = 1.0 - g_new / g_old
+            limit = max_drop_wall if wall else max_drop
+            msg = (f"{row['name']}: goodput {g_old:.2f} -> {g_new:.2f} "
+                   f"tok/s ({100 * drop:.0f}% drop"
+                   f"{', wall-clock' if wall else ''})")
+            if limit is not None and drop > limit:
+                failures.append(msg)
+            elif drop > max_drop:
+                warnings.append(msg)
+        # decision-quality axis (v6): regret WORSENS upward, so the
+        # guarded direction flips.  Only deterministic sim rows can
+        # fail, same policy as goodput.
+        r_old = ref.get("regret_mean")
+        r_new = row.get("regret_mean")
+        if r_old is not None and r_new is not None:
+            checked += 1
+            worse = (r_new - r_old) / max(r_old, REGRET_EPS)
+            msg = (f"{row['name']}: regret {r_old:.4f} -> {r_new:.4f} "
+                   f"({100 * worse:.0f}% worse"
+                   f"{', wall-clock' if wall else ''})")
+            if worse > max_drop and r_new > REGRET_EPS:
+                if wall:
+                    warnings.append(msg)
+                else:
+                    failures.append(msg)
     return failures, warnings, checked
 
 

@@ -24,13 +24,21 @@ jsonschema dependency — over every document a traced serve writes:
     internally-consistent totals, and the fault-plane contracts
     (cancel / page-release / stall-liveness) must be known;
   * the chaos script (schema ``faults/v1`` from `FaultPlan.as_doc`)
-    embedded in traces and event logs served under fault injection.
+    embedded in traces and event logs served under fault injection;
+  * the decision-quality report (schema ``obs_regret/v1`` from
+    `RegretMeter.report`): named cause buckets that exactly partition
+    the total, a pinned 64-hex digest, and a known verdict — an
+    unverifiable report must demote its numbers, not assert them;
+  * the accuracy-latency frontier (schema ``obs_pareto/v1`` from
+    `ParetoTracker.as_doc`): well-formed frontier points with
+    internally-consistent point/frontier counts per gear.
 
 Usage (exit 1 on any violation, so the CI step fails loudly):
 
   python -m benchmarks.check_trace --trace serve-trace.json \
       --metrics serve-metrics.json --bundle 'obs/flight-*.json' \
-      --events obs/events.json --ledger obs/ledger.json
+      --events obs/events.json --ledger obs/ledger.json \
+      --regret obs/regret.json --pareto obs/pareto.json
 """
 
 from __future__ import annotations
@@ -58,6 +66,10 @@ _EVENT_KINDS = {
 # serve
 _REQUIRED_CONTRACTS = ("cancel_halts_stream", "cancel_releases_pages",
                        "rung_stall_liveness")
+
+# the exact cause partition a regret report must carry (obs/regret.py)
+_REGRET_CAUSES = ("exited_too_early", "escalated_too_late",
+                  "recall_forgone", "governor_denied", "gear_transient")
 
 
 def _err(errors: list[str], where: str, msg: str) -> None:
@@ -328,6 +340,137 @@ def validate_ledger(doc: dict) -> list[str]:
     return errors
 
 
+def validate_regret(doc: dict) -> list[str]:
+    """Structural + consistency checks on an ``obs_regret/v1`` report
+    (the `RegretMeter` decision-quality document)."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["regret: document is not a JSON object"]
+    if doc.get("schema") != "obs_regret/v1":
+        _err(errors, "regret", f"schema {doc.get('schema')!r} != "
+             "'obs_regret/v1'")
+    verdict = doc.get("verdict")
+    if verdict not in ("exact", "expected", "unverifiable"):
+        _err(errors, "regret", f"bad verdict {verdict!r}")
+    unverifiable = verdict == "unverifiable"
+    for key in ("requests", "tokens"):
+        v = doc.get(key)
+        if not isinstance(v, int) or v < 0:
+            _err(errors, "regret", f"bad {key} {v!r}")
+    dig = doc.get("digest")
+    if not isinstance(dig, str) or len(dig) != 64:
+        _err(errors, "regret", "digest is not a sha256 hex digest")
+    for key in ("regret_mean", "regret_p99", "regret_max",
+                "regret_total"):
+        v = doc.get(key)
+        if unverifiable:
+            # an unverifiable report must DEMOTE its numbers to
+            # ``suspect``, not assert them
+            if v is not None:
+                _err(errors, "regret", f"unverifiable report asserts "
+                     f"{key}={v!r} (must be null, demoted to suspect)")
+        elif not isinstance(v, (int, float)) or v < 0:
+            _err(errors, "regret", f"bad {key} {v!r}")
+    if unverifiable and not isinstance(doc.get("suspect"), dict):
+        _err(errors, "regret", "unverifiable report without a suspect "
+             "block")
+    causes = doc.get("causes")
+    if not isinstance(causes, dict):
+        _err(errors, "regret", "causes mapping missing")
+    elif not unverifiable:
+        unknown = sorted(set(causes) - set(_REGRET_CAUSES))
+        if unknown:
+            _err(errors, "regret", f"unknown cause buckets {unknown}")
+        for name, v in causes.items():
+            if not isinstance(v, (int, float)) or v < 0:
+                _err(errors, "regret", f"causes[{name}]: bad value {v!r}")
+        total = doc.get("regret_total")
+        if isinstance(total, (int, float)) and not unknown and all(
+                isinstance(v, (int, float)) for v in causes.values()):
+            tally = sum(causes.values())
+            if abs(tally - total) > 1e-6 + 1e-6 * abs(total):
+                _err(errors, "regret", f"cause sum {tally} does not "
+                     f"partition regret_total {total}")
+    for i, w in enumerate(doc.get("worst") or ()):
+        where = f"regret.worst[{i}]"
+        if not isinstance(w, dict):
+            _err(errors, where, "not an object")
+            continue
+        if not isinstance(w.get("rid"), int):
+            _err(errors, where, f"bad rid {w.get('rid')!r}")
+        for key in ("regret", "latency_s"):
+            v = w.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                _err(errors, where, f"bad {key} {v!r}")
+    return errors
+
+
+def validate_pareto(doc: dict) -> list[str]:
+    """Structural + consistency checks on an ``obs_pareto/v1``
+    accuracy-latency frontier document."""
+    errors: list[str] = []
+    if not isinstance(doc, dict):
+        return ["pareto: document is not a JSON object"]
+    if doc.get("schema") != "obs_pareto/v1":
+        _err(errors, "pareto", f"schema {doc.get('schema')!r} != "
+             "'obs_pareto/v1'")
+    points = doc.get("points")
+    if not isinstance(points, int) or points < 0:
+        _err(errors, "pareto", f"bad points {points!r}")
+    frontier = doc.get("frontier")
+    if not isinstance(frontier, list):
+        return errors + ["pareto: frontier list missing"]
+    if doc.get("frontier_size") != len(frontier):
+        _err(errors, "pareto", f"frontier_size "
+             f"{doc.get('frontier_size')!r} != {len(frontier)} points")
+    if isinstance(points, int) and len(frontier) > points:
+        _err(errors, "pareto", f"frontier larger ({len(frontier)}) than "
+             f"the served population ({points})")
+    last = None
+    for i, p in enumerate(frontier):
+        where = f"pareto.frontier[{i}]"
+        if not isinstance(p, dict):
+            _err(errors, where, "point is not an object")
+            continue
+        if not isinstance(p.get("rid"), int):
+            _err(errors, where, f"bad rid {p.get('rid')!r}")
+        if not isinstance(p.get("gear"), str) or not p["gear"]:
+            _err(errors, where, "missing gear label")
+        lat, loss = p.get("latency_s"), p.get("loss")
+        if not isinstance(lat, (int, float)) or lat < 0:
+            _err(errors, where, f"bad latency_s {lat!r}")
+            continue
+        if not isinstance(loss, (int, float)):
+            _err(errors, where, f"bad loss {loss!r}")
+            continue
+        # a frontier is sorted by latency and strictly improving in
+        # loss — anything else contains a dominated point
+        if last is not None and not (lat > last[0] and loss < last[1]):
+            _err(errors, where, f"not on a frontier: ({lat}, {loss}) "
+                 f"vs previous ({last[0]}, {last[1]})")
+        last = (lat, loss)
+    by_gear = doc.get("by_gear")
+    if not isinstance(by_gear, dict):
+        _err(errors, "pareto", "by_gear mapping missing")
+    else:
+        tally = 0
+        for gear, s in by_gear.items():
+            where = f"pareto.by_gear[{gear}]"
+            if not isinstance(s, dict):
+                _err(errors, where, "not an object")
+                continue
+            for key in ("points", "frontier"):
+                v = s.get(key)
+                if not isinstance(v, int) or v < 0:
+                    _err(errors, where, f"bad {key} {v!r}")
+            tally += s.get("points", 0) \
+                if isinstance(s.get("points"), int) else 0
+        if isinstance(points, int) and tally != points:
+            _err(errors, "pareto", f"per-gear point sum {tally} != "
+                 f"points {points}")
+    return errors
+
+
 def _run_one(path: str, validator, describe) -> list[str]:
     with open(path) as f:
         doc = json.load(f)
@@ -350,11 +493,16 @@ def main() -> int:
                     help="obs_trace/v1 event log to validate")
     ap.add_argument("--ledger", default=None,
                     help="ledger_report/v1 audit verdicts to validate")
+    ap.add_argument("--regret", default=None,
+                    help="obs_regret/v1 decision-quality report to "
+                         "validate")
+    ap.add_argument("--pareto", default=None,
+                    help="obs_pareto/v1 frontier document to validate")
     args = ap.parse_args()
     if not (args.trace or args.metrics or args.bundle or args.events
-            or args.ledger):
+            or args.ledger or args.regret or args.pareto):
         ap.error("nothing to check: pass --trace, --metrics, --bundle, "
-                 "--events and/or --ledger")
+                 "--events, --ledger, --regret and/or --pareto")
     failures: list[str] = []
     if args.trace:
         failures += _run_one(
@@ -387,6 +535,18 @@ def main() -> int:
             args.ledger, validate_ledger,
             lambda d: f"{len(d.get('contracts', ()))} contracts, "
                       f"{d.get('total_violations')} violations"
+            if isinstance(d, dict) else "not an object")
+    if args.regret:
+        failures += _run_one(
+            args.regret, validate_regret,
+            lambda d: f"{d.get('requests')} requests, verdict "
+                      f"{d.get('verdict')!r}"
+            if isinstance(d, dict) else "not an object")
+    if args.pareto:
+        failures += _run_one(
+            args.pareto, validate_pareto,
+            lambda d: f"{d.get('frontier_size')} frontier points of "
+                      f"{d.get('points')}"
             if isinstance(d, dict) else "not an object")
     for msg in failures:
         print(f"FAIL  {msg}")

@@ -1,0 +1,136 @@
+"""CI regret smoke: the decision-quality acceptance gate (DESIGN.md
+§15).
+
+Runs the recall and no-recall cascade legs of
+`bench_runtime.cascade_vs_monolith` under the `RegretMeter` at a
+deterministic seed (virtual clock, SimStepper — no model params,
+CI-fast) across a ladder-depth sweep, and asserts the separation
+theorem's live-telemetry shadow:
+
+  1. RECALL IS REGRET-FREE: the recall cascade's mean per-request
+     regret is ~0 (``RECALL_TOL``) at EVERY ladder depth — serving the
+     oracle policy over the same calibrated tables makes realized
+     loss meet the offline-optimal walk token for token.
+  2. SEPARATION: the no-recall (commit) cascade's mean regret strictly
+     exceeds the recall cascade's at every depth — once committed, a
+     wrong early exit can never be taken back.
+  3. DEPTH GROWTH: the no-recall regret is monotone-increasing as the
+     large-model rungs stretch apart (the paper's no-constant-factor
+     statement: the price of commitment grows with the ladder, while
+     recall stays pinned at zero).
+
+The depth sweep stretches the SPREAD of the large-model ladder
+(4.0, 4.0 + 4k, 4.0 + 8k for k in ``DEPTH_KS``) rather than scaling
+all depths uniformly — uniform scaling also slows the oracle's own
+best walk, which mutes the gap; stretching the spread grows exactly
+the part the commit policy forfeits.
+
+Exit code 1 on any violated claim, so the CI job fails loudly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RECALL_TOL = 1e-6      # recall regret is exactly 0 by construction
+DEPTH_KS = (1.0, 1.5, 2.0)   # large-ladder spread stretch factors
+RATE = 2.0             # pre-wall rate: both ladders fully exercised
+DURATION = 30.0
+VARIANTS = ("cascade_norecall", "cascade_recall")
+
+
+def _depths(k: float, base) -> tuple:
+    """Stretch the large-model ladder spread by ``k`` (small ladder
+    and the cheapest large rung stay fixed)."""
+    return (base[0], (4.0, 4.0 + 4.0 * k, 4.0 + 8.0 * k))
+
+
+def check(sweeps: dict[float, dict[str, float]]) -> list[str]:
+    """Verify the claims on per-depth mean regrets; returns failure
+    messages.  ``sweeps`` maps stretch factor k -> variant -> regret."""
+    failures = []
+    for k in sorted(sweeps):
+        reg = sweeps[k]
+        missing = [v for v in VARIANTS if v not in reg]
+        if missing:
+            failures.append(f"k={k:g}: sweep missing variants {missing}")
+            continue
+        if reg["cascade_recall"] > RECALL_TOL:
+            failures.append(
+                f"k={k:g}: recall regret {reg['cascade_recall']:.6f} > "
+                f"{RECALL_TOL} — the oracle policy should be regret-free")
+        if not reg["cascade_norecall"] > reg["cascade_recall"]:
+            failures.append(
+                f"k={k:g}: no-recall regret {reg['cascade_norecall']:.6f}"
+                f" <= recall {reg['cascade_recall']:.6f} — separation "
+                "claim violated")
+    ks = sorted(k for k in sweeps if "cascade_norecall" in sweeps[k])
+    nr = [sweeps[k]["cascade_norecall"] for k in ks]
+    for a, b, ka, kb in zip(nr, nr[1:], ks, ks[1:]):
+        if not b > a:
+            failures.append(
+                f"no-recall regret not monotone in ladder depth: "
+                f"{a:.6f} (k={ka:g}) >= {b:.6f} (k={kb:g})")
+    return failures
+
+
+def main() -> int:
+    from benchmarks.bench_runtime import DEPTHS, cascade_vs_monolith
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="regret-metrics.json",
+                    help="write the sweep rows JSON here (CI artifact)")
+    ap.add_argument("--regret-out", default=None,
+                    help="write the deepest-ladder recall leg's "
+                         "obs_regret/v1 report (the artifact "
+                         "benchmarks.check_trace --regret validates)")
+    ap.add_argument("--pareto-out", default=None,
+                    help="write that leg's obs_pareto/v1 frontier doc")
+    args = ap.parse_args()
+    keep = bool(args.regret_out or args.pareto_out)
+    all_rows: list[dict] = []
+    sweeps: dict[float, dict[str, float]] = {}
+    meters: dict[tuple[float, str], object] = {}
+    for k in DEPTH_KS:
+        rows = cascade_vs_monolith(
+            rates=(RATE,), duration=DURATION, variants=VARIANTS,
+            keep_trace=keep, depths=_depths(k, DEPTHS))
+        sweeps[k] = {}
+        for row in rows:
+            row.pop("_trace", None)
+            meter = row.pop("_regret", None)
+            if meter is not None:
+                meters[(k, row["cascade"])] = meter
+            row["depth_k"] = k
+            if row.get("regret_mean") is not None:
+                sweeps[k][row["cascade"]] = row["regret_mean"]
+            all_rows.append(row)
+    if keep:
+        # the deepest ladder is where the separation is widest — that
+        # leg's report is the representative CI artifact
+        meter = meters[(max(DEPTH_KS), "cascade_recall")]
+        if args.regret_out:
+            with open(args.regret_out, "w") as f:
+                json.dump(meter.report(), f, indent=1, default=float)
+            print(f"wrote {args.regret_out}")
+        if args.pareto_out:
+            with open(args.pareto_out, "w") as f:
+                json.dump(meter.pareto.as_doc(), f, indent=1,
+                          default=float)
+            print(f"wrote {args.pareto_out}")
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=float)
+    for k in sorted(sweeps):
+        line = "  ".join(f"{v}={sweeps[k][v]:.5f}"
+                         for v in VARIANTS if v in sweeps[k])
+        print(f"k={k:g}: {line}")
+    failures = check(sweeps)
+    for msg in failures:
+        print(f"FAIL  {msg}")
+    print(f"wrote {args.out}; {len(failures)} failed claims")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,8 +43,10 @@ Every ``--server`` mode can be OBSERVED (repro.serving.obs, DESIGN.md
 §12): ``--trace-out`` writes a Chrome/Perfetto trace of the request
 lifecycle and every per-token decision, ``--metrics-out`` snapshots
 the metrics registry the console report renders from,
-``--flight-recorder DIR`` arms anomaly post-mortem bundles, and
-``--profile-dir`` captures a ``jax.profiler`` trace around the loop.
+``--flight-recorder DIR`` arms anomaly post-mortem bundles,
+``--regret`` arms the decision-quality regret meter + Pareto frontier
+(DESIGN.md §15), and ``--profile-dir`` captures a ``jax.profiler``
+trace around the loop.
 """
 
 from __future__ import annotations
@@ -113,7 +115,7 @@ def build_strategy(name: str, casc: strategy.Cascade, *, threshold: float,
     return strategy.make(name, casc)
 
 
-def _build_obs(args, *, policy=None, boundaries=None,
+def _build_obs(args, *, policy=None, boundaries=None, casc=None,
                ) -> Observability | None:
     """The observability plane (DESIGN.md §12/§13), built only when
     asked — a ``None`` obs keeps every producer guard dead and the
@@ -123,7 +125,10 @@ def _build_obs(args, *, policy=None, boundaries=None,
     the four separate flags name into DIR (trace.json, events.json,
     metrics.json, flight bundles) and additionally arms the
     `InvariantLedger` (audit contracts + ledger.json); explicit flags
-    still win for their own sink.
+    still win for their own sink.  ``--regret`` arms the decision-
+    quality `RegretMeter` against the serve's calibrated `Cascade`
+    (DESIGN.md §15) — another pure tracer listener, same discipline
+    as the ledger.
     """
     if args.obs_dir:
         os.makedirs(args.obs_dir, exist_ok=True)
@@ -133,7 +138,7 @@ def _build_obs(args, *, policy=None, boundaries=None,
             os.path.join(args.obs_dir, "metrics.json")
         args.flight_recorder = args.flight_recorder or args.obs_dir
     if not (args.trace_out or args.metrics_out or args.flight_recorder
-            or args.profile_dir):
+            or args.profile_dir or args.regret):
         return None
     flight = None
     if args.flight_recorder:
@@ -143,7 +148,11 @@ def _build_obs(args, *, policy=None, boundaries=None,
     if args.obs_dir:
         ledger = InvariantLedger(policy=policy, boundaries=boundaries,
                                  out_dir=args.obs_dir)
-    return Observability(flight=flight, ledger=ledger,
+    regret = None
+    if args.regret:
+        from repro.serving.obs.regret import RegretMeter
+        regret = RegretMeter(casc)
+    return Observability(flight=flight, ledger=ledger, regret=regret,
                          profile_dir=args.profile_dir)
 
 
@@ -158,12 +167,21 @@ def _finish_obs(args, obs: Observability | None,
         report.add_trace(obs.tracer, obs.flight)
         if obs.ledger is not None:
             report.add_ledger(obs.ledger.report())
-        if obs.tracer.n_emitted and not obs.tracer.dropped:
-            report.add_lossmap(goodput_lossmap(
-                obs.tracer.events, slo=args.slo_ms / 1e3))
+        # always rendered, even for an empty or overflowed ring — an
+        # explicit zero (or a partial-ring map) over silence, so a
+        # bundle consumer never has to guess whether the section was
+        # clean or merely missing
+        report.add_lossmap(goodput_lossmap(
+            obs.tracer.events, slo=args.slo_ms / 1e3))
+        if obs.regret is not None:
+            # listeners see every emission — a ring overflow does not
+            # taint the meter, so the report stays asserted
+            report.add_regret(obs.regret.report())
+            report.add_pareto(obs.regret.pareto.as_doc())
     report.print()
     if obs is not None and args.trace_out:
-        write_trace(obs.tracer, args.trace_out, faults=faults)
+        write_trace(obs.tracer, args.trace_out, faults=faults,
+                    regret=obs.regret)
         print(f"wrote Perfetto trace to {args.trace_out} "
               "(load in ui.perfetto.dev)")
     if args.metrics_out:
@@ -175,8 +193,16 @@ def _finish_obs(args, obs: Observability | None,
         if obs.ledger is not None:
             with open(os.path.join(args.obs_dir, "ledger.json"), "w") as f:
                 json.dump(obs.ledger.report(), f, indent=1, default=float)
+        if obs.regret is not None:
+            with open(os.path.join(args.obs_dir, "regret.json"), "w") as f:
+                json.dump(obs.regret.report(), f, indent=1, default=float)
+            with open(os.path.join(args.obs_dir, "pareto.json"), "w") as f:
+                json.dump(obs.regret.pareto.as_doc(), f, indent=1,
+                          default=float)
         print(f"wrote observability bundle to {args.obs_dir} "
-              "(trace + events + metrics + ledger)")
+              "(trace + events + metrics + ledger"
+              + (" + regret + pareto" if obs.regret is not None else "")
+              + ")")
     if obs is not None and obs.flight is not None and obs.flight.bundles:
         print(f"flight recorder: {len(obs.flight.bundles)} anomaly "
               f"bundle(s) in {args.flight_recorder}")
@@ -354,7 +380,7 @@ def _serve_cascade(args) -> None:
     _set_reclaim(args, *(st.pool for st in stepper.steppers))
     slo = args.slo_ms / 1e3
     obs = _build_obs(args, policy=args.escalate_policy,
-                     boundaries=casc.boundaries)
+                     boundaries=casc.boundaries, casc=casc)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos, obs=obs,
                        enforce_deadlines=bool(plan and plan.deadline))
@@ -484,7 +510,7 @@ def _serve_traffic(args, cfg, params, casc) -> None:
         stepper.faults = plan
     _set_reclaim(args, stepper.pool)
     slo = args.slo_ms / 1e3
-    obs = _build_obs(args)
+    obs = _build_obs(args, casc=casc)
     server = rt.Server(stepper, rt.LaneScheduler(args.lanes), sid_of,
                        order=args.order, slo=slo, eos=args.eos,
                        controller=controller, obs=obs,
@@ -649,6 +675,15 @@ def main() -> None:
                          "into DIR (arms the audit ledger; subsumes "
                          "--trace-out/--metrics-out/--flight-recorder, "
                          "which still win for their own sink)")
+    ap.add_argument("--regret", action="store_true",
+                    help="arm the decision-quality regret meter "
+                         "(DESIGN.md §15): per-request regret against "
+                         "the offline-optimal walk over the calibrated "
+                         "tables, decomposed by cause, plus the "
+                         "streaming accuracy-latency Pareto frontier.  "
+                         "Report sections always; regret.json + "
+                         "pareto.json under --obs-dir; a regret "
+                         "counter track in --trace-out")
     ap.add_argument("--profile-dir", default=None,
                     help="jax.profiler logdir captured around the "
                          "serve loop (kernel-level attribution)")
@@ -727,11 +762,11 @@ def main() -> None:
             print("note: --kv paged applies to --server traffic mode; "
                   "the one-shot batch path always uses ring caches")
         if (args.trace_out or args.metrics_out or args.flight_recorder
-                or args.obs_dir):
+                or args.obs_dir or args.regret):
             print("note: --trace-out/--metrics-out/--flight-recorder/"
-                  "--obs-dir observe --server traffic sessions; the "
-                  "one-shot batch path has no request lifecycle to "
-                  "trace")
+                  "--obs-dir/--regret observe --server traffic "
+                  "sessions; the one-shot batch path has no request "
+                  "lifecycle to trace")
         _serve_batch(args, cfg, params, strat)
 
 

@@ -69,8 +69,10 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
 
     ``decide(arrays, losses (B, n_total), occupied (B,), sid (B,),
     floor (B,))`` returns ``(served (B,), probes (M, B) i32,
-    depth (M,) i32)``: the served global node, per-model per-lane
-    node-probe counts, and per-model launched-node counts.  ``arrays``
+    depth (M,) i32, deepest (B,) i32)``: the served global node,
+    per-model per-lane node-probe counts, per-model launched-node
+    counts, and each lane's deepest PROBED node (-1 when nothing was
+    observed — the regret meter's recall-forgone attribution).  ``arrays``
     carries each bank slot's dynamic decision arrays as traced
     arguments — the control plane's hot-swap point: publishing new
     same-shaped tables hits the jit cache.  ``floor`` gates the walk —
@@ -93,6 +95,10 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
         states = tuple(s.init(b) for s in live)
         active = occupied
         np_before = jnp.zeros((b,), jnp.int32)
+        # per-lane deepest probed node, folded from per-node n_probed
+        # deltas — costs no extra strategy calls
+        deepest = jnp.full((b,), -1, jnp.int32)
+        np_lane = jnp.zeros((b,), jnp.int32)
         probes, depth = [], []
         node = 0
         for m in range(n_models):
@@ -103,6 +109,9 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
                 states, cont = bank_observe(live, states, node,
                                             losses[:, node], None, obs,
                                             sid)
+                np_lane_now = probed_of(states, sid)
+                deepest = jnp.where(np_lane_now > np_lane, node, deepest)
+                np_lane = np_lane_now
                 # below its floor a lane passes through un-observed
                 active = jnp.where(node >= floor, cont, active)
                 node += 1
@@ -111,7 +120,7 @@ def make_cascade_decide(bank: ModelBank, strategies: tuple):
             np_before = np_now
             depth.append(d)
         served = bank_serve(live, states, sid)
-        return served, jnp.stack(probes), jnp.stack(depth)
+        return served, jnp.stack(probes), jnp.stack(depth), deepest
 
     return jax.jit(decide)
 
@@ -127,6 +136,7 @@ class CascadeSimStepper:
     tracer = None
     last_loss = None
     last_escalated = None
+    last_deepest = None     # per-lane deepest PROBED node (-1 = silent)
     # fault plane (DESIGN.md §14): the server stamps its virtual clock
     # here each iteration when a FaultPlan rides the stepper
     fault_now = 0.0
@@ -329,6 +339,7 @@ class CascadeSimStepper:
         if otr is not None:
             self.last_loss = np.full(self.n_lanes, np.nan)
             self.last_escalated = np.zeros(self.n_lanes, bool)
+            self.last_deepest = np.full(self.n_lanes, -1)
         # fault plane: rungs frozen by a scripted stall window do no
         # work this step — no grants, no prefill, no catch-up, no
         # decode on their lanes.  The clock still advances (cost >=
@@ -424,6 +435,8 @@ class CascadeSimStepper:
                              node=served, deepest=deepest)
                 self.last_loss[slot] = handoff["loss"]
                 self.last_escalated[slot] = True
+                self.last_deepest[slot] = int(
+                    handoff.get("deepest_node", -1))
             for m in self.router.note_emit(slot,
                                            handoff["probed_models"],
                                            served, lp):
@@ -458,10 +471,11 @@ class CascadeSimStepper:
                 floor[slot] = self.router.floor(slot)
             mask = np.zeros(self.n_lanes, bool)
             mask[decode] = True
-            served, probes, depth = jax.device_get(self._decide(
-                self.bank_arrays(), jnp.asarray(losses),
-                jnp.asarray(mask), jnp.asarray(sid, jnp.int32),
-                jnp.asarray(floor)))
+            served, probes, depth, deepest_arr = jax.device_get(
+                self._decide(
+                    self.bank_arrays(), jnp.asarray(losses),
+                    jnp.asarray(mask), jnp.asarray(sid, jnp.int32),
+                    jnp.asarray(floor)))
             seg_batch += int(depth.sum())
             if self.row_tap is not None:
                 self.row_tap(losses[decode], np.asarray(served)[decode])
@@ -501,6 +515,7 @@ class CascadeSimStepper:
                         "probes": np.asarray(probes[:, slot]),
                         "probed_models": probed,
                         "loss": float(losses[slot, int(served[slot])]),
+                        "deepest_node": int(deepest_arr[slot]),
                     })
                     self.stats.escalations += len(targets)
                     for m in targets:
@@ -539,6 +554,7 @@ class CascadeSimStepper:
                                          loss=float(losses[slot, sv]))
                     if otr is not None:
                         self.last_loss[slot] = float(losses[slot, sv])
+                        self.last_deepest[slot] = int(deepest_arr[slot])
                         if denied:
                             otr.emit("recall",
                                     rid=self.lane_req[slot].rid,

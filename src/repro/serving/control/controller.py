@@ -164,6 +164,12 @@ class AdaptiveController:
         """The currently active gear."""
         return self.bank[self.swap.gear]
 
+    def gear_name_of(self, slot: int) -> str:
+        """Gear label for a strategy-bank slot — the Pareto frontier's
+        per-gear attribution reads routing off the active gear's name
+        rather than the raw slot index."""
+        return self.bank[int(slot)].name
+
     def stats(self) -> dict:
         return {
             "gear": self.gear.name,

@@ -24,6 +24,11 @@ One package threads through every serving subsystem:
     with `span_digest` / `decision_digest` equality checks.
   * `lossmap`  — goodput-loss attribution: the achieved-vs-roofline
     gap decomposed into causes from span intervals.
+  * `regret`   — `RegretMeter`: per-request distance from the
+    offline-optimal walk (the paper's separation theorem as live
+    telemetry), decomposed by decision cause, as a pure listener.
+  * `pareto`   — `ParetoTracker`: the streaming empirical
+    accuracy-latency frontier with per-gear attribution.
   * `report`   — the one serve report renderer (replaces the bespoke
     print blocks `launch/serve.py` used to duplicate).
 
@@ -36,6 +41,8 @@ from dataclasses import dataclass, field
 
 from repro.serving.obs.audit import InvariantLedger, audit_events
 from repro.serving.obs.flight import FlightRecorder
+from repro.serving.obs.pareto import ParetoTracker
+from repro.serving.obs.regret import RegretMeter, regret_events
 from repro.serving.obs.registry import MetricsRegistry
 from repro.serving.obs.trace import SpanTracer, decision_attribution
 
@@ -44,21 +51,25 @@ __all__ = [
     "InvariantLedger",
     "MetricsRegistry",
     "Observability",
+    "ParetoTracker",
+    "RegretMeter",
     "SpanTracer",
     "audit_events",
     "decision_attribution",
+    "regret_events",
 ]
 
 
 @dataclass
 class Observability:
     """What a `Server` threads through a serve: a tracer (always, when
-    observability is on), an optional flight recorder and invariant
-    ledger riding the same event stream, and an optional
-    ``jax.profiler`` logdir for kernel-level capture around token
-    steps."""
+    observability is on), an optional flight recorder, invariant
+    ledger and regret meter riding the same event stream, and an
+    optional ``jax.profiler`` logdir for kernel-level capture around
+    token steps."""
 
     tracer: SpanTracer = field(default_factory=SpanTracer)
     flight: FlightRecorder | None = None
     ledger: InvariantLedger | None = None
+    regret: RegretMeter | None = None
     profile_dir: str | None = None

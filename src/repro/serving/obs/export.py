@@ -124,13 +124,22 @@ def to_perfetto(events: Iterable[Event], *,
 
 
 def write_trace(tracer, path: str, *, title: str = "t-tamer serve",
-                faults=None) -> dict[str, Any]:
+                faults=None, regret=None) -> dict[str, Any]:
     doc = to_perfetto(tracer.events, title=title)
     doc["otherData"]["events_dropped"] = tracer.dropped
     doc["otherData"]["span_digest"] = tracer.span_digest()
     doc["otherData"]["decision_digest"] = tracer.decision_digest()
     if faults is not None:
         doc["otherData"]["faults"] = faults.as_doc()
+    if regret is not None:
+        # the regret meter is a listener, not a producer — its counter
+        # track is synthesized here at export time (pid 2, one sample
+        # per finished request) so the span stream itself stays
+        # bit-identical with the meter on or off
+        doc["traceEvents"].extend(
+            {"ph": "C", "name": "regret", "pid": 2, "tid": 0,
+             "ts": _us(t), "args": {"value": r}}
+            for t, r in regret.counter_points())
     with open(path, "w") as f:
         json.dump(doc, f, default=float)
     return doc

@@ -23,6 +23,12 @@ Triggers (all thresholds constructor-tunable):
   * ``gear_thrash``   — ``thrash_count`` gear switches inside
     ``thrash_window`` serve-seconds.  Hysteresis should make switches
     rare; thrash means the controller is chasing noise.
+  * ``regret_burst``  — windowed p99 per-request regret above
+    ``regret_threshold`` (fed by the `RegretMeter` via `note_regret`,
+    not by a span kind).  A calibrated recall serve sits at ~zero
+    regret; a sustained burst means the tables have drifted from the
+    traffic or a no-recall gear is paying the impossibility tax.  The
+    bundle pins the window's worst offender's full span history.
 
 Each trigger kind fires at most ``max_bundles_per_kind`` times per
 serve (anomalies tend to repeat every step once entered — one bundle
@@ -52,7 +58,9 @@ class FlightRecorder:
                  stuck_after: float = 30.0, thrash_count: int = 6,
                  thrash_window: float = 60.0, out_dir: str | None = None,
                  max_bundles_per_kind: int = 1,
-                 rearm_interval: float | None = None):
+                 rearm_interval: float | None = None,
+                 regret_window: int = 64,
+                 regret_threshold: float | None = None):
         self.window = int(window)
         self.slo = slo
         self.slo_burst = int(slo_burst)
@@ -64,6 +72,9 @@ class FlightRecorder:
         self.max_bundles_per_kind = int(max_bundles_per_kind)
         self.rearm_interval = (float(rearm_interval)
                                if rearm_interval else None)
+        self.regret_window = int(regret_window)
+        self.regret_threshold = (float(regret_threshold)
+                                 if regret_threshold is not None else None)
 
         self.bundles: list[dict[str, Any]] = []
         self.dump_paths: list[str] = []
@@ -77,6 +88,9 @@ class FlightRecorder:
         self._page_streak = 0
         self._waiters: dict[tuple[int, int], float] = {}   # (rid, model) -> t
         self._switch_ts: collections.deque[float] = collections.deque()
+        # (t, rid, regret) of the last `regret_window` finished requests
+        self._regret_recent: collections.deque = collections.deque(
+            maxlen=self.regret_window)
 
     # ---------------------------------------------------------- wiring
     def bind(self, tracer: SpanTracer,
@@ -97,6 +111,7 @@ class FlightRecorder:
         self._page_streak = 0
         self._waiters.clear()
         self._switch_ts.clear()
+        self._regret_recent.clear()
         self._rearms += 1
 
     # ---------------------------------------------------------- stream
@@ -156,6 +171,32 @@ class FlightRecorder:
                 self._waiters.pop((rid, model), None)
                 self.trigger("stuck_waiter", ev.t, rid=rid,
                              detail={"model": model, "waited_s": ev.t - t0})
+
+    def note_regret(self, t: float, rid: int, regret: float) -> None:
+        """Fold one finished request's regret in (called by the
+        `RegretMeter`, which rides the span stream — regret is not a
+        span kind, so this is its own entry point).  Same rearm-window
+        semantics as `observe`."""
+        if self.regret_threshold is None:
+            return
+        if self.rearm_interval is not None:
+            if self._window_end is None:
+                self._window_end = t + self.rearm_interval
+            elif t >= self._window_end:
+                self.reset()
+                self._window_end = t + self.rearm_interval
+        self._regret_recent.append((t, int(rid), float(regret)))
+        if len(self._regret_recent) < 4:
+            return          # too few points for a percentile to mean much
+        vals = sorted(r for _, _, r in self._regret_recent)
+        p99 = vals[min(len(vals) - 1, int(0.99 * len(vals)))]
+        if p99 > self.regret_threshold:
+            worst = max(self._regret_recent, key=lambda x: x[2])
+            self.trigger("regret_burst", t, rid=worst[1],
+                         detail={"p99": p99,
+                                 "threshold": self.regret_threshold,
+                                 "worst_regret": worst[2],
+                                 "window": len(self._regret_recent)})
 
     # ---------------------------------------------------------- dump
     def trigger(self, kind: str, t: float, *, rid: int | None = None,

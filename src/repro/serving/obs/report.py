@@ -120,6 +120,23 @@ class ServeReport:
             if k not in ("schema", "stalls_s")})
         self._sections.append("lossmap")
 
+    def add_regret(self, doc: Mapping[str, Any]) -> None:
+        """Decision-quality regret (regret.py's ``obs_regret/v1``)."""
+        self._regret = dict(doc)
+        self.registry.absorb("regret", {
+            k: v for k, v in doc.items()
+            if k in ("requests", "tokens", "regret_mean", "regret_p99",
+                     "regret_max", "regret_total") and v is not None})
+        self._sections.append("regret")
+
+    def add_pareto(self, doc: Mapping[str, Any]) -> None:
+        """Streaming frontier (pareto.py's ``obs_pareto/v1``)."""
+        self._pareto = dict(doc)
+        self.registry.absorb("pareto", {
+            "points": doc.get("points", 0),
+            "frontier_size": doc.get("frontier_size", 0)})
+        self._sections.append("pareto")
+
     # -------------------------------------------------------- renderers
     def _v(self, name: str, default=None, **labels):
         return self.registry.value(name, default, **labels)
@@ -264,9 +281,39 @@ class ServeReport:
             head += ": " + ", ".join(parts)
         return [head]
 
+    def _regret_lines(self) -> list[str]:
+        rep = getattr(self, "_regret", {})
+        verdict = rep.get("verdict", "exact")
+        if verdict == "unverifiable":
+            return [(f"regret: UNVERIFIABLE over "
+                     f"{rep.get('requests', 0)} requests "
+                     f"(ring dropped events; numbers demoted)")]
+        mean = rep.get("regret_mean") or 0.0
+        p99 = rep.get("regret_p99") or 0.0
+        head = (f"regret: mean {mean:.4f} p99 {p99:.4f} over "
+                f"{rep.get('requests', 0)} requests ({verdict})")
+        parts = [f"{c} {v:.4f}" for c, v in sorted(
+            rep.get("causes", {}).items(), key=lambda kv: -kv[1])
+            if v > 0]
+        if parts:
+            head += ": " + ", ".join(parts)
+        return [head]
+
+    def _pareto_lines(self) -> list[str]:
+        rep = getattr(self, "_pareto", {})
+        head = (f"pareto: {rep.get('frontier_size', 0)} frontier points "
+                f"/ {rep.get('points', 0)} served")
+        parts = [f"{g} {s['frontier']}/{s['points']}"
+                 for g, s in sorted(rep.get("by_gear", {}).items())
+                 if s.get("frontier")]
+        if parts:
+            head += " (" + ", ".join(parts) + ")"
+        return [head]
+
     def lines(self) -> list[str]:
         order = ("runtime", "adaptive", "segments", "cascade", "pool",
-                 "chunk", "trace", "ledger", "lossmap")
+                 "chunk", "trace", "ledger", "lossmap", "regret",
+                 "pareto")
         render = {"runtime": self._runtime_lines,
                   "adaptive": self._adaptive_lines,
                   "segments": self._segments_lines,
@@ -275,7 +322,9 @@ class ServeReport:
                   "chunk": self._chunk_lines,
                   "trace": self._trace_lines,
                   "ledger": self._ledger_lines,
-                  "lossmap": self._lossmap_lines}
+                  "lossmap": self._lossmap_lines,
+                  "regret": self._regret_lines,
+                  "pareto": self._pareto_lines}
         out: list[str] = []
         for section in order:
             if section in self._sections:

@@ -119,6 +119,7 @@ class SimStepper:
     # `is not None`, so an untraced serve pays nothing
     tracer = None
     last_loss = None       # per-lane served-node loss of the last step
+    last_deepest = None    # per-lane deepest PROBED node (-1 = silent)
     # fault plane (DESIGN.md §14): the server stamps its clock here
     # each iteration when a FaultPlan is attached
     fault_now = 0.0
@@ -183,13 +184,29 @@ class SimStepper:
             active = occupied
             depth = jnp.zeros((), jnp.int32)
             policy = jnp.zeros((), jnp.int32)
+            # per-lane deepest PROBED node — folded from the per-node
+            # n_probed deltas, so it costs no extra strategy calls; the
+            # regret meter's recall-forgone attribution reads it off
+            # each token event
+            deepest = jnp.full((b,), -1, jnp.int32)
+            np_prev = jnp.zeros((b,), jnp.int32)
+
+            def probed_of(states):
+                out = states[0].n_probed
+                for k in range(1, len(live)):
+                    out = jnp.where(sid == k, states[k].n_probed, out)
+                return out
+
             for node in range(self.n_nodes):
                 depth = depth + active.any().astype(jnp.int32)
                 policy = policy + active.sum(dtype=jnp.int32)
                 states, active = bank_observe(
                     live, states, node, losses[:, node], None,
                     active, sid)
-            return bank_serve(live, states, sid), depth, policy
+                np_now = probed_of(states)
+                deepest = jnp.where(np_now > np_prev, node, deepest)
+                np_prev = np_now
+            return bank_serve(live, states, sid), depth, policy, deepest
 
         self._decide = jax.jit(decide)
         self.alloc()
@@ -287,6 +304,7 @@ class SimStepper:
             self._note_stall(0)
             if self.tracer is not None:
                 self.last_loss = np.full(self.n_lanes, np.nan)
+                self.last_deepest = np.full(self.n_lanes, -1)
             served = np.zeros(self.n_lanes, np.int64)
             return (served, served, 0, 0, self.overhead,
                     np.zeros(self.n_lanes, bool))
@@ -321,7 +339,7 @@ class SimStepper:
             losses[lane] = self._row(self.lane_req[lane],
                                      int(self.lane_tidx[lane]))
             self.lane_tidx[lane] += 1
-        served, depth, policy = jax.device_get(self._decide(
+        served, depth, policy, deepest = jax.device_get(self._decide(
             self.bank_arrays(), jnp.asarray(losses),
             jnp.asarray(emit, bool), jnp.asarray(sid, jnp.int32)))
         for lane in np.flatnonzero(emit):
@@ -335,6 +353,7 @@ class SimStepper:
                 emit, losses[np.arange(self.n_lanes),
                              np.clip(served_np, 0, self.n_nodes - 1)],
                 np.nan)
+            self.last_deepest = np.where(emit, np.asarray(deepest), -1)
         if self.row_tap is not None and emit.any():
             idx = np.flatnonzero(emit)
             self.row_tap(losses[idx], np.asarray(served)[idx])
@@ -494,6 +513,13 @@ class Server:
             ledger = getattr(self.obs, "ledger", None)
             if ledger is not None:
                 ledger.bind(tracer, pool=getattr(stepper, "pool", None))
+            regret = getattr(self.obs, "regret", None)
+            if regret is not None:
+                # pure listener, same discipline as the ledger: the
+                # meter pulls the stepper's trace bank for its exact
+                # oracle but never emits or syncs anything itself
+                regret.bind(tracer, stepper=stepper, flight=flight,
+                            controller=self.controller)
         deadline_of = None
         if self.order == "edf" and self.slo is not None:
             deadline_of = lambda r: r.arrival + self.slo  # noqa: E731
@@ -621,6 +647,9 @@ class Server:
                     le = getattr(stepper, "last_escalated", None)
                     if le is not None and le[lane]:
                         extra["esc"] = True
+                    ld = getattr(stepper, "last_deepest", None)
+                    if ld is not None and ld[lane] >= 0:
+                        extra["deepest"] = int(ld[lane])
                     if getattr(stepper, "emits_tokens", True):
                         extra["tok"] = int(emitted[lane])
                     tracer.emit("token", rid=req.rid, lane=int(lane),
@@ -651,7 +680,9 @@ class Server:
                 self.controller.on_step_end(self._now(), len(queue))
 
         metrics.t_end = self._now()
-        if self.obs is not None and getattr(self.obs, "ledger", None) \
-                is not None:
-            self.obs.ledger.finalize(self._now())
+        if self.obs is not None:
+            if getattr(self.obs, "ledger", None) is not None:
+                self.obs.ledger.finalize(self._now())
+            if getattr(self.obs, "regret", None) is not None:
+                self.obs.regret.finalize(self._now())
         return metrics

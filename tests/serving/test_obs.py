@@ -36,10 +36,10 @@ N_NODES = 5
 # idiom as the strategy goldens: any change to event schema, ordering,
 # timestamps, or decisions shows up here first and must be intentional
 # (recompute with `_traced_serve(...)[1].tracer.span_digest()`).
-# Last recompute: queued events grew the replay payload (prompt bytes,
-# plen/ntok/strategy/lam) so traces are self-contained repros (§13).
+# Last recompute: token events grew the ``deepest`` probed-node tag
+# (the regret meter's recall-forgone attribution input, §15).
 GOLDEN_SPAN_DIGEST = \
-    "47f5f68846e77d0b2e9413ee211eaa7ddfacb0ec3a301e8ca8ce0667f4adf773"
+    "0359a77e7d911ca1da679fef18393ddf3d14a950eb0ed60c4cb2a542f47650aa"
 
 
 @pytest.fixture(scope="module")

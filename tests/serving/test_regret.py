@@ -1,0 +1,299 @@
+"""Decision-quality plane tests (DESIGN.md §15):
+
+  * the `RegretMeter` is a pure OBSERVER: the same seeded sim serve
+    emits a bit-identical span stream with the meter armed and
+    without,
+  * the separation theorem as telemetry: a ``skip_recall`` serve over
+    its own calibration is regret-FREE (exactly zero, pinned by a
+    GOLDEN regret digest), while a no-recall serve pays positive
+    regret,
+  * the oracle is internally consistent (serves the min over probed
+    nodes, memoized per lambda),
+  * the cause buckets EXACTLY partition each request's regret (the
+    lossmap-partition idiom on the decision axis),
+  * ring-overflow honesty: `regret_events` over a truncated ring
+    demotes to ``unverifiable`` and moves numbers into ``suspect``,
+  * the flight recorder's ``regret_burst`` trigger (windowed p99 with
+    rearm-window budgets),
+  * `ParetoTracker` dominance/tie/per-gear semantics and the Perfetto
+    regret counter track, both validated by the CI checker.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import strategy
+from repro.core import traces
+from repro.serving import runtime as rt
+from repro.serving.obs import (FlightRecorder, Observability,
+                               ParetoTracker, RegretMeter, SpanTracer,
+                               regret_events)
+from repro.serving.obs.export import write_trace
+from repro.serving.obs.regret import REGRET_CAUSES
+from repro.serving.obs.report import ServeReport
+from repro.serving.runtime.workload import WorkloadSpec, make_workload
+
+N_NODES = 5
+
+# Golden per-request regret digest of the seeded skip_recall serve
+# below — all-zero regret, but the digest still pins the request set
+# and cause splits (recompute with
+# `_serve(...)[1].regret.regret_digest()`).
+GOLDEN_REGRET_DIGEST = \
+    "c7d84c6624bc519d8efcf9dd0a1a266d3510f7c14abe224fffae9dbe68c78e32"
+
+
+@pytest.fixture(scope="module")
+def sim_cascade():
+    rng = np.random.default_rng(0)
+    losses, _, flops = traces.ee_like_traces(rng, 3_000, N_NODES)
+    casc = strategy.Cascade.from_traces(losses[:1_500], 0.4 * flops,
+                                        k=12, lam=0.6)
+    return casc, losses[1_500:]
+
+
+def _workload():
+    spec = WorkloadSpec(rate=4.0, duration=10.0, prompt_len=4,
+                        max_tokens=(2, 9), seed=11)
+    return make_workload("poisson", spec)
+
+
+def _serve(casc, bank, requests, *, policy="skip_recall", regret=True,
+           lanes=3):
+    """A traced sim serve with the meter armed (or not) — the regret
+    mirror of test_obs's `_traced_serve`."""
+    if policy == "norecall_threshold":
+        def mk(name, lam):
+            return strategy.make("norecall_threshold", casc,
+                                 threshold=0.45, lam=1.0)
+    else:
+        mk = rt.cascade_factory(casc)
+    strategies, sid_of = rt.build_bank(requests, mk, (policy, None))
+    stepper = rt.SimStepper(strategies, bank, n_lanes=lanes,
+                            seg_time=0.05, overhead=0.01)
+    obs = Observability(regret=RegretMeter(casc) if regret else None)
+    server = rt.Server(stepper, rt.LaneScheduler(lanes), sid_of,
+                       slo=5.0, obs=obs)
+    return server.serve(requests), obs
+
+
+# --------------------------------------------------------------------------
+# the meter is a pure observer; recall is regret-free, no-recall pays
+# --------------------------------------------------------------------------
+
+def test_meter_is_pure_listener(sim_cascade):
+    casc, bank = sim_cascade
+    requests = _workload()
+    _, obs_off = _serve(casc, bank, requests, regret=False)
+    _, obs_on = _serve(casc, bank, requests, regret=True)
+    assert obs_on.tracer.span_digest() == obs_off.tracer.span_digest()
+    assert obs_on.regret.records    # ...while actually measuring
+
+
+def test_recall_serve_is_regret_free_golden(sim_cascade):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload())
+    meter = obs.regret
+    assert meter.finalized
+    assert meter.mode == "exact"    # bind() pulled the stepper's bank
+    assert meter.records
+    # the separation theorem, measured: serving the oracle policy over
+    # its own calibration meets the offline-optimal walk exactly
+    assert all(rec["regret"] == 0.0 for rec in meter.records.values())
+    rep = meter.report()
+    assert rep["verdict"] == "exact"
+    assert rep["regret_mean"] == 0.0 and rep["regret_total"] == 0.0
+    # digest is reproducible run-to-run and pinned commit-to-commit
+    _, obs2 = _serve(casc, bank, _workload())
+    assert meter.regret_digest() == obs2.regret.regret_digest()
+    assert meter.regret_digest() == GOLDEN_REGRET_DIGEST
+
+
+def test_norecall_serve_pays_regret(sim_cascade):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload(), policy="norecall_threshold")
+    rep = obs.regret.report()
+    assert rep["regret_mean"] > 0.0
+    assert sum(rep["causes"].values()) > 0.0
+
+
+def test_oracle_serves_min_over_probed_and_memoizes(sim_cascade):
+    casc, bank = sim_cascade
+    meter = RegretMeter(casc, traces=bank)
+    oracle_loss, oracle_node = meter._oracle(casc.lam)
+    scaled = np.asarray(round(float(casc.lam), 9) * bank, np.float32)
+    rows = np.arange(len(bank))
+    # the oracle's served loss IS its serve node's lam-scaled loss,
+    # and no walk can beat the row's best node
+    assert np.allclose(oracle_loss, scaled[rows, oracle_node], atol=1e-6)
+    assert np.all(oracle_loss >= scaled.min(axis=1) - 1e-6)
+    assert (meter._oracle(casc.lam)[0] is oracle_loss)  # memo hit
+
+
+# --------------------------------------------------------------------------
+# the cause buckets exactly partition regret
+# --------------------------------------------------------------------------
+
+def test_cause_partition_is_exact(sim_cascade):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload(), policy="norecall_threshold")
+    meter = obs.regret
+    positive = [r for r in meter.records.values() if r["regret"] > 0]
+    assert positive, "no-recall serve produced no positive regret"
+    for rec in meter.records.values():
+        assert set(rec["causes"]) == set(REGRET_CAUSES)
+        assert sum(rec["causes"].values()) == \
+            pytest.approx(rec["regret"], rel=1e-9, abs=1e-12)
+    rep = meter.report()
+    assert sum(rep["causes"].values()) == \
+        pytest.approx(rep["regret_total"], rel=1e-9, abs=1e-9)
+
+
+# --------------------------------------------------------------------------
+# offline mirror + ring-overflow honesty
+# --------------------------------------------------------------------------
+
+def test_regret_events_mirrors_live_meter(sim_cascade):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload(), policy="norecall_threshold")
+    live = obs.regret.report()
+    offline = regret_events(list(obs.tracer.events), casc=casc,
+                            traces=bank)
+    assert offline["verdict"] == "exact"
+    assert offline["digest"] == live["digest"]
+    assert offline["regret_mean"] == pytest.approx(live["regret_mean"])
+    assert offline["events_dropped"] == 0
+
+
+def test_ring_overflow_demotes_verdict(sim_cascade):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload(), policy="norecall_threshold")
+    events = list(obs.tracer.events)
+    clean = regret_events(events, casc=casc, traces=bank)
+    suspect = regret_events(events, dropped=3, casc=casc, traces=bank)
+    assert suspect["verdict"] == "unverifiable"
+    for key in ("regret_mean", "regret_p99", "regret_max",
+                "regret_total"):
+        assert suspect[key] is None
+    assert suspect["causes"] == {} and suspect["worst"] == []
+    assert suspect["suspect"]["regret_mean"] == \
+        pytest.approx(clean["regret_mean"])
+    assert suspect["events_dropped"] == 3
+    from benchmarks.check_trace import validate_regret
+    assert validate_regret(clean) == []
+    assert validate_regret(suspect) == []
+
+
+# --------------------------------------------------------------------------
+# flight recorder: regret_burst trigger with rearm windows
+# --------------------------------------------------------------------------
+
+def test_flight_regret_burst_trigger_and_rearm(tmp_path):
+    tracer = SpanTracer()
+    flight = FlightRecorder(out_dir=str(tmp_path), regret_threshold=0.5,
+                            rearm_interval=10.0)
+    flight.bind(tracer)
+    # the worst offender's span history is what the bundle pins
+    tracer.emit("queued", t=0.8, rid=100)
+    tracer.emit("token", t=0.9, rid=100, node=1, loss=0.4)
+    tracer.emit("finish", t=1.0, rid=100)
+    # below threshold: never fires no matter how many points
+    for i in range(8):
+        flight.note_regret(0.05 * i, i, 0.1)
+    assert flight.bundles == []
+    # high-regret finishes inside one window: fires once, capped
+    for i in range(8):
+        flight.note_regret(1.0 + 0.05 * i, 100 + i, 2.0)
+    assert [b["trigger"] for b in flight.bundles] == ["regret_burst"]
+    assert flight.bundles[0]["detail"]["threshold"] == 0.5
+    assert flight.bundles[0]["detail"]["worst_regret"] == 2.0
+    assert flight.bundles[0]["rid"] == 100
+    assert [e["kind"] for e in flight.bundles[0]["request_span"]] == \
+        ["queued", "token", "finish"]
+    # a later rearm window gets a fresh budget
+    for i in range(4):
+        flight.note_regret(25.0 + 0.05 * i, 200 + i, 2.0)
+    assert len(flight.bundles) == 2
+    from benchmarks.check_trace import validate_bundle
+    with open(flight.dump_paths[0]) as f:
+        assert validate_bundle(json.load(f)) == []
+
+
+def test_flight_regret_disabled_by_default():
+    flight = FlightRecorder()
+    for i in range(16):
+        flight.note_regret(0.1 * i, i, 100.0)
+    assert flight.bundles == []
+
+
+# --------------------------------------------------------------------------
+# the streaming Pareto frontier
+# --------------------------------------------------------------------------
+
+def test_pareto_tracker_dominance_ties_and_gears():
+    pt = ParetoTracker()
+    assert pt.add(0, 1.0, 1.0, gear="quality")
+    assert pt.add(1, 0.5, 2.0, gear="turbo")    # faster, worse loss
+    assert pt.add(2, 2.0, 0.5, gear="quality")  # slower, better loss
+    assert not pt.add(3, 1.0, 1.0, gear="turbo")   # exact tie loses
+    assert not pt.add(4, 1.5, 1.5, gear="turbo")   # dominated
+    assert [q["rid"] for q in pt.frontier] == [1, 0, 2]
+    # a strictly better point sweeps the dominated prefix
+    assert pt.add(5, 0.4, 0.9, gear="turbo")
+    assert [q["rid"] for q in pt.frontier] == [5, 2]
+    doc = pt.as_doc()
+    assert doc["points"] == 6 and doc["frontier_size"] == 2
+    assert doc["by_gear"]["turbo"] == {"points": 4, "frontier": 1}
+    assert doc["by_gear"]["quality"] == {"points": 2, "frontier": 1}
+    from benchmarks.check_trace import validate_pareto
+    assert validate_pareto(doc) == []
+
+
+def test_serve_pareto_doc_validates(sim_cascade):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload())
+    doc = obs.regret.pareto.as_doc()
+    assert doc["points"] == len(obs.regret.records)
+    assert 1 <= doc["frontier_size"] <= doc["points"]
+    from benchmarks.check_trace import validate_pareto
+    assert validate_pareto(doc) == []
+
+
+# --------------------------------------------------------------------------
+# report + Perfetto surfaces
+# --------------------------------------------------------------------------
+
+def test_report_renders_regret_and_pareto_sections(sim_cascade, capsys):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload(), policy="norecall_threshold")
+    report = ServeReport()
+    report.add_regret(obs.regret.report())
+    report.add_pareto(obs.regret.pareto.as_doc())
+    report.print()
+    out = capsys.readouterr().out
+    assert "regret: mean" in out and "(exact)" in out
+    assert "exited_too_early" in out
+    assert "pareto:" in out and "frontier points" in out
+    # a demoted report renders as UNVERIFIABLE, not as zeros
+    report2 = ServeReport()
+    report2.add_regret(regret_events(list(obs.tracer.events), dropped=1,
+                                     casc=casc, traces=bank))
+    report2.print()
+    assert "UNVERIFIABLE" in capsys.readouterr().out
+
+
+def test_perfetto_regret_counter_track(sim_cascade, tmp_path):
+    casc, bank = sim_cascade
+    _, obs = _serve(casc, bank, _workload(), policy="norecall_threshold")
+    path = tmp_path / "trace.json"
+    write_trace(obs.tracer, str(path), regret=obs.regret)
+    with open(path) as f:
+        doc = json.load(f)
+    counters = [e for e in doc["traceEvents"]
+                if e.get("ph") == "C" and e.get("name") == "regret"]
+    assert len(counters) == len(obs.regret.records)
+    assert all(e["pid"] == 2 for e in counters)  # the control track
+    from benchmarks.check_trace import validate_trace
+    assert validate_trace(doc) == []
